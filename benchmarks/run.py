@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. us_per_call is the per-round (or
+per-item) wall time of the measured computation on this host; derived
+carries the paper-claim metrics (accuracy / ARI / cluster count / term
+separations) EXPERIMENTS.md references.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table1     # one suite
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fig2_similarity, fig3_clustering, fig8_tau, kernels_bench,
+                        table1_rotated, table2_shifted, table3_lambda,
+                        table3b_lambda_transfer, table4_generalization,
+                        table_femnist)
+from benchmarks.common import emit
+
+SUITES = {
+    "fig2": fig2_similarity.run,
+    "fig3": fig3_clustering.run,
+    "fig8": fig8_tau.run,
+    "table1": table1_rotated.run,
+    "table2": table2_shifted.run,
+    "table3": table3_lambda.run,
+    "table3b": table3b_lambda_transfer.run,
+    "femnist": table_femnist.run,
+    "table4": table4_generalization.run,
+    "kernels": kernels_bench.run,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in wanted:
+        try:
+            emit(SUITES[name]())
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+            print(f"{name},-1,ERROR={e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark suites failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

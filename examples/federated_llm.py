@@ -1,0 +1,20 @@
+"""Federated LLM pretraining with StoCFL (the substrate path).
+
+Clients hold token streams from two latent domains (distinct Markov
+processes); StoCFL clusters them from anchor-gradient representations
+(with JL projection, since Ψ is model-sized) and trains per-domain
+cluster models with the bi-level objective — the exact program the
+multi-pod dry-run lowers at production scale.
+
+  PYTHONPATH=src python examples/federated_llm.py [--arch qwen2-1.5b]
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    arch = sys.argv[sys.argv.index("--arch") + 1] if "--arch" in sys.argv else "qwen2-1.5b"
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.train", "--arch", arch, "--smoke",
+         "--rounds", "8", "--clients", "8", "--domains", "2",
+         "--sample-rate", "0.5", "--tau", "0.12", "--lr", "0.05"],
+        env={**__import__("os").environ, "PYTHONPATH": "src"}))

@@ -1,0 +1,46 @@
+"""Quickstart: StoCFL in ~40 lines.
+
+Builds a 4-cluster rotated Non-IID federation, runs stochastic clustered
+federated learning with 20% participation, and shows that (a) the latent
+clusters are discovered without knowing K, and (b) cluster models beat a
+single global model.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import StoCFL, StoCFLConfig, adjusted_rand_index
+from repro.data import rotated
+from repro.models import simple
+
+# 1. A federation: 80 clients drawn from 4 latent data distributions.
+clients, true_cluster, test_sets = rotated(n_clusters=4, n_clients=80, seed=0)
+clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+test_sets = {k: jax.tree.map(jnp.asarray, v) for k, v in test_sets.items()}
+
+# 2. The task model (the paper's MLP classifier) + its loss.
+task = simple.SYNTH_MLP
+params = simple.init(jax.random.PRNGKey(0), task)
+loss_fn = lambda p, b: simple.loss_fn(p, b, task)
+acc_fn = jax.jit(lambda p, b: simple.accuracy(p, b, task))
+
+# 3. StoCFL: τ controls cluster granularity, λ the global-knowledge pull.
+trainer = StoCFL(
+    loss_fn, params, clients,
+    StoCFLConfig(tau=0.5, lam=0.05, lr=0.1, local_steps=5, sample_rate=0.2),
+    eval_fn=acc_fn,
+)
+trainer.fit(rounds=30, log_every=5)
+
+# 4. Results.
+assign = trainer.state.assignment()
+ids = sorted(assign)
+ari = adjusted_rand_index([assign[i] for i in ids], [true_cluster[i] for i in ids])
+res = trainer.evaluate(test_sets, true_cluster)
+print(f"\ndiscovered clusters : {trainer.state.n_clusters()} (true: 4, K was never given)")
+print(f"cluster recovery ARI: {ari:.3f}")
+print(f"cluster-model acc   : {res['cluster_avg']:.4f}")
+print(f"global-model acc    : {res['global_avg']:.4f}")
+assert ari > 0.9 and res["cluster_avg"] > res["global_avg"]
+print("OK")

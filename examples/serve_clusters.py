@@ -1,0 +1,17 @@
+"""Serving example: cluster-routed LLM inference (§4.4 as a service).
+
+Spins up a reduced qwen2-family model with two cluster-personalized
+parameter sets, routes incoming requests to clusters via Ψ cosine
+similarity, and serves batched prefill + greedy decode.
+
+  PYTHONPATH=src python examples/serve_clusters.py
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--arch", "qwen2-1.5b", "--requests", "6", "--prompt-len", "24",
+         "--gen", "8"],
+        env={**__import__("os").environ, "PYTHONPATH": "src"}))

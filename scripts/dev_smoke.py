@@ -1,0 +1,36 @@
+"""Dev loop: run every smoke arch through loss/prefill/decode on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build
+from repro.models.registry import decode_specs
+from repro.models.config import InputShape
+
+key = jax.random.PRNGKey(0)
+S, B = 64, 2
+
+for arch in (sys.argv[1:] or ARCH_IDS):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(key)
+    shape = InputShape("dev", S, B, "train")
+    specs = model.input_specs(shape)
+    batch = {
+        k: (jax.random.randint(key, v.shape, 0, cfg.vocab_size, v.dtype)
+            if v.dtype == jnp.int32 else jax.random.normal(key, v.shape, v.dtype))
+        for k, v in specs.items()
+    }
+    loss = jax.jit(model.loss_fn)(params, batch)
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    # decode one token against a fresh cache of length S
+    cache2 = model.make_cache(B, S)
+    tok = jnp.zeros((B,), jnp.int32)
+    dlogits, _ = jax.jit(model.decode)(params, tok, cache2, jnp.int32(3))
+    ok = bool(jnp.isfinite(loss)) and bool(jnp.all(jnp.isfinite(dlogits)))
+    print(f"{arch:22s} loss={float(loss):8.4f} prefill_logits={logits.shape} "
+          f"decode_logits={dlogits.shape} finite={ok}")
+    assert ok, arch
+print("ALL OK")

@@ -1,0 +1,61 @@
+"""§Perf hillclimbing driver.
+
+Re-lowers the three selected (arch × shape) pairs with candidate changes
+and records before/after roofline terms. Run AFTER the baseline sweep:
+
+  PYTHONPATH=src python scripts/hillclimb.py [pair ...]
+
+Pairs:
+  moe    — phi3.5-moe train_4k   (worst useful-flops ratio: dispatch-bound)
+  serve  — llama3-8b decode_32k  (most collective-bound: fsdp regather)
+  mesh   — qwen2-1.5b train_4k   (paper-representative StoCFL round:
+                                  Megatron-TP term vs mesh aspect)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import run_one  # noqa: E402
+
+OUT = "results/perf"
+
+
+def moe():
+    # baseline re-record under expert-parallel sharding (rule-order fix)
+    run_one("phi35_moe_42b", "train_4k", False, OUT, tag_suffix="+base")
+    for g in (1024, 512):
+        run_one("phi35_moe_42b", "train_4k", False, OUT,
+                overrides={"moe_group_size": g}, tag_suffix=f"+g{g}")
+    # capacity factor 1.0 (tighter buffers)
+    run_one("phi35_moe_42b", "train_4k", False, OUT,
+            overrides={"moe_group_size": 512, "capacity_factor": 1.0},
+            tag_suffix="+g512cf1")
+
+
+def serve():
+    run_one("llama3_8b", "decode_32k", False, OUT, tag_suffix="+base")
+    run_one("llama3_8b", "decode_32k", False, OUT, serve_tp_only=True,
+            tag_suffix="+tponly")
+    # combine with bf16 params for serving (halves resident weight bytes)
+    run_one("llama3_8b", "decode_32k", False, OUT, serve_tp_only=True,
+            overrides={"param_dtype": "bfloat16"}, tag_suffix="+tponly_bf16")
+
+
+def mesh():
+    run_one("qwen2_1_5b", "train_4k", False, OUT, tag_suffix="+base")
+    run_one("qwen2_1_5b", "train_4k", False, OUT, mesh_shape=(64, 4),
+            tag_suffix="+mesh64x4")
+    run_one("qwen2_1_5b", "train_4k", False, OUT, mesh_shape=(128, 2),
+            tag_suffix="+mesh128x2")
+    run_one("qwen2_1_5b", "train_4k", False, OUT, mesh_shape=(256, 1),
+            tag_suffix="+mesh256x1")
+
+
+if __name__ == "__main__":
+    wanted = sys.argv[1:] or ["moe", "serve", "mesh"]
+    for name in wanted:
+        {"moe": moe, "serve": serve, "mesh": mesh}[name]()
+    print("hillclimb done; JSONs in", OUT)

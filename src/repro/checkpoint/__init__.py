@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import load_pytree, save_pytree, save_stocfl, load_stocfl  # noqa: F401

@@ -1,0 +1,88 @@
+"""Dependency-free pytree checkpointing (npz + json manifest).
+
+Path-flattened keys ("layers/attn/wq") so checkpoints are stable across
+dict-ordering and easy to inspect with np.load. Shard-aware: arrays are
+pulled to host with jax.device_get (works for sharded global arrays on a
+real mesh — each process writes its addressable shards; single-process
+here, so full arrays).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    np.savez(path, **flat)
+
+
+def load_pytree(path: str, template=None):
+    """Without a template, returns the flat {path: array} dict; with one,
+    reassembles arrays into the template's structure."""
+    data = dict(np.load(path if path.endswith(".npz") else path + ".npz"))
+    if template is None:
+        return data
+
+    def rebuild(tmpl, prefix=""):
+        if isinstance(tmpl, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tmpl.items()}
+        if isinstance(tmpl, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tmpl)]
+            return type(tmpl)(vals)
+        return data[prefix[:-1]]
+
+    return rebuild(template)
+
+
+def save_stocfl(dirpath: str, trainer) -> None:
+    """Full StoCFL server state: ω, cluster models, partition, reps."""
+    os.makedirs(dirpath, exist_ok=True)
+    save_pytree(os.path.join(dirpath, "omega.npz"), trainer.omega)
+    for root, model in trainer.models.items():
+        save_pytree(os.path.join(dirpath, f"cluster_{root}.npz"), model)
+    state = {
+        "tau": trainer.state.tau,
+        "parent": {str(k): v for k, v in trainer.state.uf.parent.items()},
+        "seen": sorted(trainer.state.seen),
+        "history": trainer.history,
+    }
+    with open(os.path.join(dirpath, "state.json"), "w") as f:
+        json.dump(state, f)
+    np.savez(os.path.join(dirpath, "reps.npz"),
+             **{str(k): v for k, v in trainer.state.reps.items()})
+
+
+def load_stocfl(dirpath: str, trainer) -> None:
+    """Restore server state in place (clients/loss_fn stay caller-provided)."""
+    trainer.omega = load_pytree(os.path.join(dirpath, "omega.npz"), trainer.init_params)
+    with open(os.path.join(dirpath, "state.json")) as f:
+        state = json.load(f)
+    trainer.state.tau = state["tau"]
+    trainer.state.uf.parent = {int(k): int(v) for k, v in state["parent"].items()}
+    trainer.state.seen = set(state["seen"])
+    trainer.history = state["history"]
+    reps = np.load(os.path.join(dirpath, "reps.npz"))
+    trainer.state.reps = {int(k): reps[k] for k in reps.files}
+    for fn in os.listdir(dirpath):
+        if fn.startswith("cluster_") and fn.endswith(".npz"):
+            root = int(fn[len("cluster_"):-len(".npz")])
+            trainer.models[root] = load_pytree(os.path.join(dirpath, fn), trainer.init_params)

@@ -1,0 +1,5 @@
+"""StoCFL — the paper's primary contribution as a composable JAX module."""
+from repro.core.clustering import ClusterState, adjusted_rand_index  # noqa: F401
+from repro.core.extractor import make_extractor, representation  # noqa: F401
+from repro.core.stocfl import StoCFL, StoCFLConfig  # noqa: F401
+from repro.core.baselines import CFLSattler, Ditto, FLConfig, FedAvg, FedProx, IFCA  # noqa: F401

@@ -1,0 +1,79 @@
+"""Pluggable global-objective aggregators for ω (paper §3.4: "StoCFL is
+free to select the global objective G(·) … the cluster model could inherit
+the convergence benefit (e.g., robustness or fairness)"), plus the §5
+future-work Byzantine screen.
+
+All operate on a stacked client-update pytree (leading client axis) and a
+weight vector; all are jit-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import trees
+
+
+def mean_aggregate(stacked, weights):
+    """FedAvg: sample-size-weighted mean (the paper's default G)."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+
+    def leaf(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.sum(x * wb, axis=0).astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked)
+
+
+def median_aggregate(stacked, weights=None):
+    """Coordinate-wise median — robust to < 50% arbitrary clients."""
+    return jax.tree.map(lambda x: jnp.median(x, axis=0).astype(x.dtype), stacked)
+
+
+def trimmed_mean_aggregate(stacked, weights=None, trim_frac: float = 0.2):
+    """Coordinate-wise α-trimmed mean."""
+    def leaf(x):
+        n = x.shape[0]
+        k = min(int(n * trim_frac), (n - 1) // 2)
+        xs = jnp.sort(x, axis=0)
+        sel = xs[k : n - k] if n - 2 * k > 0 else xs
+        return jnp.mean(sel, axis=0).astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked)
+
+
+def krum_select(stacked, weights=None, f: int = 1):
+    """Krum: return the single client update closest to its n−f−2 nearest
+    neighbours (Blanchard et al.) — Byzantine-tolerant selection."""
+    flats = jax.vmap(trees.tree_flatten_vector)(stacked)      # (n, d)
+    n = flats.shape[0]
+    d2 = jnp.sum((flats[:, None, :] - flats[None, :, :]) ** 2, axis=-1)
+    d2 = d2 + jnp.eye(n) * 1e30
+    m = max(n - f - 2, 1)
+    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :m], axis=1)
+    best = jnp.argmin(scores)
+    return jax.tree.map(lambda x: x[best], stacked)
+
+
+AGGREGATORS = {
+    "mean": mean_aggregate,
+    "median": median_aggregate,
+    "trimmed_mean": trimmed_mean_aggregate,
+    "krum": krum_select,
+}
+
+
+def byzantine_distance_screen(reps: np.ndarray, tau_screen: float = 0.0):
+    """§5 future-work sketch: flag clients whose Ψ is anomalously far from
+    EVERY cluster mean (cosine below tau_screen to all clusters) — those
+    join no benign cluster and can be quarantined. Returns a boolean keep
+    mask over rows of `reps` given cluster `means`."""
+    def screen(means: np.ndarray):
+        rn = reps / (np.linalg.norm(reps, axis=1, keepdims=True) + 1e-12)
+        mn = means / (np.linalg.norm(means, axis=1, keepdims=True) + 1e-12)
+        sims = rn @ mn.T                                  # (n, K)
+        return sims.max(axis=1) >= tau_screen
+
+    return screen

@@ -1,0 +1,161 @@
+"""Stochastic federated client clustering (paper §3.2, Algorithm 1 l.4-13).
+
+Server-side state over client distribution representations Ψ(D_i):
+  - partition C (union-find over client ids), initially singletons;
+  - per round: observe Ψ of newly-participating clients, recompute cluster
+    mean representations, build the pairwise cosine matrix M (Pallas
+    ``cosine_sim`` kernel on TPU), greedily merge every pair with
+    M_ij ≥ τ (transitively, via union-find);
+  - objective (Eq. 2): Σ_{i<j} cos(Ψ̃_i, Ψ̃_j) — decreases as merging
+    removes similar pairs;
+  - new-client inference (§4.4): nearest cluster if best cosine ≥ τ, else
+    a fresh cluster seeded from the nearest cluster's model.
+
+This is plain host-side logic (numpy); only the similarity matrix is a
+device computation.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels import ops
+
+
+class UnionFind:
+    def __init__(self):
+        self.parent: Dict[int, int] = {}
+
+    def add(self, i: int):
+        self.parent.setdefault(i, i)
+
+    def find(self, i: int) -> int:
+        p = self.parent
+        while p[i] != i:
+            p[i] = p[p[i]]
+            i = p[i]
+        return i
+
+    def union(self, a: int, b: int) -> bool:
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return False
+        if rb < ra:
+            ra, rb = rb, ra
+        self.parent[rb] = ra          # deterministic: smaller id wins
+        return True
+
+
+class ClusterState:
+    """The StoCFL server's clustering bookkeeping."""
+
+    def __init__(self, tau: float):
+        self.tau = float(tau)
+        self.uf = UnionFind()
+        self.reps: Dict[int, np.ndarray] = {}       # client id -> Ψ(D_i)
+        self.seen: set = set()                      # P in Algorithm 1
+
+    # ------------------------------------------------------------- observe
+    def observe(self, client_ids: Sequence[int], reps) -> List[int]:
+        """Record Ψ for newly-seen clients. Returns the new ids."""
+        new = []
+        for cid, rep in zip(client_ids, reps):
+            self.uf.add(int(cid))
+            if cid not in self.seen:
+                self.reps[int(cid)] = np.asarray(rep, dtype=np.float32)
+                self.seen.add(int(cid))
+                new.append(int(cid))
+        return new
+
+    # ------------------------------------------------------------- views
+    def clusters(self) -> Dict[int, List[int]]:
+        """root -> sorted member client ids (only observed clients)."""
+        out: Dict[int, List[int]] = {}
+        for cid in sorted(self.reps):
+            out.setdefault(self.uf.find(cid), []).append(cid)
+        return out
+
+    def cluster_means(self) -> Tuple[List[int], np.ndarray]:
+        """Ψ̃ per cluster: (roots, (K̃, D) matrix of member means)."""
+        cl = self.clusters()
+        roots = sorted(cl)
+        mat = np.stack([np.mean([self.reps[i] for i in cl[r]], axis=0) for r in roots])
+        return roots, mat
+
+    def assignment(self) -> Dict[int, int]:
+        return {cid: self.uf.find(cid) for cid in self.reps}
+
+    def n_clusters(self) -> int:
+        return len(self.clusters())
+
+    # ------------------------------------------------------------- merging
+    def similarity_matrix(self) -> Tuple[List[int], np.ndarray]:
+        roots, means = self.cluster_means()
+        M = np.asarray(ops.pairwise_cosine(means))
+        return roots, M
+
+    def merge_round(self) -> List[Tuple[int, int]]:
+        """One greedy merge pass (Algorithm 1, lines 10-13).
+
+        Returns the list of (root_kept, root_absorbed) merges actually
+        performed — the trainer uses it to merge cluster models."""
+        if len(self.reps) < 2:
+            return []
+        roots, M = self.similarity_matrix()
+        merges = []
+        for i in range(len(roots)):
+            for j in range(i + 1, len(roots)):
+                if M[i, j] >= self.tau:
+                    ra, rb = self.uf.find(roots[i]), self.uf.find(roots[j])
+                    if ra != rb:
+                        keep, absorb = min(ra, rb), max(ra, rb)
+                        self.uf.union(keep, absorb)
+                        merges.append((keep, absorb))
+        return merges
+
+    # ------------------------------------------------------------- metrics
+    def objective(self) -> float:
+        """Eq. 2: Σ_{i<j} cos(Ψ̃^{(i)}, Ψ̃^{(j)}) over current clusters."""
+        if self.n_clusters() < 2:
+            return 0.0
+        _, M = self.similarity_matrix()
+        iu = np.triu_indices(M.shape[0], k=1)
+        return float(np.sum(M[iu]))
+
+    # ------------------------------------------------------------- inference
+    def infer(self, rep) -> Tuple[Optional[int], float]:
+        """§4.4: nearest cluster for a new client's Ψ.
+
+        Returns (root or None, best cosine). None ⇒ caller should open a
+        new cluster (seeding its model from the nearest cluster)."""
+        roots, means = self.cluster_means()
+        rep = np.asarray(rep, np.float32)
+        rn = rep / (np.linalg.norm(rep) + 1e-12)
+        mn = means / (np.linalg.norm(means, axis=1, keepdims=True) + 1e-12)
+        sims = mn @ rn
+        best = int(np.argmax(sims))
+        if sims[best] >= self.tau:
+            return roots[best], float(sims[best])
+        return None, float(sims[best])
+
+
+def adjusted_rand_index(labels_a: Sequence[int], labels_b: Sequence[int]) -> float:
+    """ARI between two clusterings (for validating cluster recovery)."""
+    a = np.asarray(labels_a)
+    b = np.asarray(labels_b)
+    n = len(a)
+    ua, ia = np.unique(a, return_inverse=True)
+    ub, ib = np.unique(b, return_inverse=True)
+    cont = np.zeros((len(ua), len(ub)), dtype=np.int64)
+    np.add.at(cont, (ia, ib), 1)
+    comb = lambda x: x * (x - 1) // 2
+    sum_ij = comb(cont).sum()
+    sum_a = comb(cont.sum(axis=1)).sum()
+    sum_b = comb(cont.sum(axis=0)).sum()
+    total = comb(n)
+    expected = sum_a * sum_b / total if total else 0.0
+    max_idx = (sum_a + sum_b) / 2
+    if max_idx == expected:
+        return 1.0
+    return float((sum_ij - expected) / (max_idx - expected))

@@ -1,0 +1,12 @@
+from repro.data.synthetic import (  # noqa: F401
+    SETTINGS,
+    femnist_like,
+    hybrid,
+    make_federation,
+    pathological,
+    rotated,
+    rotated_pathological,
+    shifted,
+)
+from repro.data.tokens import synthetic_lm_batch, token_stream  # noqa: F401
+from repro.data.dirichlet import dirichlet_label_skew, quantity_skew  # noqa: F401

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: pairwise cosine-similarity matrix.
+
+StoCFL's clustering hot-spot: the server recomputes the K̃×K̃ (up to N×N,
+N=4800 cross-device) cosine matrix over distribution representations every
+round (Algorithm 1, line 10). That is an X·Xᵀ on the MXU with fused
+per-row inverse-norm scaling.
+
+Tiling: grid (N/bn, N/bn, D/bk); operand tiles (bn, bk) live in VMEM, fp32
+accumulation in the output tile across the contraction grid axis (TPU grid
+iterates the trailing axis innermost, so out_ref accumulates correctly).
+MXU-aligned defaults bn=128, bk=512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cosine_kernel(x_ref, y_ref, inv_i_ref, inv_j_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32).T,
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += acc
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _scale():
+        out_ref[...] *= inv_i_ref[...][:, None] * inv_j_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def cosine_sim(x, *, bn: int = 128, bk: int = 512, interpret: bool = False):
+    """x: (N, D) -> (N, N) cosine similarity, fp32.
+
+    N is padded to bn and D to bk internally; zero rows get norm eps so
+    padded entries are 0 and harmless.
+    """
+    n, d = x.shape
+    n_pad = -(-n // bn) * bn
+    d_pad = -(-d // bk) * bk
+    xp = jnp.zeros((n_pad, d_pad), x.dtype).at[:n, :d].set(x)
+    norms = jnp.sqrt(jnp.sum(xp.astype(jnp.float32) ** 2, axis=1))
+    inv = jnp.where(norms > 0, 1.0 / norms, 0.0)
+
+    out = pl.pallas_call(
+        _cosine_kernel,
+        grid=(n_pad // bn, n_pad // bn, d_pad // bk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(xp, xp, inv, inv)
+    return out[:n, :n]

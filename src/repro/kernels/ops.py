@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels, with backend selection.
+
+On this container (CPU) the Pallas TPU kernels execute in interpret mode;
+on a real TPU the same call sites compile to Mosaic. ``backend="jnp"``
+routes to the pure-jnp oracle — the default inside big jitted graphs where
+interpret-mode would be slow.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cosine_sim import cosine_sim as _cosine_pallas
+from repro.kernels.prox_update import prox_update_flat as _prox_pallas
+from repro.kernels.ssm_scan import ssm_scan as _ssm_pallas
+from repro.utils import trees
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pairwise_cosine(x, backend: str = "auto"):
+    """(N, D) representation matrix -> (N, N) cosine similarity."""
+    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+        return ref.cosine_sim_ref(x)
+    return _cosine_pallas(x, interpret=not _on_tpu())
+
+
+def prox_update_tree(theta, omega, g_theta, g_omega, eta, lam, backend: str = "auto"):
+    """Fused bi-level update applied leaf-wise over parameter pytrees."""
+    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+        th = jax.tree.map(
+            lambda t, o, g: (t.astype(jnp.float32)
+                             - eta * (g.astype(jnp.float32) + lam * (t.astype(jnp.float32) - o.astype(jnp.float32)))
+                             ).astype(t.dtype),
+            theta, omega, g_theta)
+        om = jax.tree.map(
+            lambda o, g: (o.astype(jnp.float32) - eta * g.astype(jnp.float32)).astype(o.dtype),
+            omega, g_omega)
+        return th, om
+
+    interp = not _on_tpu()
+    th_leaves, treedef = jax.tree.flatten(theta)
+    om_leaves = treedef.flatten_up_to(omega)
+    gt_leaves = treedef.flatten_up_to(g_theta)
+    go_leaves = treedef.flatten_up_to(g_omega)
+    new_th, new_om = [], []
+    for t, o, gt, go in zip(th_leaves, om_leaves, gt_leaves, go_leaves):
+        tn, on = _prox_pallas(t.ravel(), o.ravel(), gt.ravel(), go.ravel(),
+                              eta, lam, interpret=interp)
+        new_th.append(tn.reshape(t.shape).astype(t.dtype))
+        new_om.append(on.reshape(o.shape).astype(o.dtype))
+    return jax.tree.unflatten(treedef, new_th), jax.tree.unflatten(treedef, new_om)
+
+
+def ssm_scan(dA, dBx, C, backend: str = "auto", **kw):
+    """Fused selective scan. See kernels/ssm_scan.py."""
+    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+        return ref.ssm_scan_ref(dA, dBx, C)
+    return _ssm_pallas(dA, dBx, C, interpret=not _on_tpu(), **kw)

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused bi-level StoCFL client update.
+
+Algorithm 1 lines 21-22, fused into one HBM pass:
+    θ' = θ − η (g_θ + λ (θ − ω))
+    ω' = ω − η g_ω
+Unfused this reads/writes 4+2 arrays in ~7 passes; fused it streams each
+operand exactly once (memory-bound, VPU elementwise). 1-D tiling over the
+flattened parameter vector; block 64k floats (256 KiB fp32) per operand
+keeps the 6-operand working set ≈1.5 MiB — comfortably inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _prox_kernel(theta_ref, omega_ref, gt_ref, go_ref, eta_ref, lam_ref,
+                 theta_out_ref, omega_out_ref):
+    eta = eta_ref[0]
+    lam = lam_ref[0]
+    th = theta_ref[...].astype(jnp.float32)
+    om = omega_ref[...].astype(jnp.float32)
+    theta_out_ref[...] = (th - eta * (gt_ref[...].astype(jnp.float32) + lam * (th - om))
+                          ).astype(theta_out_ref.dtype)
+    omega_out_ref[...] = (om - eta * go_ref[...].astype(jnp.float32)).astype(omega_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def prox_update_flat(theta, omega, g_theta, g_omega, eta, lam, *,
+                     block: int = 65536, interpret: bool = False):
+    """All four arrays 1-D of equal length; returns (theta', omega')."""
+    n = theta.shape[0]
+    n_pad = -(-n // block) * block
+    pad = lambda a: jnp.zeros((n_pad,), a.dtype).at[:n].set(a)
+    eta_v = jnp.full((1,), eta, jnp.float32)
+    lam_v = jnp.full((1,), lam, jnp.float32)
+
+    outs = pl.pallas_call(
+        _prox_kernel,
+        grid=(n_pad // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), theta.dtype),
+            jax.ShapeDtypeStruct((n_pad,), omega.dtype),
+        ],
+        interpret=interpret,
+    )(pad(theta), pad(omega), pad(g_theta), pad(g_omega), eta_v, lam_v)
+    return outs[0][:n], outs[1][:n]

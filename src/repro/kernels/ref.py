@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_sim_ref(x):
+    """x: (N, D) -> (N, N) fp32 cosine similarity."""
+    x32 = x.astype(jnp.float32)
+    norms = jnp.linalg.norm(x32, axis=1, keepdims=True)
+    xn = jnp.where(norms > 0, x32 / norms, 0.0)
+    return xn @ xn.T
+
+
+def prox_update_ref(theta, omega, g_theta, g_omega, eta, lam):
+    th = theta.astype(jnp.float32)
+    om = omega.astype(jnp.float32)
+    theta_new = th - eta * (g_theta.astype(jnp.float32) + lam * (th - om))
+    omega_new = om - eta * g_omega.astype(jnp.float32)
+    return theta_new.astype(theta.dtype), omega_new.astype(omega.dtype)
+
+
+def ssm_scan_ref(dA, dBx, C):
+    """Sequential-scan oracle. dA,dBx: (B,S,D,N); C: (B,S,N) -> (B,S,D)."""
+    B, S, D, N = dA.shape
+
+    def step(h, inp):
+        a, b, c = inp
+        h = a * h + b
+        return h, jnp.einsum("bdn,bn->bd", h, c)
+
+    h0 = jnp.zeros((B, D, N), jnp.float32)
+    xs = (
+        dA.astype(jnp.float32).transpose(1, 0, 2, 3),
+        dBx.astype(jnp.float32).transpose(1, 0, 2, 3),
+        C.astype(jnp.float32).transpose(1, 0, 2),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2)

@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against the production mesh, prove the sharding config is
+coherent, and extract the roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Results: one JSON per run under results/dryrun/.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import INPUT_SHAPES, build
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_step
+from repro.utils import trees as tree_utils
+
+# ----------------------------------------------------------- HW constants
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+# whisper-medium × long_500k lowers fine as a pure stress shape (524k
+# decoder self-cache), but is model-meaningless (448-token real context) —
+# kept in the table with that caveat (DESIGN.md §4). No hard skips.
+SKIPS = {}
+
+_COLL_RE = re.compile(
+    r"(\w[\w\.\-]*)\s*=\s*[^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64|c64)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "c64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by every collective op in the post-SPMD HLO.
+
+    Compiled HLO operands are untyped (%names), so we size each op by its
+    RESULT type (the region between '=' and the op mnemonic) — i.e. bytes
+    received per device. '-start' async ops carry an (operand, result)
+    tuple; we halve those. Ring all-reduce moves ~2× its result — we record
+    the result convention uniformly and note it in EXPERIMENTS.md."""
+    out = {k: 0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    line_re = re.compile(
+        r"=\s*(.*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(-start|-done)?\(")
+    for line in hlo_text.splitlines():
+        m = line_re.search(line)
+        if not m:
+            continue
+        kind, variant = m.group(2), m.group(3)
+        if variant == "-done":
+            continue                      # counted at -start
+        result_region = m.group(1)
+        nbytes = 0
+        for tm in _SHAPE_RE.finditer(result_region):
+            dt, dims = tm.group(1), tm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        if variant == "-start":
+            nbytes //= 2                  # tuple carries operand + result
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["counts"] = counts
+    out["total"] = sum(v for k, v in out.items() if isinstance(v, int))
+    return out
+
+
+def model_flops(cfg, model, shape, kind: str) -> float:
+    """6·N_active·tokens (train; ×2 for the bi-level pair) or 2·N_active·tokens."""
+    pspecs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = tree_utils.tree_size(pspecs)
+    expert = sum(
+        int(__import__("numpy").prod(l.shape))
+        for p, l in jax.tree_util.tree_flatten_with_path(pspecs)[0]
+        if "experts" in "/".join(str(getattr(k, "key", k)) for k in p)
+    )
+    active = total - expert + (expert * cfg.moe_top_k // max(cfg.n_experts, 1) if cfg.n_experts else 0)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * 6.0 * active * tokens          # bi-level: θ and ω both trained
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    tokens = shape.global_batch                   # decode: one token per sequence
+    return 2.0 * active * tokens
+
+
+def pick_kind(shape) -> str:
+    return {"train": "train", "prefill": "prefill", "decode": "decode"}[shape.kind]
+
+
+# ----------------------------------------------------------- cost probes
+# XLA's cost_analysis counts while-loop bodies ONCE (trip count ignored),
+# so the full-depth scan lowering under-reports flops/bytes/collectives.
+# We therefore lower small-depth FULLY-UNROLLED probes at identical widths/
+# shapes/sharding and extrapolate exactly (costs are affine in depth).
+
+def _measure(cfg, shape, mesh, kind, lr, lam, serve_tp_only=False) -> dict:
+    model = build(cfg)
+    lowered, _ = lower_step(model, shape, mesh, kind, lr=lr, lam=lam,
+                            serve_params_tp_only=serve_tp_only)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0)),
+           "coll_total": float(coll["total"])}
+    for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute"):
+        out[f"coll_{k}"] = float(coll[k])
+    return out
+
+
+def _lin(a: dict, b: dict, sa: float, sb: float) -> dict:
+    return {k: sa * a[k] + sb * b[k] for k in a}
+
+
+def probe_metrics(cfg0, shape, mesh, kind, lr, lam, serve_tp_only=False) -> dict:
+    """Extrapolated per-device cost metrics at full depth."""
+    base = dict(scan_unroll=True)
+    at = cfg0.arch_type
+    L = cfg0.n_layers
+    if at in ("ssm", "hybrid") and shape.seq_len > 512:
+        # cap unrolled seq-scan chunks at 4: the selective-scan recurrence is
+        # <2% of mamba flops (projections dominate), so chunk-size distortion
+        # is negligible while keeping the probe HLO compilable.
+        base["ssm_chunk"] = max(shape.seq_len // 4, 128)
+    if at == "audio":
+        f22 = _measure(cfg0.with_(n_layers=2, n_enc_layers=2, **base), shape, mesh, kind, lr, lam, serve_tp_only)
+        f42 = _measure(cfg0.with_(n_layers=2, n_enc_layers=4, **base), shape, mesh, kind, lr, lam, serve_tp_only)
+        f24 = _measure(cfg0.with_(n_layers=4, n_enc_layers=2, **base), shape, mesh, kind, lr, lam, serve_tp_only)
+        enc = _lin(f42, f22, 0.5, -0.5)
+        dec = _lin(f24, f22, 0.5, -0.5)
+        out = _lin(f22, enc, 1.0, cfg0.n_enc_layers - 2)
+        return _lin(out, dec, 1.0, L - 2)
+    if at == "hybrid":
+        # exact 3-probe plan, all shallow: m from an attn-free pair
+        # (attn_every > L disables the shared block), s from one 2-layer
+        # group. full(L, every=g) = o + L·m + (L//g)·s.
+        fA = _measure(cfg0.with_(n_layers=2, attn_every=64, **base), shape, mesh, kind, lr, lam, serve_tp_only)
+        fB = _measure(cfg0.with_(n_layers=4, attn_every=64, **base), shape, mesh, kind, lr, lam, serve_tp_only)
+        fC = _measure(cfg0.with_(n_layers=2, attn_every=2, **base), shape, mesh, kind, lr, lam, serve_tp_only)
+        m = _lin(fB, fA, 0.5, -0.5)
+        s_blk = _lin(fC, fA, 1.0, -1.0)
+        n_groups = L // cfg0.attn_every
+        out = _lin(fA, m, 1.0, L - 2)
+        return _lin(out, s_blk, 1.0, n_groups)
+    if at == "moe" and cfg0.moe_layer_start > 0:
+        s0 = cfg0.moe_layer_start
+        f2 = _measure(cfg0.with_(n_layers=s0 + 1, **base), shape, mesh, kind, lr, lam, serve_tp_only)
+        f3 = _measure(cfg0.with_(n_layers=s0 + 2, **base), shape, mesh, kind, lr, lam, serve_tp_only)
+        body = _lin(f3, f2, 1.0, -1.0)
+        return _lin(f2, body, 1.0, (L - s0) - 1)
+    # linear families: dense, moe(start=0), ssm, vlm
+    f2 = _measure(cfg0.with_(n_layers=2, **base), shape, mesh, kind, lr, lam, serve_tp_only)
+    f4 = _measure(cfg0.with_(n_layers=4, **base), shape, mesh, kind, lr, lam, serve_tp_only)
+    body = _lin(f4, f2, 0.5, -0.5)
+    return _lin(f2, body, 1.0, L - 2)
+
+
+def variant_config(arch: str, shape_name: str, smoke=False):
+    """Apply the long_500k sub-quadratic variant for attention archs."""
+    cfg = get_config(arch, smoke=smoke)
+    variant = "baseline"
+    if shape_name == "long_500k" and cfg.arch_type in ("dense", "moe", "vlm"):
+        cfg = cfg.with_(sliding_window=8192)
+        variant = "sliding8k"
+    return cfg, variant
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            lr=0.1, lam=0.05, probe: bool = True, mesh_shape=None,
+            overrides=None, serve_tp_only: bool = False, tag_suffix: str = "") -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch}_{shape_name}_{mesh_name}{tag_suffix}"
+    if (arch, shape_name) in SKIPS:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
+        _write(out_dir, tag, rec)
+        print(f"[dryrun] SKIP {tag}: {rec['reason']}")
+        return rec
+
+    cfg, variant = variant_config(arch, shape_name)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+        variant += "+" + ",".join(f"{k}={v}" for k, v in overrides.items())
+    model = build(cfg)
+    if mesh_shape:
+        import numpy as _np
+        n = 1
+        for d in mesh_shape:
+            n *= d
+        mesh = jax.sharding.Mesh(
+            _np.array(jax.devices()[:n]).reshape(mesh_shape), ("data", "model"))
+        variant += f"+mesh{'x'.join(map(str, mesh_shape))}"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    kind = pick_kind(shape)
+
+    t0 = time.time()
+    lowered, _ = lower_step(model, shape, mesh, kind, lr=lr, lam=lam,
+                            serve_params_tp_only=serve_tp_only)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    # Cost metrics: probe-extrapolated (exact in depth) when enabled,
+    # else raw loop-counted-once values (marked accordingly).
+    t0 = time.time()
+    if probe:
+        met = probe_metrics(cfg, shape, mesh, kind, lr, lam,
+                            serve_tp_only=serve_tp_only)
+        cost_src = "probe_extrapolated"
+    else:
+        met = {"flops": flops, "bytes": bytes_acc, "coll_total": float(coll["total"])}
+        for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute"):
+            met[f"coll_{k}"] = float(coll[k])
+        cost_src = "loop_counted_once"
+    t_probe = time.time() - t0
+
+    compute_s = met["flops"] / PEAK_FLOPS
+    memory_s = met["bytes"] / HBM_BW
+    collective_s = met["coll_total"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, model, shape, kind)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "variant": variant,
+        "kind": kind, "status": "ok", "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "probe_s": round(t_probe, 2), "cost_source": cost_src,
+        "flops_per_device": met["flops"], "bytes_per_device": met["bytes"],
+        "collective_bytes_per_device": {k[5:]: v for k, v in met.items() if k.startswith("coll_")},
+        "raw_loop_once": {"flops": flops, "bytes": bytes_acc, "coll": coll},
+        "memory": mem_d,
+        "terms": terms, "dominant": dominant,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / met["flops"] if met["flops"] else None,
+        "hlo_bytes": len(hlo),
+    }
+    _write(out_dir, tag, rec)
+    print(f"[dryrun] OK {tag}: dominant={dominant} "
+          f"compute={compute_s*1e3:.2f}ms memory={memory_s*1e3:.2f}ms "
+          f"collective={collective_s*1e3:.2f}ms "
+          f"(lower {t_lower:.1f}s compile {t_compile:.1f}s probe {t_probe:.1f}s)")
+    return rec
+
+
+def _write(out_dir, tag, rec):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip unrolled cost probes (compile-proof only)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip (arch, shape, mesh) combos with existing JSON")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "multi"]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}.json"
+                if args.resume and os.path.exists(os.path.join(args.out, tag)):
+                    continue
+                try:
+                    run_one(arch, shape, mp, args.out, probe=not args.no_probe)
+                except Exception as e:
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch} {shape} multi={mp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

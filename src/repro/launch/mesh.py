@@ -1,0 +1,36 @@
+"""Production mesh construction (TPU v5e target).
+
+Function, not module-level constant — importing this module never touches
+jax device state. Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model); the pod axis
+carries cross-pod data parallelism (DCN-grade collectives in production).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py does this)")
+    import numpy as np
+    dev_array = np.array(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Tiny mesh over the real local devices (CPU smoke / examples)."""
+    import numpy as np
+    devices = jax.devices()
+    mp = min(model_parallel, len(devices))
+    dp = len(devices) // mp
+    dev_array = np.array(devices[: dp * mp]).reshape(dp, mp)
+    return jax.sharding.Mesh(dev_array, ("data", "model"))

@@ -1,0 +1,94 @@
+"""Cluster-model serving driver.
+
+StoCFL serving = route each request to its cluster's personalized model
+(§4.4 inference: nearest cluster mean by Ψ cosine), then batched
+prefill + greedy decode with the per-arch KV cache / SSM state.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \\
+      --requests 8 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.clustering import ClusterState
+from repro.core.extractor import llm_leaf_filter, make_extractor
+from repro.data import synthetic_lm_batch
+from repro.models import build
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--clusters", type=int, default=2)
+    ap.add_argument("--tau", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build(cfg)
+    key = jax.random.PRNGKey(args.seed)
+
+    # --- K cluster models (stand-ins for a trained StoCFL server state)
+    models = {k: model.init(jax.random.fold_in(key, k)) for k in range(args.clusters)}
+    state = ClusterState(args.tau)
+    ext = make_extractor(model.loss_fn, models[0], project_dim=8192,
+                         leaf_filter=llm_leaf_filter)
+    for k in range(args.clusters):
+        # cluster reference Ψ from a healthy token sample of the domain
+        rep = ext(jax.tree.map(jnp.asarray,
+                               synthetic_lm_batch(cfg, 256, 8, seed=100 + k, domain=k)))
+        state.observe([k], [np.asarray(rep)])
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode)
+
+    # --- requests: route by Ψ similarity, then batched prefill+decode
+    t0 = time.time()
+    n_tokens = 0
+    for r in range(args.requests):
+        dom = r % args.clusters
+        batch = jax.tree.map(jnp.asarray,
+                             synthetic_lm_batch(cfg, args.prompt_len, 1, seed=r, domain=dom))
+        # route on a domain-sized history sample (a real system would keep a
+        # running Ψ per client); the prompt alone is too thin at 24 tokens
+        hist = jax.tree.map(jnp.asarray,
+                            synthetic_lm_batch(cfg, 256, 8, seed=1000 + r, domain=dom))
+        rep = np.asarray(ext(hist))
+        root, sim = state.infer(rep)
+        root = root if root is not None else 0
+        params = models[root]
+
+        logits, cache = prefill(params, batch)
+        # right-size the cache for generation
+        full_cache = model.make_cache(1, args.prompt_len + args.gen)
+        full_cache = jax.tree.map(
+            lambda full, got: full.at[tuple(slice(0, s) for s in got.shape)].set(got)
+            if full.shape != got.shape else got, full_cache, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks = [int(tok[0])]
+        for i in range(args.gen - 1):
+            logits, full_cache = decode(params, tok, full_cache, jnp.int32(args.prompt_len + i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            toks.append(int(tok[0]))
+        n_tokens += len(toks)
+        print(f"req {r}: domain={dom} -> cluster={root} (cos={sim:.3f}) tokens={toks[:8]}...")
+    dt = time.time() - t0
+    print(json.dumps({"requests": args.requests, "tokens": n_tokens,
+                      "wall_s": round(dt, 2), "tok_per_s": round(n_tokens / dt, 2)}))
+
+
+if __name__ == "__main__":
+    main()

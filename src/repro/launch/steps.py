@@ -1,0 +1,198 @@
+"""Mesh-aware step builders: the jit-able programs the launcher, the
+serving path and the multi-pod dry-run lower.
+
+train_4k lowers the PAPER-FAITHFUL StoCFL round step: clients ride the
+(pod, data) axes, both bi-level gradients are taken, the fused prox update
+applies, and the data-parallel gradient mean IS the server Aggregate
+(FedAvg ≡ all-reduce over the client axis).
+
+prefill/decode lower cluster-model serving.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.kernels import ops
+from repro.models.registry import Model, decode_specs
+from repro.sharding import ShardCtx, param_shardings
+
+
+# ---------------------------------------------------------------- helpers
+def batch_shardings(specs: dict, mesh, ctx: ShardCtx):
+    """Shard every batch leaf's leading (batch) dim over the client axes."""
+    def one(x):
+        nd = len(x.shape)
+        spec = ctx.resolve(["batch"] + [None] * (nd - 1))
+        axes = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+        n = 1
+        for a in axes:
+            if a:
+                n *= mesh.shape[a]
+        if x.shape[0] % n != 0:
+            spec = P(*([None] * nd))
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, specs)
+
+
+_CACHE_RULES_HINT = """Cache sharding: leading layer axis replicated, batch
+dim over client axes, the *sequence* dim of attention caches over the model
+axis (flash-decode layout: each model shard owns a contiguous KV slab; XLA
+partitions the attention einsums and inserts the softmax collectives)."""
+
+
+def cache_shardings(cache_specs, mesh, ctx: ShardCtx):
+    def one(kp, x):
+        nd = len(x.shape)
+        name = str(kp[-1].key) if hasattr(kp[-1], "key") else str(kp[-1])
+        # layout per leaf kind: (L, B, S, ...) attention caches; (L, B, ...) ssm
+        if name in ("k", "v", "c_kv", "k_rope"):
+            logical = [None, "batch", "tp"] + [None] * (nd - 3)
+        elif name == "h":
+            logical = [None, "batch", "tp"] + [None] * (nd - 3)
+        elif name == "conv":
+            logical = [None, "batch", None, "tp"][:nd]
+        else:
+            logical = [None, "batch"] + [None] * (nd - 2)
+        spec = ctx.resolve(logical)
+        fixed = []
+        for dim, ax in zip(x.shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            fixed.append(ax if dim % n == 0 else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)
+
+
+# ---------------------------------------------------------------- steps
+def stocfl_train_step(model: Model, lr: float = 0.1, lam: float = 0.05):
+    """One bi-level StoCFL round over the sharded client cohort."""
+
+    def step(theta, omega, batch):
+        loss_t, g_t = jax.value_and_grad(model.loss_fn)(theta, batch)
+        loss_o, g_o = jax.value_and_grad(model.loss_fn)(omega, batch)
+        theta2, omega2 = ops.prox_update_tree(theta, omega, g_t, g_o, lr, lam, backend="jnp")
+        return theta2, omega2, {"loss_theta": loss_t, "loss_omega": loss_o}
+
+    return step
+
+
+def lm_train_step(model: Model, lr: float = 1e-3):
+    """Plain data-parallel LM step (baseline / non-FL substrate path)."""
+
+    def step(params, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        params = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype), params, grads)
+        return params, {"loss": loss}
+
+    return step
+
+
+def prefill_step(model: Model):
+    def step(params, batch):
+        return model.prefill(params, batch)
+
+    return step
+
+
+def decode_step(model: Model):
+    def step(params, token, cache, pos):
+        return model.decode(params, token, cache, pos)
+
+    return step
+
+
+def repr_step(model: Model):
+    """Ψ extraction as an SPMD program: anchor gradient, L2-normalized
+    leaf-wise (global norm), returned as a parameter-shaped pytree."""
+
+    def step(anchor, batch):
+        g = jax.grad(model.loss_fn)(anchor, batch)
+        sq = jax.tree.reduce(
+            lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))), g, jnp.float32(0.0))
+        inv = jax.lax.rsqrt(sq + 1e-24)
+        return jax.tree.map(lambda x: (x.astype(jnp.float32) * inv), g)
+
+    return step
+
+
+# ---------------------------------------------------------------- lowering
+def lower_step(model: Model, shape, mesh, kind: str, lr=0.1, lam=0.05,
+               donate: bool = True, serve_params_tp_only: bool = False):
+    """Build shardings and lower the right step for (model, shape, mesh).
+
+    serve_params_tp_only: serving layout — params sharded on the model axis
+    only (weights stay resident; no per-step fsdp regather). §Perf #2.
+
+    Returns (lowered, arg_specs) — call .compile() on the result."""
+    ctx = ShardCtx(mesh)
+    pspecs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if serve_params_tp_only:
+        pctx = ShardCtx(mesh, {**ctx.logical_map, "fsdp": None})
+        pshard = param_shardings(pspecs, mesh, pctx)
+    else:
+        pshard = param_shardings(pspecs, mesh, ctx)
+
+    if kind == "train":
+        specs = model.input_specs(shape)
+        bshard = batch_shardings(specs, mesh, ctx)
+        fn = stocfl_train_step(model, lr, lam)
+        with ctx:
+            lowered = jax.jit(
+                fn,
+                in_shardings=(pshard, pshard, bshard),
+                out_shardings=(pshard, pshard, NamedSharding(mesh, P())),
+                donate_argnums=(0, 1) if donate else (),
+            ).lower(pspecs, pspecs, specs)
+        return lowered, (pspecs, pspecs, specs)
+
+    if kind == "prefill":
+        specs = model.input_specs(shape)
+        bshard = batch_shardings(specs, mesh, ctx)
+        cache_spec = jax.eval_shape(lambda: model.make_cache(shape.global_batch, shape.seq_len))
+        cshard = cache_shardings(cache_spec, mesh, ctx)
+        fn = prefill_step(model)
+        with ctx:
+            lowered = jax.jit(
+                fn,
+                in_shardings=(pshard, bshard),
+                out_shardings=(NamedSharding(mesh, P()), cshard),
+            ).lower(pspecs, specs)
+        return lowered, (pspecs, specs)
+
+    if kind == "decode":
+        dspecs = decode_specs(model, shape)
+        cshard = cache_shardings(dspecs["cache"], mesh, ctx)
+        tshard = batch_shardings({"token": dspecs["token"]}, mesh, ctx)["token"]
+        fn = decode_step(model)
+        with ctx:
+            lowered = jax.jit(
+                fn,
+                in_shardings=(pshard, tshard, cshard, NamedSharding(mesh, P())),
+                out_shardings=(NamedSharding(mesh, P()), cshard),
+                donate_argnums=(2,) if donate else (),
+            ).lower(pspecs, dspecs["token"], dspecs["cache"], dspecs["pos"])
+        return lowered, (pspecs, dspecs)
+
+    if kind == "repr":
+        specs = model.input_specs(shape)
+        bshard = batch_shardings(specs, mesh, ctx)
+        fn = repr_step(model)
+        with ctx:
+            lowered = jax.jit(
+                fn, in_shardings=(pshard, bshard),
+            ).lower(pspecs, specs)
+        return lowered, (pspecs, specs)
+
+    raise ValueError(f"unknown step kind {kind}")

@@ -1,0 +1,2 @@
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig  # noqa: F401
+from repro.models.registry import Model, build, decode_specs  # noqa: F401

@@ -1,0 +1,184 @@
+"""Zamba2-style hybrid: Mamba2 core stack + one *shared* attention block.
+
+The shared block (single parameter set, applied every ``cfg.attn_every``
+core layers — Zamba's parameter-sharing trick) takes concat(embedding,
+hidden) at 2*d_model, projects in, runs GQA + SwiGLU, and adds back to the
+residual stream. Its KV caches are per-application (stacked axis A).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import cfg_scan, dense_init, embed_init, rmsnorm, rmsnorm_init, swiglu, swiglu_init
+from repro.models.transformer import _stack_init
+from repro.sharding import shard, unshard_fsdp
+
+
+def _n_groups(cfg):
+    return cfg.n_layers // cfg.attn_every   # shared attn applied after each full group
+
+
+def init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, km, ka, kh, kp, kmlp = jax.random.split(key, 6)
+    params = {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(kh, cfg.d_model, cfg.vocab_size, dtype, scale=0.02),
+        "mamba_layers": _stack_init(lambda k: ssm.mamba2_init(k, cfg, dtype), km, cfg.n_layers),
+        "shared": {
+            "in_proj": dense_init(kp, 2 * cfg.d_model, cfg.d_model, dtype),
+            "attn_norm": rmsnorm_init(2 * cfg.d_model, dtype),
+            "attn": attn.gqa_init(ka, cfg, dtype),
+            "mlp_norm": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": swiglu_init(kmlp, cfg.d_model, cfg.d_ff, dtype),
+        },
+    }
+    return params
+
+
+def _group_slices(cfg, stacked):
+    """Split the stacked mamba params into per-group slices + remainder."""
+    g, e = cfg.attn_every, _n_groups(cfg)
+    groups = [jax.tree.map(lambda x: x[i * g : (i + 1) * g], stacked) for i in range(e)]
+    rem = jax.tree.map(lambda x: x[e * g :], stacked)
+    n_rem = cfg.n_layers - e * g
+    return groups, rem, n_rem
+
+
+def _mamba_group(cfg, mode, h, group_params, caches=None):
+    """Run a slice of mamba2 layers via scan. mode: train|prefill|decode."""
+    if mode == "train":
+        fn = (lambda h, p: (h + ssm.mamba2_train(unshard_fsdp(p), h, cfg), None))
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        h, _ = cfg_scan(cfg, fn, h, group_params)
+        return h, None
+    if mode == "prefill":
+        def fn(h, p):
+            out, cache = ssm.mamba2_prefill(unshard_fsdp(p), h, cfg)
+            return h + out, cache
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        return cfg_scan(cfg, fn, h, group_params)
+    # decode
+    def fn(h, inp):
+        p, cache = inp
+        out, new_cache = ssm.mamba2_decode(unshard_fsdp(p), h, cache, cfg)
+        return h + out, new_cache
+    return cfg_scan(cfg, fn, h, (group_params, caches))
+
+
+def _shared_block(cfg, params, h, h_embed, mode, cache=None, pos=None):
+    """Shared attention + MLP block. Returns (h, new_kv_cache_or_None)."""
+    sp = unshard_fsdp(params["shared"])
+    dt = h.dtype
+    x2 = jnp.concatenate([h_embed, h], axis=-1)
+    x2 = rmsnorm(sp["attn_norm"], x2)
+    x = x2 @ sp["in_proj"].astype(dt)
+    x = shard(x, "batch", None, None)
+    if mode == "train":
+        a = attn.gqa_train(sp["attn"], x, cfg)
+        new_cache = None
+    elif mode == "prefill":
+        a, new_cache = attn.gqa_prefill(sp["attn"], x, cfg)
+    else:
+        a, new_cache = attn.gqa_decode(sp["attn"], x, cache, pos, cfg)
+    h = h + a
+    h = h + swiglu(sp["mlp"], rmsnorm(sp["mlp_norm"], h))
+    return h, new_cache
+
+
+def forward_train(params, tokens, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    h = params["embed"].astype(dt)[tokens]
+    h = shard(h, "batch", None, None)
+    h_embed = h
+    groups, rem, n_rem = _group_slices(cfg, params["mamba_layers"])
+    for gp in groups:
+        h, _ = _mamba_group(cfg, "train", h, gp)
+        h, _ = _shared_block(cfg, params, h, h_embed, "train")
+    if n_rem:
+        h, _ = _mamba_group(cfg, "train", h, rem)
+    h = rmsnorm(params["final_norm"], h)
+    logits = h @ params["lm_head"].astype(dt)
+    return shard(logits, "batch", None, "tp"), jnp.float32(0.0)
+
+
+def prefill(params, tokens, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    h = params["embed"].astype(dt)[tokens]
+    h_embed = h
+    groups, rem, n_rem = _group_slices(cfg, params["mamba_layers"])
+    m_caches, a_caches = [], []
+    for gp in groups:
+        h, c = _mamba_group(cfg, "prefill", h, gp)
+        m_caches.append(c)
+        h, ac = _shared_block(cfg, params, h, h_embed, "prefill")
+        a_caches.append(ac)
+    if n_rem:
+        h, c = _mamba_group(cfg, "prefill", h, rem)
+        m_caches.append(c)
+    mamba_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *m_caches)
+    if a_caches:
+        attn_cache = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *a_caches)
+    else:                      # no shared-attn applications (probe configs)
+        attn_cache = make_cache(cfg, h.shape[0], tokens.shape[1])["attn"]
+    h = rmsnorm(params["final_norm"], h[:, -1:])
+    logits = (h @ params["lm_head"].astype(dt))[:, 0]
+    return logits, {"mamba": mamba_cache, "attn": attn_cache}
+
+
+def decode_step(params, token, caches, pos, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    h = params["embed"].astype(dt)[token][:, None, :]
+    h_embed = h
+    groups, rem, n_rem = _group_slices(cfg, params["mamba_layers"])
+    g = cfg.attn_every
+    e = _n_groups(cfg)
+    new_m, new_a = [], []
+    for i, gp in enumerate(groups):
+        mc = jax.tree.map(lambda x: x[i * g : (i + 1) * g], caches["mamba"])
+        h, c = _mamba_group(cfg, "decode", h, gp, mc)
+        new_m.append(c)
+        ac = jax.tree.map(lambda x: x[i], caches["attn"])
+        h, nac = _shared_block(cfg, params, h, h_embed, "decode", ac, pos)
+        new_a.append(nac)
+    if n_rem:
+        mc = jax.tree.map(lambda x: x[e * g :], caches["mamba"])
+        h, c = _mamba_group(cfg, "decode", h, rem, mc)
+        new_m.append(c)
+    mamba_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_m)
+    if new_a:
+        attn_cache = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *new_a)
+    else:
+        attn_cache = caches["attn"]
+    h = rmsnorm(params["final_norm"], h)
+    logits = (h @ params["lm_head"].astype(dt))[:, 0]
+    return logits, {"mamba": mamba_cache, "attn": attn_cache}
+
+
+def make_cache(cfg, batch, seq_len, dtype=None):
+    dt = dtype or jnp.dtype(cfg.dtype)
+    di, ds = cfg.d_inner, cfg.ssm_state
+    hd_ssm = cfg.ssm_head_dim
+    nh = di // hd_ssm
+    W = cfg.ssm_conv
+    L, A = cfg.n_layers, _n_groups(cfg)
+    S = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    hd = cfg.resolved_head_dim
+    return {
+        "mamba": {
+            "h": jnp.zeros((L, batch, nh, hd_ssm, ds), jnp.float32),
+            "conv": jnp.zeros((L, batch, W - 1, di + 2 * ds), dt),
+        },
+        "attn": {
+            "k": jnp.zeros((A, batch, S, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((A, batch, S, cfg.n_kv_heads, hd), dt),
+        },
+    }

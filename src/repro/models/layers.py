@@ -1,0 +1,106 @@
+"""Shared building blocks: inits, norms, RoPE, gated MLPs.
+
+All modules are (init, apply) pure-function pairs over plain dict pytrees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+
+
+def cfg_scan(cfg, f, init, xs, length=None):
+    """lax.scan that fully unrolls when cfg.scan_unroll (cost-probe mode:
+    XLA cost_analysis counts while-loop bodies once, so roofline probes
+    lower unrolled)."""
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if getattr(cfg, "scan_unroll", False) else 1)
+
+
+# ----------------------------------------------------------------- inits
+def dense_init(key, d_in, d_out, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * params["scale"].astype(dt)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * params["scale"].astype(dt) + params["bias"].astype(dt)
+
+
+# ----------------------------------------------------------------- rope
+def rope_freqs(head_dim, theta=10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- mlp
+def swiglu_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params, x, compute_dtype=None):
+    dt = compute_dtype or x.dtype
+    g = x @ params["w_gate"].astype(dt)
+    u = x @ params["w_up"].astype(dt)
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", None, "tp")
+    return h @ params["w_down"].astype(dt)
+
+
+def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params, x, compute_dtype=None):
+    dt = compute_dtype or x.dtype
+    h = jax.nn.gelu(x @ params["w_up"].astype(dt) + params["b_up"].astype(dt))
+    h = shard(h, "batch", None, "tp")
+    return h @ params["w_down"].astype(dt) + params["b_down"].astype(dt)

@@ -1,0 +1,149 @@
+"""Model registry: one uniform API over all six arch families.
+
+Model(cfg).loss_fn / forward_train / prefill / decode / make_cache /
+input_specs — everything StoCFL's trainer, the launcher and the dry-run
+need, independent of family.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, ssm_lm, transformer, vlm
+from repro.models.config import InputShape, ModelConfig
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[Any], Any]                       # key -> params
+    loss_fn: Callable[[Any, Any], Any]               # (params, batch) -> loss
+    forward_train: Callable[[Any, Any], Any]         # (params, batch) -> (logits, aux)
+    prefill: Callable[[Any, Any], Any]               # (params, batch) -> (logits, cache)
+    decode: Callable[[Any, Any, Any, Any], Any]      # (params, token, cache, pos)
+    make_cache: Callable[[int, int], Any]            # (batch, seq_len) -> cache
+    input_specs: Callable[[InputShape], dict]        # shape -> batch of ShapeDtypeStructs
+
+
+def _ce_loss(logits, tokens, aux):
+    """Sharding-friendly CE: the gold logit is a one-hot contraction (kept
+    local to each vocab shard + tiny all-reduce) — NOT take_along_axis,
+    which would all-gather the full fp32 logits across the model axis."""
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return jnp.mean(logz - gold) + 0.01 * aux
+
+
+def _token_specs(cfg, shape: InputShape):
+    B = shape.global_batch
+    return {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)}
+
+
+def build(cfg: ModelConfig) -> Model:
+    dt = jnp.dtype(cfg.dtype)
+
+    if cfg.arch_type in ("dense", "moe"):
+        mod = transformer
+    elif cfg.arch_type == "ssm":
+        mod = ssm_lm
+    elif cfg.arch_type == "hybrid":
+        mod = hybrid
+    elif cfg.arch_type == "audio":
+        mod = encdec
+    elif cfg.arch_type == "vlm":
+        mod = vlm
+    else:
+        raise ValueError(f"unknown arch_type {cfg.arch_type}")
+
+    # ---- family-specific batch plumbing -------------------------------
+    if cfg.arch_type in ("dense", "moe", "ssm", "hybrid"):
+        def forward_train(params, batch):
+            return mod.forward_train(params, batch["tokens"], cfg)
+
+        def loss_fn(params, batch):
+            logits, aux = forward_train(params, batch)
+            return _ce_loss(logits, batch["tokens"], aux)
+
+        def prefill(params, batch):
+            return mod.prefill(params, batch["tokens"], cfg)
+
+        def input_specs(shape):
+            return _token_specs(cfg, shape)
+
+    elif cfg.arch_type == "audio":
+        def forward_train(params, batch):
+            return mod.forward_train(params, batch, cfg)
+
+        def loss_fn(params, batch):
+            logits, aux = forward_train(params, batch)
+            return _ce_loss(logits, batch["tokens"], aux)
+
+        def prefill(params, batch):
+            return mod.prefill(params, batch, cfg)
+
+        def input_specs(shape):
+            B = shape.global_batch
+            return {
+                "frames": jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32),
+            }
+
+    else:  # vlm
+        def forward_train(params, batch):
+            return mod.forward_train(params, batch, cfg)
+
+        def loss_fn(params, batch):
+            return mod.loss_fn(params, batch, cfg)
+
+        def prefill(params, batch):
+            return mod.prefill(params, batch, cfg)
+
+        def input_specs(shape):
+            B = shape.global_batch
+            n_text = max(shape.seq_len - cfg.n_patches, 8)
+            return {
+                "patches": jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((B, n_text), jnp.int32),
+            }
+
+    def decode(params, token, cache, pos):
+        return mod.decode_step(params, token, cache, pos, cfg)
+
+    def make_cache(batch, seq_len):
+        return mod.make_cache(cfg, batch, seq_len)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init(key, cfg),
+        loss_fn=loss_fn,
+        forward_train=forward_train,
+        prefill=prefill,
+        decode=decode,
+        make_cache=make_cache,
+        input_specs=input_specs,
+    )
+
+
+def grow_cache(model: Model, cache, batch: int, seq_len: int):
+    """Embed a prefill cache into a larger decode cache (prefix-preserving)."""
+    full = jax.eval_shape(lambda: model.make_cache(batch, seq_len))
+    full = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), full)
+    return jax.tree.map(
+        lambda f, g: f.at[tuple(slice(0, s) for s in g.shape)].set(g.astype(f.dtype))
+        if f.shape != g.shape else g.astype(f.dtype),
+        full, cache)
+
+
+def decode_specs(model: Model, shape: InputShape):
+    """ShapeDtypeStruct pytree for a decode step: (token, cache, pos)."""
+    B = shape.global_batch
+    cache = jax.eval_shape(lambda: model.make_cache(B, shape.seq_len))
+    return {
+        "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

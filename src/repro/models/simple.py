@@ -1,0 +1,96 @@
+"""The paper's own task models: MLP (MNIST), CNN (CIFAR10), CNN (FEMNIST).
+
+These are what StoCFL's experiments actually train (§4.2 "a linear
+classification model with a hidden layer of 2048 units", "a CNN with two
+convolutional layers followed by two fully connected layers"). They share
+the classification Model API: apply(params, x) -> logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskConfig:
+    name: str
+    kind: str            # mlp | cnn
+    input_shape: tuple   # e.g. (784,) or (32,32,3)
+    n_classes: int = 10
+    hidden: int = 2048
+    conv_channels: tuple = (32, 64)
+    fc_hidden: int = 128
+
+
+MNIST_MLP = TaskConfig("mnist_mlp", "mlp", (784,), 10, hidden=2048)
+CIFAR_CNN = TaskConfig("cifar_cnn", "cnn", (32, 32, 3), 10)
+FEMNIST_CNN = TaskConfig("femnist_cnn", "cnn", (28, 28, 1), 62)
+SYNTH_MLP = TaskConfig("synth_mlp", "mlp", (64,), 10, hidden=256)
+
+
+def init(key, cfg: TaskConfig):
+    if cfg.kind == "mlp":
+        k1, k2 = jax.random.split(key)
+        d_in = int(jnp.prod(jnp.array(cfg.input_shape)))
+        return {
+            "w1": dense_init(k1, d_in, cfg.hidden),
+            "b1": jnp.zeros((cfg.hidden,)),
+            "w2": dense_init(k2, cfg.hidden, cfg.n_classes),
+            "b2": jnp.zeros((cfg.n_classes,)),
+        }
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    c1, c2 = cfg.conv_channels
+    in_ch = cfg.input_shape[-1]
+    h, w = cfg.input_shape[0] // 4, cfg.input_shape[1] // 4   # two 2x2 maxpools
+    flat = h * w * c2
+    # Xavier init (paper §4.2)
+    return {
+        "conv1_w": jax.random.normal(k1, (3, 3, in_ch, c1)) * jnp.sqrt(2.0 / (9 * in_ch)),
+        "conv1_b": jnp.zeros((c1,)),
+        "conv2_w": jax.random.normal(k2, (3, 3, c1, c2)) * jnp.sqrt(2.0 / (9 * c1)),
+        "conv2_b": jnp.zeros((c2,)),
+        "fc1_w": dense_init(k3, flat, cfg.fc_hidden),
+        "fc1_b": jnp.zeros((cfg.fc_hidden,)),
+        "fc2_w": dense_init(k4, cfg.fc_hidden, cfg.n_classes),
+        "fc2_b": jnp.zeros((cfg.n_classes,)),
+    }
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply(params, x, cfg: TaskConfig):
+    """x: (B, *input_shape) -> logits (B, n_classes)."""
+    if cfg.kind == "mlp":
+        x = x.reshape(x.shape[0], -1)
+        h = jax.nn.relu(x @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+    h = jax.lax.conv_general_dilated(
+        x, params["conv1_w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ) + params["conv1_b"]
+    h = _maxpool2(jax.nn.relu(h))
+    h = jax.lax.conv_general_dilated(
+        h, params["conv2_w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ) + params["conv2_b"]
+    h = _maxpool2(jax.nn.relu(h))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1_w"] + params["fc1_b"])
+    return h @ params["fc2_w"] + params["fc2_b"]
+
+
+def loss_fn(params, batch, cfg: TaskConfig):
+    """batch: {"x": (B,...), "y": (B,) int32} -> mean CE loss."""
+    logits = apply(params, batch["x"], cfg).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(params, batch, cfg: TaskConfig):
+    logits = apply(params, batch["x"], cfg)
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

@@ -1,0 +1,204 @@
+"""State-space blocks: Mamba1 (falcon-mamba) and Mamba2 (zamba2 core).
+
+Train/prefill run a *chunked selective scan*: `lax.scan` over sequence
+chunks carrying the recurrent state, `associative_scan` inside each chunk.
+This bounds the (B, chunk, d_inner_shard, d_state) working set to VMEM-scale
+— the same blocking the Pallas `ssm_scan` kernel implements natively on TPU.
+
+Decode is the O(1) single-step recurrence on a cached state
+  {"h": (B, d_inner, d_state) [or (B, nh, hd, d_state) for v2],
+   "conv": (B, conv_width-1, d_inner)}
+which is why SSM archs run long_500k natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding import shard
+
+
+def _scan_y(dA, dBx, C, h0, cfg, need_state: bool):
+    """y[t] = Σ_n h[t]·C[t] with h[t] = dA[t]h[t-1] + dBx[t].
+
+    When the caller does not need the final state (training) and the config
+    opts in, route through the fused Pallas kernel (kernels/ssm_scan.py) —
+    h never hits HBM. Otherwise run the jnp chunked scan and contract."""
+    if cfg.use_pallas and not need_state and h0 is None:
+        from repro.kernels import ops
+        y = ops.ssm_scan(dA, dBx, C,
+                         backend="auto" if jax.default_backend() == "tpu" else "jnp")
+        return y, None
+    B, S = dA.shape[0], dA.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros(dA.shape[:1] + dA.shape[2:], jnp.float32)
+    h_all, h_last = _chunked_scan(dA, dBx, h0, cfg.ssm_chunk, cfg.scan_unroll)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, C.astype(jnp.float32))
+    return y, h_last
+
+
+# ----------------------------------------------------------------- common
+def _causal_conv(x, conv_w, conv_b, tail=None):
+    """Depthwise causal conv. x: (B,S,ch), conv_w: (ch,W), tail: (B,W-1,ch)."""
+    W = conv_w.shape[1]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)               # (B,S+W-1,ch)
+    out = sum(xp[:, i : i + x.shape[1]] * conv_w[:, i] for i in range(W))
+    return out + conv_b, xp[:, -(W - 1):]                  # (B,S,ch), new tail
+
+
+def _chunked_scan(dA, dBx, h0, chunk, unroll=False):
+    """h_t = dA_t * h_{t-1} + dBx_t over axis 1 (seq), chunked.
+
+    dA, dBx: (B, S, ...state dims...); h0: (B, ...state dims...).
+    Returns (h_all: (B,S,...), h_last).
+    """
+    B, S = dA.shape[0], dA.shape[1]
+    n = max(S // chunk, 1)
+    chunk = S // n
+    state_shape = dA.shape[2:]
+    dA_c = dA.reshape(B, n, chunk, *state_shape).transpose(1, 0, 2, *range(3, 3 + len(state_shape)))
+    dBx_c = dBx.reshape(B, n, chunk, *state_shape).transpose(1, 0, 2, *range(3, 3 + len(state_shape)))
+
+    def combine(a, b):
+        return a[0] * b[0], b[0] * a[1] + b[1]
+
+    def body(h, args):
+        a, bx = args                                       # (B,chunk,...)
+        A_cum, B_cum = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        h_all = A_cum * h[:, None] + B_cum                 # (B,chunk,...)
+        return h_all[:, -1], h_all
+
+    h_last, outs = jax.lax.scan(body, h0, (dA_c, dBx_c), unroll=True if unroll else 1)
+    outs = outs.transpose(1, 0, 2, *range(3, 3 + len(state_shape))).reshape(B, S, *state_shape)
+    return outs, h_last
+
+
+# ----------------------------------------------------------------- mamba1
+def mamba1_init(key, cfg, dtype=jnp.float32):
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, W = cfg.resolved_dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (di, W)) / jnp.sqrt(W)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": (jax.random.uniform(ks[4], (di,), minval=-4.6, maxval=-2.3)).astype(dtype),
+        "a_log2": jnp.log(A).astype(dtype),                # (d_inner, d_state)
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _mamba1_core(params, x, cfg, h0=None, conv_tail=None, need_state=True):
+    B, S, _ = x.shape
+    di, ds, dtr = cfg.d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    dt_ = x.dtype
+    xz = x @ params["in_proj"].astype(dt_)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = shard(x_in, "batch", None, "tp")
+    x_c, new_tail = _causal_conv(x_in, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_), conv_tail)
+    x_c = jax.nn.silu(x_c)
+
+    dbc = x_c @ params["x_proj"].astype(dt_)               # (B,S,dtr+2ds)
+    dt_raw, Bc, Cc = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus(dt_raw @ params["dt_proj"].astype(dt_) + params["dt_bias"].astype(dt_))
+    delta = delta.astype(jnp.float32)                      # (B,S,di)
+    A = -jnp.exp(params["a_log2"].astype(jnp.float32))     # (di,ds)
+    dA = jnp.exp(delta[..., None] * A)                     # (B,S,di,ds)
+    dBx = (delta * x_c.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[:, :, None, :]
+
+    y, h_last = _scan_y(dA, dBx, Cc.astype(jnp.float32), h0, cfg,
+                        need_state=need_state)
+    y = y + params["d_skip"].astype(jnp.float32) * x_c.astype(jnp.float32)
+    y = (y.astype(dt_) * jax.nn.silu(z))
+    out = y @ params["out_proj"].astype(dt_)
+    return out, h_last, new_tail
+
+
+def mamba1_train(params, x, cfg):
+    out, _, _ = _mamba1_core(params, x, cfg, need_state=False)
+    return out
+
+
+def mamba1_prefill(params, x, cfg):
+    out, h, tail = _mamba1_core(params, x, cfg)
+    return out, {"h": h, "conv": tail}
+
+
+def mamba1_decode(params, x, cache, cfg):
+    """x: (B,1,d). O(1) recurrence against cached (h, conv tail)."""
+    out, h, tail = _mamba1_core(params, x, cfg, h0=cache["h"], conv_tail=cache["conv"].astype(x.dtype))
+    return out, {"h": h, "conv": tail}
+
+
+# ----------------------------------------------------------------- mamba2
+def mamba2_init(key, cfg, dtype=jnp.float32):
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+    W = cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    # in_proj emits [x (di), z (di), B (ds), C (ds), dt (nh)]
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ds + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (di + 2 * ds, W)) / jnp.sqrt(W)).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * ds,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "a_log": jnp.zeros((nh,), dtype),                  # scalar decay per head
+        "d_skip": jnp.ones((nh,), dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _mamba2_core(params, x, cfg, h0=None, conv_tail=None):
+    B, S, _ = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+    dt_ = x.dtype
+    proj = x @ params["in_proj"].astype(dt_)
+    xBC, z, dt_raw = jnp.split(proj, [di + 2 * ds, 2 * di + 2 * ds], axis=-1)
+    xBC, new_tail = _causal_conv(xBC, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_), conv_tail)
+    xBC = jax.nn.silu(xBC)
+    x_in, Bc, Cc = jnp.split(xBC, [di, di + ds], axis=-1)
+
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,S,nh)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))      # (nh,)
+    dA = jnp.exp(delta * A)[..., None, None]               # (B,S,nh,1,1)
+    xh = x_in.reshape(B, S, nh, hd).astype(jnp.float32)
+    dBx = (delta[..., None] * xh)[..., None] * Bc.astype(jnp.float32)[:, :, None, None, :]  # (B,S,nh,hd,ds)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    dA_b = jnp.broadcast_to(dA, dBx.shape)
+    h_all, h_last = _chunked_scan(dA_b, dBx, h0, cfg.ssm_chunk, cfg.scan_unroll)
+    y = jnp.einsum("bsnhd,bsd->bsnh", h_all.reshape(B, S, nh, hd, ds), Cc.astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(B, S, di)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"].astype(jnp.float32)
+    return (y.astype(dt_) @ params["out_proj"].astype(dt_)), h_last, new_tail
+
+
+def mamba2_train(params, x, cfg):
+    out, _, _ = _mamba2_core(params, x, cfg)
+    return out
+
+
+def mamba2_prefill(params, x, cfg):
+    out, h, tail = _mamba2_core(params, x, cfg)
+    return out, {"h": h, "conv": tail}
+
+
+def mamba2_decode(params, x, cache, cfg):
+    out, h, tail = _mamba2_core(params, x, cfg, h0=cache["h"], conv_tail=cache["conv"].astype(x.dtype))
+    return out, {"h": h, "conv": tail}

@@ -1,0 +1,90 @@
+"""Attention-free Mamba1 LM (falcon-mamba-7b family)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.layers import cfg_scan, dense_init, embed_init, rmsnorm, rmsnorm_init
+from repro.models.transformer import _stack_init
+from repro.sharding import shard, unshard_fsdp
+
+
+def _layer_init(key, cfg, dtype):
+    return {
+        "norm": rmsnorm_init(cfg.d_model, dtype),
+        "mixer": ssm.mamba1_init(key, cfg, dtype),
+    }
+
+
+def init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kl, kh = jax.random.split(key, 3)
+    return {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": _stack_init(functools.partial(_layer_init, cfg=cfg, dtype=dtype), kl, cfg.n_layers),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(kh, cfg.d_model, cfg.vocab_size, dtype, scale=0.02),
+    }
+
+
+def forward_train(params, tokens, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    h = params["embed"].astype(dt)[tokens]
+    h = shard(h, "batch", None, None)
+
+    def body(h, p):
+        p = unshard_fsdp(p)
+        return h + ssm.mamba1_train(p["mixer"], rmsnorm(p["norm"], h), cfg), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = cfg_scan(cfg, lambda c, p: fn(c, p), h, params["layers"])
+    h = rmsnorm(params["final_norm"], h)
+    logits = h @ params["lm_head"].astype(dt)
+    return shard(logits, "batch", None, "tp"), jnp.float32(0.0)
+
+
+def prefill(params, tokens, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    h = params["embed"].astype(dt)[tokens]
+    h = shard(h, "batch", None, None)
+
+    def body(h, p):
+        p = unshard_fsdp(p)
+        out, cache = ssm.mamba1_prefill(p["mixer"], rmsnorm(p["norm"], h), cfg)
+        return h + out, cache
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    h, caches = cfg_scan(cfg, lambda c, p: fn(c, p), h, params["layers"])
+    h = rmsnorm(params["final_norm"], h[:, -1:])
+    logits = (h @ params["lm_head"].astype(dt))[:, 0]
+    return logits, caches
+
+
+def decode_step(params, token, caches, pos, cfg):
+    """pos is unused for SSMs (state is position-free) but kept for API parity."""
+    dt = jnp.dtype(cfg.dtype)
+    h = params["embed"].astype(dt)[token][:, None, :]
+
+    def body(h, inp):
+        p, cache = inp
+        p = unshard_fsdp(p)
+        out, new_cache = ssm.mamba1_decode(p["mixer"], rmsnorm(p["norm"], h), cache, cfg)
+        return h + out, new_cache
+
+    h, new_caches = cfg_scan(cfg, body, h, (params["layers"], caches))
+    h = rmsnorm(params["final_norm"], h)
+    logits = (h @ params["lm_head"].astype(dt))[:, 0]
+    return logits, new_caches
+
+
+def make_cache(cfg, batch, seq_len, dtype=None):
+    """SSM cache is O(1) in seq_len — the long_500k story."""
+    dt = dtype or jnp.dtype(cfg.dtype)
+    L, di, ds, W = cfg.n_layers, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": jnp.zeros((L, batch, di, ds), jnp.float32),
+        "conv": jnp.zeros((L, batch, W - 1, di), dt),
+    }

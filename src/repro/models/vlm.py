@@ -1,0 +1,64 @@
+"""VLM backbone (InternVL2-style): vision prefix + decoder-only LM.
+
+Per the brief's carve-out, the InternViT vision encoder is STUBBED:
+inputs are precomputed patch embeddings (B, n_patches, d_model). The MLP
+projector and the language backbone (InternLM2-class transformer) are real.
+Loss is computed on text positions only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.layers import dense_init, rmsnorm
+from repro.sharding import shard
+
+
+def init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    params = tf.init(k1, cfg)
+    params["patch_proj"] = dense_init(k2, cfg.d_model, cfg.d_model, dtype)
+    return params
+
+
+def _assemble(params, batch, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    patches = batch["patches"].astype(dt) @ params["patch_proj"].astype(dt)
+    text = params["embed"].astype(dt)[batch["tokens"]]
+    h = jnp.concatenate([patches, text], axis=1)
+    return shard(h, "batch", None, None)
+
+
+def forward_train(params, batch, cfg):
+    """batch: {"patches": (B,P,d), "tokens": (B,S_text)} -> (text logits, aux)."""
+    dt = jnp.dtype(cfg.dtype)
+    P = batch["patches"].shape[1]
+    h, aux = tf.apply_stack_train(params, _assemble(params, batch, cfg), cfg)
+    h = rmsnorm(params["final_norm"], h[:, P:])           # text positions only
+    logits = h @ params["lm_head"].astype(dt)
+    return shard(logits, "batch", None, "tp"), aux
+
+
+def loss_fn(params, batch, cfg):
+    logits, aux = forward_train(params, batch, cfg)
+    tokens = batch["tokens"]
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return jnp.mean(logz - gold) + 0.01 * aux
+
+
+def prefill(params, batch, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    h, caches = tf.apply_stack_prefill(params, _assemble(params, batch, cfg), cfg)
+    h = rmsnorm(params["final_norm"], h[:, -1:])
+    logits = (h @ params["lm_head"].astype(dt))[:, 0]
+    return logits, caches
+
+
+decode_step = tf.decode_step
+make_cache = tf.make_cache

@@ -1,0 +1,39 @@
+"""Adam/AdamW for the substrate training paths (non-FL standalone runs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.sgd import Optimizer, _lr_at
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "count": jnp.zeros([], jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        }
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        step_lr = _lr_at(lr, state["count"])
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(mi, vi, p):
+            u = -step_lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            if weight_decay:
+                u = u - step_lr * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype) if p is not None else u
+
+        if params is None:
+            updates = jax.tree.map(lambda mi, vi: upd(mi, vi, mi), m, v)
+        else:
+            updates = jax.tree.map(upd, m, v, params)
+        return updates, {"count": count, "m": m, "v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (callables of step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(init_value: float, decay_steps: int, alpha: float = 0.0):
+    def fn(count):
+        frac = jnp.clip(count / max(decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return init_value * ((1 - alpha) * cos + alpha)
+
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, decay_steps: int, floor: float = 0.0):
+    cd = cosine_decay(peak, max(decay_steps - warmup_steps, 1), alpha=floor / max(peak, 1e-12))
+
+    def fn(count):
+        warm = peak * (count + 1) / max(warmup_steps, 1)
+        return jnp.where(count < warmup_steps, warm, cd(count - warmup_steps))
+
+    return fn

@@ -1,0 +1,68 @@
+"""SGD optimizers as (init, update) pure-function pairs.
+
+The paper's clients run plain SGD (Algorithm 1, lines 21-22); momentum is
+provided for the substrate's standalone training paths.
+
+API (optax-like but dependency-free):
+    opt = sgd(lr)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _lr_at(lr, count):
+    return lr(count) if callable(lr) else lr
+
+
+def sgd(lr) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros([], jnp.int32)}
+
+    def update(grads, state, params=None):
+        step_lr = _lr_at(lr, state["count"])
+        updates = jax.tree.map(lambda g: -step_lr * g, grads)
+        return updates, {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {
+            "count": jnp.zeros([], jnp.int32),
+            "mu": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params=None):
+        step_lr = _lr_at(lr, state["count"])
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -step_lr * (momentum * m + g), mu, grads)
+        else:
+            upd = jax.tree.map(lambda m: -step_lr * m, mu)
+        return upd, {"count": state["count"] + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), grads))
+    gnorm = jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm

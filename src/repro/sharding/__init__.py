@@ -1,0 +1,9 @@
+from repro.sharding.specs import (  # noqa: F401
+    ShardCtx,
+    current_ctx,
+    param_shardings,
+    replicated,
+    shard,
+    spec_for_path,
+    unshard_fsdp,
+)

@@ -1,0 +1,214 @@
+"""Sharding rule table + activation-sharding context.
+
+Models call ``shard(x, "batch", None, "tp")`` with *logical* axis names;
+the active ``ShardCtx`` maps logical names to mesh axes (or is a no-op when
+running single-device smoke tests). Parameter shardings are produced by a
+regex rule table over pytree paths — the same mechanism MaxText/T5X use.
+
+Logical axes:
+  batch   -> ("pod","data") on the production mesh (client/batch axis)
+  tp      -> "model"        (tensor-parallel: heads, d_ff, experts, vocab)
+  fsdp    -> "data"         (parameter row sharding, ZeRO-style)
+  none    -> replicated
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+class ShardCtx:
+    """Maps logical axis names to physical mesh axes for one mesh."""
+
+    def __init__(self, mesh: Optional[Mesh], logical_map: Optional[dict] = None):
+        self.mesh = mesh
+        if logical_map is None and mesh is not None:
+            axes = mesh.axis_names
+            logical_map = {
+                "batch": tuple(a for a in ("pod", "data") if a in axes) or None,
+                "fsdp": "data" if "data" in axes else None,
+                "tp": "model" if "model" in axes else None,
+                "expert": "model" if "model" in axes else None,
+            }
+        self.logical_map = logical_map or {}
+
+    def resolve(self, logical: Sequence) -> P:
+        phys = []
+        for ax in logical:
+            if ax is None:
+                phys.append(None)
+            else:
+                m = self.logical_map.get(ax, None)
+                phys.append(m)
+        return P(*phys)
+
+    def __enter__(self):
+        prev = getattr(_ctx, "stack", [])
+        _ctx.stack = prev + [self]
+        return self
+
+    def __exit__(self, *exc):
+        _ctx.stack = _ctx.stack[:-1]
+        return False
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    stack = getattr(_ctx, "stack", [])
+    return stack[-1] if stack else None
+
+
+def _divisible(x, spec: P, mesh: Mesh) -> bool:
+    """True if every sharded dim of x divides by its mesh-axis product."""
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if dim % n != 0:
+            return False
+    return True
+
+
+def shard(x, *logical):
+    """Constrain activation x to the logical sharding, if a ctx is active.
+
+    Silently relaxes any axis that doesn't divide (e.g. 8 kv-heads over a
+    16-way model axis) to replicated — divisibility-safe by construction.
+    """
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = ctx.resolve(logical)
+    # relax non-divisible axes
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= ctx.mesh.shape[a]
+        fixed.append(ax if dim % n == 0 else None)
+    spec = P(*fixed)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules: (path regex, logical spec per dim)
+# Applied to pytree paths like "layers/attn/wq" with array rank awareness.
+# Stacked-layer params have a leading L axis -> rule specs are for the
+# *trailing* dims; leading unmatched dims are replicated.
+# ---------------------------------------------------------------------------
+PARAM_RULES = [
+    # embeddings (vocab, d) / head (d, vocab): vocab on tp, d replicated —
+    # sharding d over fsdp makes the lm_head contraction partial-sum and
+    # forces a full-logits all-reduce (measured 4×39.8 GB/step on qwen2).
+    (r".*(embed)$", ("tp", None)),
+    (r".*(lm_head|output_proj)$", (None, "tp")),
+    # attention projections (d_model, heads*hd): rows fsdp, cols tp
+    (r".*(wq|wk|wv|wkv_a|wkv_b|wq_a|wq_b|w_cross_k|w_cross_v)$", ("fsdp", "tp")),
+    (r".*(wo)$", ("tp", "fsdp")),
+    # MoE experts: (E, d, ff) -> experts on tp (expert parallel), rows fsdp
+    # (must precede the generic mlp rules: same leaf names, extra E dim)
+    (r".*experts/(w_gate|w_up)$", ("expert", "fsdp", None)),
+    (r".*experts/(w_down)$", ("expert", None, "fsdp")),
+    (r".*router/w$", ("fsdp", None)),
+    # mlp
+    (r".*(w_gate|w_up)$", ("fsdp", "tp")),
+    (r".*(w_down)$", ("tp", "fsdp")),
+    # mamba
+    (r".*(in_proj)$", ("fsdp", "tp")),
+    (r".*(x_proj)$", ("tp", None)),
+    (r".*(dt_proj)$", (None, "tp")),
+    (r".*(out_proj)$", ("tp", "fsdp")),
+    (r".*(a_log2|conv_w)$", ("tp", None)),
+    (r".*(a_log|d_skip|conv_b|dt_bias)$", ("tp",)),
+    # biases / norms / small vectors: replicate
+    (r".*(scale|bias|b_q|b_k|b_v)$", ()),
+]
+
+
+def spec_for_path(path: str, ndim: int, ctx: ShardCtx) -> P:
+    for pat, logical in PARAM_RULES:
+        if re.match(pat, path):
+            spec = ctx.resolve(logical)
+            pads = ndim - len(logical)
+            if pads < 0:    # rule longer than rank (e.g. stacked scalar)
+                spec = P(*spec[-ndim:]) if ndim else P()
+                return spec
+            return P(*([None] * pads + list(spec)))
+    return P(*([None] * ndim))
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(params, mesh: Mesh, ctx: Optional[ShardCtx] = None):
+    """NamedSharding pytree for a parameter pytree (divisibility-safe)."""
+    ctx = ctx or ShardCtx(mesh)
+
+    def one(kp, x):
+        spec = spec_for_path(_path_str(kp), len(x.shape), ctx)
+        fixed = []
+        for dim, ax in zip(x.shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            fixed.append(ax if dim % n == 0 else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def unshard_fsdp(tree):
+    """ZeRO-3 compute layout: re-constrain a layer's weights with the fsdp
+    axis gathered (tp kept). Placed at the top of each layer body, this
+    makes XLA emit per-layer weight all-gathers (fwd/bwd) and weight-grad
+    reduce-scatters instead of activation-sized partial-sum all-reduces
+    (measured 8 GB/layer -> weight-sized on qwen2 train_4k)."""
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return tree
+    ctx2 = ShardCtx(ctx.mesh, {**ctx.logical_map, "fsdp": None})
+
+    def one(kp, x):
+        spec = spec_for_path(_path_str(kp), len(x.shape), ctx2)
+        fixed = []
+        for dim, ax in zip(x.shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= ctx.mesh.shape[a]
+            fixed.append(ax if dim % n == 0 else None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, P(*fixed)))
+
+    return jax.tree_util.tree_map_with_path(one, tree)

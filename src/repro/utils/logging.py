@@ -1,0 +1,35 @@
+"""Minimal structured logger (no external deps, rank-0 aware)."""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+
+
+class Logger:
+    def __init__(self, name: str = "repro", stream=None):
+        self.name = name
+        self.stream = stream or sys.stderr
+        self.t0 = time.time()
+
+    def _emit(self, level: str, msg: str, **kv):
+        if jax.process_index() != 0:
+            return
+        rec = {"t": round(time.time() - self.t0, 3), "lvl": level, "name": self.name, "msg": msg}
+        rec.update(kv)
+        print(json.dumps(rec, default=str), file=self.stream, flush=True)
+
+    def info(self, msg, **kv):
+        self._emit("info", msg, **kv)
+
+    def warn(self, msg, **kv):
+        self._emit("warn", msg, **kv)
+
+    def metric(self, msg, **kv):
+        self._emit("metric", msg, **kv)
+
+
+def get_logger(name: str = "repro") -> Logger:
+    return Logger(name)

@@ -1,0 +1,89 @@
+"""Pytree utilities used across the framework.
+
+Parameters everywhere in repro are plain nested dicts of jnp arrays.
+These helpers implement the linear-algebra-on-pytrees the StoCFL server
+needs (weighted averages, axpy, norms, flattening for Ψ representations).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(a, x, y):
+    """a*x + y elementwise over two pytrees."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    """Inner product of two pytrees (fp32 accumulate)."""
+    leaves = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_norm(tree):
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def tree_weighted_mean(trees, weights):
+    """Weighted mean of a list of pytrees. weights: list/array of scalars."""
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    w = w / jnp.sum(w)
+    out = tree_scale(trees[0], w[0])
+    for i in range(1, len(trees)):
+        out = tree_axpy(w[i], trees[i], out)
+    return out
+
+
+def tree_flatten_vector(tree, dtype=jnp.float32):
+    """Flatten a pytree into a single 1-D vector (Ψ representation space)."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([jnp.ravel(l).astype(dtype) for l in leaves])
+
+
+def tree_unflatten_vector(vec, tree):
+    """Inverse of tree_flatten_vector given a structure/shapes template."""
+    leaves, treedef = jax.tree.flatten(tree)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        out.append(jnp.reshape(vec[off : off + n], l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_size(tree):
+    """Total number of scalar parameters."""
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree):
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_has_nan(tree):
+    leaves = [jnp.any(jnp.isnan(l)) for l in jax.tree.leaves(tree)]
+    return jnp.any(jnp.stack(leaves))

@@ -1,0 +1,10 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device — the 512
+# placeholder devices are ONLY for launch/dryrun.py (which sets XLA_FLAGS
+# itself before any import). Keep any inherited flag from leaking in.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,106 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each instantiates the REDUCED same-family variant (≤2 layers core,
+d_model≤512, ≤4 experts) and runs one forward/train step + one decode
+step on CPU, asserting output shapes and no NaNs. The FULL configs are
+exercised only via the dry-run (ShapeDtypeStructs, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, CLI_ALIASES, get_config
+from repro.data import synthetic_lm_batch
+from repro.models import build
+from repro.models.config import InputShape
+
+S, B = 32, 2
+
+
+def _batch(cfg, key):
+    b = synthetic_lm_batch(cfg, S, B, seed=0)
+    return jax.tree.map(jnp.asarray, b)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_reduced_variant_limits(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, 0)
+    loss, grads = jax.jit(jax.value_and_grad(model.loss_fn))(params, batch)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves)
+    # one SGD step changes the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+    loss2 = float(jax.jit(model.loss_fn)(params2, batch))
+    assert np.isfinite(loss2) and loss2 != float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, 0)
+    logits, aux = jax.jit(model.forward_train)(params, batch)
+    n_text = batch["tokens"].shape[1]
+    assert logits.shape == (B, n_text, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, 0)
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    fresh = model.make_cache(B, S)
+    tok = jnp.zeros((B,), jnp.int32)
+    dlogits, new_cache = jax.jit(model.decode)(params, tok, fresh, jnp.int32(1))
+    assert dlogits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(dlogits, dtype=np.float32)).all()
+    assert jax.tree.structure(fresh) == jax.tree.structure(new_cache)
+
+
+def test_cli_aliases_cover_assignment():
+    assigned = ["phi3.5-moe-42b-a6.6b", "llama3-8b", "whisper-medium",
+                "internlm2-1.8b", "falcon-mamba-7b", "internvl2-26b",
+                "zamba2-1.2b", "granite-3-8b", "deepseek-v2-236b", "qwen2-1.5b"]
+    for a in assigned:
+        assert a in CLI_ALIASES
+        cfg = get_config(a)
+        assert cfg.name == a
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    }
+    for arch, (L, d, H, kv, ff, V) in spec.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == \
+            (L, d, H, kv, ff, V), arch
+    c = get_config("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab_size) == (60, 5120, 128, 102400)
+    assert (c.n_experts, c.moe_top_k, c.n_shared_experts, c.kv_lora_rank) == (160, 6, 2, 512)
+    c = get_config("falcon-mamba-7b")
+    assert (c.n_layers, c.d_model, c.vocab_size, c.ssm_state) == (64, 4096, 65024, 16)

@@ -1,0 +1,103 @@
+"""Bi-level optimization properties + degeneration equivalences (§3.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bilevel
+from repro.core.stocfl import StoCFL, StoCFLConfig
+from repro.core.baselines import FLConfig, FedAvg
+from repro.data import rotated
+from repro.models import simple
+from repro.utils import trees
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+
+
+def _setup(n_clients=8, n_per=32, seed=0):
+    clients, tc, tests = rotated(n_clusters=2, n_clients=n_clients, n_per=n_per, seed=seed)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    params = simple.init(jax.random.PRNGKey(seed), TASK)
+    return clients, tc, tests, params
+
+
+def test_client_update_lambda_zero_is_sgd():
+    clients, _, _, params = _setup()
+    cu = bilevel.make_client_update(LOSS, lr=0.1, lam=0.0, local_steps=3, backend="jnp")
+    th, om = cu(params, params, clients[0])
+    om_ref = bilevel.local_sgd(LOSS, params, clients[0], 0.1, 3)
+    for a, b in zip(jax.tree.leaves(th), jax.tree.leaves(om)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    for a, b in zip(jax.tree.leaves(om), jax.tree.leaves(om_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_client_update_reduces_loss():
+    clients, _, _, params = _setup()
+    cu = bilevel.make_client_update(LOSS, lr=0.1, lam=0.05, local_steps=5, backend="jnp")
+    th, om = cu(params, params, clients[0])
+    l0 = float(LOSS(params, clients[0]))
+    assert float(LOSS(th, clients[0])) < l0
+    assert float(LOSS(om, clients[0])) < l0
+
+
+def test_cohort_update_matches_individual():
+    clients, _, _, params = _setup(n_clients=4)
+    cohort = bilevel.make_cohort_update(LOSS, lr=0.1, lam=0.05, local_steps=2)
+    thetas = jax.tree.map(lambda x: jnp.stack([x] * 4), params)
+    batches = jax.tree.map(lambda *xs: jnp.stack(xs), *clients[:4])
+    th_s, om_s = cohort(thetas, params, batches)
+    cu = bilevel.make_client_update(LOSS, lr=0.1, lam=0.05, local_steps=2, backend="jnp")
+    th1, om1 = cu(params, params, clients[2])
+    for a, b in zip(jax.tree.leaves(jax.tree.map(lambda x: x[2], th_s)), jax.tree.leaves(th1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(jax.tree.map(lambda x: x[2], om_s)), jax.tree.leaves(om1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_aggregate_stacked_weighted_mean():
+    t1 = {"w": jnp.ones((3,))}
+    t2 = {"w": jnp.zeros((3,))}
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), t1, t2)
+    out = bilevel.aggregate_stacked(stacked, [3.0, 1.0])
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.75)
+
+
+def test_stocfl_tau_minus1_lam0_equals_fedavg():
+    """λ=0, τ=−1 ⇒ StoCFL's ω AND single cluster model follow FedAvg
+    (paper §3.4) when the same cohort is sampled."""
+    clients, _, _, params = _setup(n_clients=6)
+    ids = [np.arange(6)] * 3                      # full participation
+    sto = StoCFL(LOSS, params, clients,
+                 StoCFLConfig(tau=-1.0, lam=0.0, lr=0.1, local_steps=2,
+                              sample_rate=1.0, seed=0))
+    fed = FedAvg(LOSS, params, clients,
+                 FLConfig(lr=0.1, local_steps=2, sample_rate=1.0, seed=0))
+    for r in ids:
+        sto.round(r)
+        fed.round(r)
+    assert sto.state.n_clusters() == 1
+    for a, b in zip(jax.tree.leaves(sto.omega), jax.tree.leaves(fed.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    root = sto.state.uf.find(0)
+    for a, b in zip(jax.tree.leaves(sto.models[root]), jax.tree.leaves(fed.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_stocfl_tau_one_stays_personalized():
+    clients, _, _, params = _setup(n_clients=6)
+    sto = StoCFL(LOSS, params, clients,
+                 StoCFLConfig(tau=1.1, lam=0.05, lr=0.1, local_steps=1,
+                              sample_rate=1.0, seed=0))
+    for _ in range(3):
+        sto.round(np.arange(6))
+    assert sto.state.n_clusters() == 6            # Ditto regime
+
+
+def test_local_sgd_prox_pulls_toward_reference():
+    clients, _, _, params = _setup()
+    ref = jax.tree.map(jnp.zeros_like, params)
+    out = bilevel.local_sgd(LOSS, params, clients[0], lr=0.1, steps=5,
+                            prox_to=ref, lam=10.0)
+    assert float(trees.tree_norm(out)) < float(trees.tree_norm(params))

@@ -1,0 +1,123 @@
+"""Unit + property tests for stochastic federated client clustering."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import ClusterState, UnionFind, adjusted_rand_index
+
+
+def _reps(groups, d=16, noise=0.01, seed=0):
+    """Synthetic Ψ vectors: unit vectors near per-group anchors."""
+    rng = np.random.default_rng(seed)
+    anchors = rng.normal(size=(max(groups) + 1, d))
+    anchors /= np.linalg.norm(anchors, axis=1, keepdims=True)
+    out = []
+    for g in groups:
+        v = anchors[g] + rng.normal(size=d) * noise
+        out.append(v / np.linalg.norm(v))
+    return out
+
+
+def test_union_find_transitive():
+    uf = UnionFind()
+    for i in range(5):
+        uf.add(i)
+    uf.union(0, 1)
+    uf.union(1, 2)
+    assert uf.find(2) == uf.find(0) == 0      # smallest id wins
+    assert uf.find(3) == 3
+
+
+def test_merge_recovers_groups():
+    groups = [0, 0, 1, 1, 2, 2, 0]
+    st_ = ClusterState(tau=0.8)
+    st_.observe(range(len(groups)), _reps(groups))
+    st_.merge_round()
+    assign = st_.assignment()
+    ari = adjusted_rand_index([assign[i] for i in range(len(groups))], groups)
+    assert ari == 1.0
+    assert st_.n_clusters() == 3
+
+
+def test_tau_one_never_merges():
+    """τ=1 ⇒ personalized regime (paper §3.4: Ditto)."""
+    groups = [0, 0, 0, 0]
+    st_ = ClusterState(tau=1.0000001)
+    st_.observe(range(4), _reps(groups))
+    st_.merge_round()
+    assert st_.n_clusters() == 4
+
+
+def test_tau_minus_one_merges_all():
+    """τ=−1 ⇒ global regime (paper §3.4: FedProx/FedAvg)."""
+    groups = [0, 1, 2, 3]
+    st_ = ClusterState(tau=-1.0)
+    st_.observe(range(4), _reps(groups, noise=0.5))
+    st_.merge_round()
+    assert st_.n_clusters() == 1
+
+
+def test_objective_decreases_with_merges():
+    """Eq. 2 objective shrinks as similar clusters merge."""
+    groups = [0, 0, 1, 1]
+    st_ = ClusterState(tau=0.9)
+    st_.observe(range(4), _reps(groups))
+    before = st_.objective()
+    st_.merge_round()
+    after = st_.objective()
+    assert after <= before
+
+
+def test_streaming_observation_partial_participation():
+    """Clients arriving over rounds end in the same partition as all-at-once."""
+    groups = [0, 1, 0, 1, 0, 1, 0, 1]
+    reps = _reps(groups, seed=3)
+    st_all = ClusterState(tau=0.8)
+    st_all.observe(range(8), reps)
+    st_all.merge_round()
+
+    st_stream = ClusterState(tau=0.8)
+    for start in range(0, 8, 2):          # 25% participation per round
+        st_stream.observe(range(start, start + 2), reps[start:start + 2])
+        st_stream.merge_round()
+    a1, a2 = st_all.assignment(), st_stream.assignment()
+    ari = adjusted_rand_index([a1[i] for i in range(8)], [a2[i] for i in range(8)])
+    assert ari == 1.0
+
+
+def test_infer_new_client():
+    groups = [0, 0, 1, 1]
+    reps = _reps(groups + [0, 1], seed=5)
+    st_ = ClusterState(tau=0.8)
+    st_.observe(range(4), reps[:4])
+    st_.merge_round()
+    root0, sim0 = st_.infer(reps[4])      # near group 0
+    assert root0 is not None and sim0 >= 0.8
+    assert st_.uf.find(0) == root0
+    far = np.ones(16) / 4.0               # unrelated direction
+    root_new, _ = st_.infer(far / np.linalg.norm(far))
+    assert root_new is None               # opens a new cluster
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=2, max_size=30))
+def test_merge_idempotent(groups):
+    """Running merge_round twice with no new observations is a no-op."""
+    st_ = ClusterState(tau=0.8)
+    st_.observe(range(len(groups)), _reps(groups, seed=7))
+    st_.merge_round()
+    k1 = st_.n_clusters()
+    merges = st_.merge_round()
+    assert merges == [] or st_.n_clusters() <= k1
+    st_.merge_round()
+    assert st_.n_clusters() == st_.n_clusters()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 20), st.integers(0, 1000))
+def test_ari_identity_and_permutation(n, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 3, size=n)
+    assert adjusted_rand_index(labels, labels) == pytest.approx(1.0)
+    perm = (labels + 1) % 3               # relabeled partition, same structure
+    assert adjusted_rand_index(labels, perm) == pytest.approx(1.0)

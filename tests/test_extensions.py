@@ -1,0 +1,96 @@
+"""Beyond-paper extensions: robust aggregators, dynamic join/leave,
+Dirichlet partitions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StoCFL, StoCFLConfig
+from repro.core.aggregators import (krum_select, mean_aggregate,
+                                    median_aggregate, trimmed_mean_aggregate)
+from repro.data import rotated
+from repro.data.dirichlet import dirichlet_label_skew, quantity_skew
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+EVAL = jax.jit(lambda p, b: simple.accuracy(p, b, TASK))
+
+
+def _stack(trees_list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees_list)
+
+
+def test_aggregators_agree_on_identical_updates():
+    t = {"w": jnp.ones((4,)) * 3.0}
+    stacked = _stack([t, t, t])
+    for agg in (mean_aggregate, median_aggregate, trimmed_mean_aggregate, krum_select):
+        out = agg(stacked, [1.0, 1.0, 1.0])
+        np.testing.assert_allclose(np.asarray(out["w"]), 3.0)
+
+
+def test_median_krum_resist_byzantine():
+    """One poisoned update (×1000) must not move robust aggregates much."""
+    good = [{"w": jnp.ones((8,)) + 0.01 * i} for i in range(4)]
+    bad = {"w": jnp.ones((8,)) * 1000.0}
+    stacked = _stack(good + [bad])
+    w = [1.0] * 5
+    mean = mean_aggregate(stacked, w)
+    med = median_aggregate(stacked, w)
+    krum = krum_select(stacked, w, f=1)
+    assert float(jnp.max(mean["w"])) > 100.0          # mean is poisoned
+    assert float(jnp.max(med["w"])) < 2.0             # median is not
+    assert float(jnp.max(krum["w"])) < 2.0            # krum picks a good one
+
+
+def test_stocfl_with_median_aggregator_survives_poison():
+    clients, tc, tests = rotated(n_clusters=2, n_clients=16, n_per=64, seed=0)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    # poison one client's labels
+    clients[3] = {"x": clients[3]["x"], "y": (clients[3]["y"] + 5) % 10}
+    params = simple.init(jax.random.PRNGKey(0), TASK)
+    tr = StoCFL(LOSS, params, clients,
+                StoCFLConfig(tau=0.5, lam=0.05, lr=0.1, local_steps=3,
+                             sample_rate=1.0, seed=0, aggregator="median"),
+                eval_fn=EVAL)
+    tr.fit(8)
+    tests = {k: jax.tree.map(jnp.asarray, v) for k, v in tests.items()}
+    res = tr.evaluate(tests, tc)
+    assert res["cluster_avg"] > 0.8
+
+
+def test_dynamic_join_leave():
+    all_clients, tc, _ = rotated(n_clusters=2, n_clients=18, n_per=64, seed=2)
+    all_clients = [jax.tree.map(jnp.asarray, c) for c in all_clients]
+    params = simple.init(jax.random.PRNGKey(0), TASK)
+    tr = StoCFL(LOSS, params, all_clients[:16],
+                StoCFLConfig(tau=0.5, lam=0.05, lr=0.1, local_steps=3,
+                             sample_rate=0.5, seed=0))
+    tr.fit(10)
+    k_before = tr.state.n_clusters()
+    # join: same-distribution client lands in an existing cluster
+    cid = tr.join_client(all_clients[16])
+    assert tr.n == 17
+    assert tr.state.n_clusters() == k_before
+    joined_root = tr.state.uf.find(cid)
+    majority = [tc[m] for m in tr.state.clusters()[joined_root] if m < 16]
+    assert max(set(majority), key=majority.count) == tc[16]
+    # leave: client excluded from sampling, cluster model persists
+    tr.leave_client(cid)
+    for _ in range(3):
+        assert cid not in tr.sample_clients()
+    assert joined_root in tr.models or joined_root in [tr.state.uf.find(i) for i in range(16)]
+
+
+def test_dirichlet_partition_shapes():
+    clients, marg, test = dirichlet_label_skew(n_clients=12, alpha=0.3, seed=0)
+    assert len(clients) == 12 and marg.shape == (12, 10)
+    np.testing.assert_allclose(marg.sum(axis=1), 1.0, atol=1e-6)
+    # extreme skew: most clients concentrate on few labels
+    assert (marg.max(axis=1) > 0.3).mean() > 0.5
+
+
+def test_quantity_skew_weighting():
+    clients, sizes, _ = quantity_skew(n_clients=10, seed=0)
+    assert all(len(c["y"]) == s for c, s in zip(clients, sizes))
+    assert sizes.min() >= 32

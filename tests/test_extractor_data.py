@@ -1,0 +1,83 @@
+"""Distribution extractor Ψ + synthetic federation properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.extractor import make_extractor
+from repro.data import (femnist_like, hybrid, make_federation, pathological,
+                        rotated, shifted)
+from repro.kernels import ref
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+
+
+def _psi_matrix(setting, n_clients=24, seed=1, **kw):
+    maker = {"rotated": rotated, "shifted": shifted, "pathological": pathological,
+             "hybrid": hybrid, "femnist": femnist_like}[setting]
+    clients, tc, _ = maker(n_clients=n_clients, seed=seed, **kw)
+    params = simple.init(jax.random.PRNGKey(0), TASK)
+    ext = make_extractor(LOSS, params)
+    reps = np.stack([np.asarray(ext(jax.tree.map(jnp.asarray, c))) for c in clients])
+    M = np.asarray(ref.cosine_sim_ref(jnp.asarray(reps)))
+    return M, np.array(tc)
+
+
+def test_psi_unit_norm():
+    clients, _, _ = rotated(n_clusters=2, n_clients=4, seed=0)
+    params = simple.init(jax.random.PRNGKey(0), TASK)
+    ext = make_extractor(LOSS, params)
+    rep = np.asarray(ext(jax.tree.map(jnp.asarray, clients[0])))
+    assert rep.ndim == 1
+    np.testing.assert_allclose(np.linalg.norm(rep), 1.0, atol=1e-5)
+
+
+def test_psi_projection_preserves_similarity():
+    clients, tc, _ = rotated(n_clusters=2, n_clients=12, seed=2)
+    params = simple.init(jax.random.PRNGKey(0), TASK)
+    full = make_extractor(LOSS, params)
+    proj = make_extractor(LOSS, params, project_dim=1024)
+    rf = np.stack([np.asarray(full(jax.tree.map(jnp.asarray, c))) for c in clients])
+    rp = np.stack([np.asarray(proj(jax.tree.map(jnp.asarray, c))) for c in clients])
+    Mf = np.asarray(ref.cosine_sim_ref(jnp.asarray(rf)))
+    Mp = np.asarray(ref.cosine_sim_ref(jnp.asarray(rp)))
+    iu = np.triu_indices(12, 1)
+    corr = np.corrcoef(Mf[iu], Mp[iu])[0, 1]
+    assert corr > 0.9                        # JL sketch preserves structure
+
+
+@pytest.mark.parametrize("setting", ["pathological", "rotated", "shifted", "hybrid"])
+def test_within_exceeds_between(setting):
+    """Fig. 2's premise: same-distribution clients have higher Ψ cosine."""
+    M, tc = _psi_matrix(setting)
+    same = M[(tc[:, None] == tc[None, :]) & ~np.eye(len(tc), dtype=bool)]
+    diff = M[tc[:, None] != tc[None, :]]
+    assert same.mean() > diff.mean() + 0.3
+    assert same.min() > diff.max() - 0.2     # near-separable at τ≈0.5
+
+
+def test_federation_shapes():
+    for setting in ["pathological", "rotated", "shifted", "hybrid", "femnist"]:
+        clients, tc, tests = make_federation(setting, n_clients=16, seed=0)
+        assert len(clients) == len(tc) == 16
+        for c in clients:
+            assert c["x"].shape[0] == c["y"].shape[0]
+            assert c["x"].dtype == np.float32 and c["y"].dtype == np.int32
+        for k, b in tests.items():
+            assert b["x"].shape[0] == b["y"].shape[0] == 512
+
+
+def test_shifted_labels_actually_shift():
+    clients, tc, _ = shifted(n_clusters=4, n_clients=8, seed=0)
+    # same features domain, different label maps: cluster 0 has shift 0
+    ys = [set(np.unique(c["y"])) for c in clients]
+    assert all(len(y) > 1 for y in ys)
+
+
+def test_pathological_label_partition():
+    clients, tc, _ = pathological(n_clients=8, seed=0)
+    groups = [[0, 1, 2], [3, 4], [5, 6], [7, 8, 9]]
+    for c, k in zip(clients, tc):
+        assert set(np.unique(c["y"])) <= set(groups[k])

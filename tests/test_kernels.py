@@ -1,0 +1,115 @@
+"""Per-kernel allclose vs the ref.py oracles, with hypothesis shape/dtype
+sweeps, executed in Pallas interpret mode on CPU (TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.cosine_sim import cosine_sim
+from repro.kernels.prox_update import prox_update_flat
+from repro.kernels.ssm_scan import ssm_scan
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------ cosine_sim
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(3, 70), d=st.integers(2, 160),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_cosine_sim_sweep(n, d, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(n * 1000 + d), (n, d)) * 2).astype(dtype)
+    got = cosine_sim(x, bn=16, bk=64, interpret=True)
+    want = ref.cosine_sim_ref(x)
+    atol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=atol)
+
+
+def test_cosine_sim_diagonal_ones():
+    x = jax.random.normal(KEY, (33, 50))
+    got = cosine_sim(x, bn=16, bk=64, interpret=True)
+    np.testing.assert_allclose(np.diag(np.asarray(got)), 1.0, atol=1e-5)
+
+
+def test_cosine_sim_zero_row_safe():
+    x = jnp.zeros((8, 16)).at[1].set(1.0)
+    got = cosine_sim(x, bn=8, bk=16, interpret=True)
+    assert np.isfinite(np.asarray(got)).all()
+    assert np.asarray(got)[0, 0] == 0.0       # zero vector -> zero sim
+
+
+# ------------------------------------------------------------ prox_update
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 5000), eta=st.floats(0.0, 1.0), lam=st.floats(0.0, 10.0))
+def test_prox_update_sweep(n, eta, lam):
+    ks = jax.random.split(jax.random.PRNGKey(n), 4)
+    t, o, gt, go = (jax.random.normal(k, (n,)) for k in ks)
+    got_t, got_o = prox_update_flat(t, o, gt, go, eta, lam, block=256, interpret=True)
+    want_t, want_o = ref.prox_update_ref(t, o, gt, go, eta, lam)
+    np.testing.assert_allclose(np.asarray(got_t), np.asarray(want_t), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o), atol=1e-5)
+
+
+def test_prox_update_lambda_zero_is_sgd():
+    """λ=0 degenerates to two independent SGD steps (paper §3.4)."""
+    ks = jax.random.split(KEY, 4)
+    t, o, gt, go = (jax.random.normal(k, (300,)) for k in ks)
+    got_t, got_o = prox_update_flat(t, o, gt, go, 0.1, 0.0, block=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_t), np.asarray(t - 0.1 * gt), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(o - 0.1 * go), atol=1e-6)
+
+
+def test_prox_update_pull_toward_omega():
+    """Large λ pulls θ toward ω."""
+    t = jnp.ones((100,)) * 5.0
+    o = jnp.zeros((100,))
+    z = jnp.zeros((100,))
+    got_t, _ = prox_update_flat(t, o, z, z, 0.1, 1.0, block=64, interpret=True)
+    assert float(jnp.max(jnp.abs(got_t))) < 5.0
+
+
+# ------------------------------------------------------------ ssm_scan
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 3), s=st.integers(1, 70), d=st.integers(1, 40),
+       n=st.integers(1, 16))
+def test_ssm_scan_sweep(b, s, d, n):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * s + d), 3)
+    dA = jax.nn.sigmoid(jax.random.normal(k1, (b, s, d, n)))
+    dBx = jax.random.normal(k2, (b, s, d, n)) * 0.1
+    C = jax.random.normal(k3, (b, s, n))
+    got = ssm_scan(dA, dBx, C, bd=16, chunk=16, interpret=True)
+    want = ref.ssm_scan_ref(dA, dBx, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_ssm_scan_decay_zero_is_pointwise():
+    """dA=0 ⇒ h_t = dBx_t: scan degenerates to a pointwise contraction."""
+    b, s, d, n = 2, 10, 8, 4
+    dBx = jax.random.normal(KEY, (b, s, d, n))
+    C = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, n))
+    got = ssm_scan(jnp.zeros((b, s, d, n)), dBx, C, bd=8, chunk=8, interpret=True)
+    want = jnp.einsum("bsdn,bsn->bsd", dBx, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ------------------------------------------------------------ ops wrappers
+def test_ops_backend_agreement():
+    x = jax.random.normal(KEY, (20, 30))
+    np.testing.assert_allclose(
+        np.asarray(ops.pairwise_cosine(x, backend="jnp")),
+        np.asarray(cosine_sim(x, bn=16, bk=16, interpret=True)), atol=1e-5)
+
+
+def test_prox_update_tree_matches_flat():
+    tree = {"a": jax.random.normal(KEY, (10, 3)), "b": jax.random.normal(KEY, (7,))}
+    om = jax.tree.map(lambda x: x * 0.5, tree)
+    gt = jax.tree.map(lambda x: x * 0.1, tree)
+    go = jax.tree.map(lambda x: x * 0.2, tree)
+    th2, om2 = ops.prox_update_tree(tree, om, gt, go, 0.1, 0.5, backend="jnp")
+    for kk in tree:
+        wt, wo = ref.prox_update_ref(tree[kk].ravel(), om[kk].ravel(),
+                                     gt[kk].ravel(), go[kk].ravel(), 0.1, 0.5)
+        np.testing.assert_allclose(np.asarray(th2[kk]).ravel(), np.asarray(wt), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(om2[kk]).ravel(), np.asarray(wo), atol=1e-6)

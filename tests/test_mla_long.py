@@ -1,0 +1,35 @@
+"""Regression: MLA with q head-dim ≠ v head-dim through the CHUNKED
+attention path (S > query-chunk) — caught by the deepseek dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.models.attention as attn_mod
+from repro.configs import get_config
+from repro.models import build
+
+
+def test_mla_chunked_equals_unchunked(monkeypatch):
+    cfg = get_config("deepseek-v2-236b", smoke=True).with_(dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 24), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    logits_big, _ = model.forward_train(params, batch)       # S < chunk: unchunked
+    monkeypatch.setattr(attn_mod, "_CHUNK", 8)               # force chunked path
+    logits_small, _ = model.forward_train(params, batch)
+    np.testing.assert_allclose(np.asarray(logits_big), np.asarray(logits_small),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_gqa_chunked_equals_unchunked(monkeypatch):
+    cfg = get_config("llama3-8b", smoke=True).with_(dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    logits_big, _ = model.forward_train(params, batch)
+    monkeypatch.setattr(attn_mod, "_CHUNK", 8)
+    logits_small, _ = model.forward_train(params, batch)
+    np.testing.assert_allclose(np.asarray(logits_big), np.asarray(logits_small),
+                               atol=2e-3, rtol=2e-3)

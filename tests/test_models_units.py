@@ -1,0 +1,144 @@
+"""Model building-block unit tests: rope, norms, attention masks, MoE
+routing invariants, mamba scan equivalence, sliding window."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import ssm
+from repro.models.attention import causal_attention, gqa_decode, gqa_init, gqa_prefill
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init
+from repro.models.moe import moe_ffn, moe_init
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 6, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(6), (1, 6))
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.full((1, 1), i))
+        kj = apply_rope(k, jnp.full((1, 1), j))
+        return float(jnp.sum(qi * kj))
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)
+
+
+def test_rmsnorm_scale_invariance():
+    p = rmsnorm_init(8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8))
+    y1 = rmsnorm(p, x)
+    y2 = rmsnorm(p, x * 100.0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4)
+
+
+def test_causal_attention_is_causal():
+    """Changing future tokens must not change past outputs."""
+    cfg = get_config("internlm2-1.8b", smoke=True).with_(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    B, S, H, hd = 1, 12, cfg.n_heads, cfg.resolved_head_dim
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.n_kv_heads, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, cfg.n_kv_heads, hd))
+    out1 = causal_attention(q, k, v, cfg)
+    k2 = k.at[:, -1].set(99.0)
+    v2 = v.at[:, -1].set(99.0)
+    out2 = causal_attention(q, k2, v2, cfg)
+    np.testing.assert_allclose(np.asarray(out1[:, :-1]), np.asarray(out2[:, :-1]),
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(out1[:, -1]), np.asarray(out2[:, -1]))
+
+
+def test_sliding_window_masks_old_tokens():
+    cfg = get_config("internlm2-1.8b", smoke=True).with_(dtype="float32", sliding_window=4)
+    key = jax.random.PRNGKey(0)
+    B, S, H, hd = 1, 16, cfg.n_heads, cfg.resolved_head_dim
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.n_kv_heads, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, cfg.n_kv_heads, hd))
+    out1 = causal_attention(q, k, v, cfg)
+    # tokens more than `window` in the past must not affect the output
+    k2 = k.at[:, 0].set(99.0)
+    v2 = v.at[:, 0].set(99.0)
+    out2 = causal_attention(q, k2, v2, cfg)
+    np.testing.assert_allclose(np.asarray(out1[:, 8:]), np.asarray(out2[:, 8:]), atol=1e-5)
+
+
+def test_sliding_decode_ring_buffer():
+    """Decode past the window: slot wraps, oldest entry evicted."""
+    cfg = get_config("internlm2-1.8b", smoke=True).with_(dtype="float32", sliding_window=8)
+    key = jax.random.PRNGKey(0)
+    p = gqa_init(key, cfg)
+    x = jax.random.normal(key, (1, 1, cfg.d_model))
+    cache = {"k": jnp.zeros((1, 8, cfg.n_kv_heads, cfg.resolved_head_dim)),
+             "v": jnp.zeros((1, 8, cfg.n_kv_heads, cfg.resolved_head_dim))}
+    out, cache = gqa_decode(p, x, cache, jnp.int32(9), cfg)   # pos 9 -> slot 1
+    assert np.isfinite(np.asarray(out)).all()
+    assert not np.allclose(np.asarray(cache["k"][:, 1]), 0.0)
+    assert np.allclose(np.asarray(cache["k"][:, 2]), 0.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(tokens=st.integers(8, 64), e=st.sampled_from([2, 4]), k=st.integers(1, 2))
+def test_moe_combine_weights_sum(tokens, e, k):
+    """Per-token combine weights sum to ≤1 (1 when nothing dropped)."""
+    cfg = get_config("phi3.5-moe-42b-a6.6b", smoke=True).with_(
+        n_experts=e, moe_top_k=k, capacity_factor=8.0, dtype="float32")
+    key = jax.random.PRNGKey(tokens)
+    params = moe_init(key, cfg)
+    x = jax.random.normal(key, (2, tokens, cfg.d_model), jnp.float32) * 0.1
+    out, aux = moe_ffn(params, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0.0
+
+
+def test_moe_zero_capacity_drops_gracefully():
+    cfg = get_config("phi3.5-moe-42b-a6.6b", smoke=True).with_(
+        capacity_factor=0.01, dtype="float32")   # almost everything dropped
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model), jnp.float32)
+    out, _ = moe_ffn(params, x, cfg)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_mamba_chunked_scan_matches_sequential():
+    """Chunked associative scan == naive sequential recurrence."""
+    B, S, D, N = 2, 40, 6, 4
+    key = jax.random.PRNGKey(0)
+    dA = jax.nn.sigmoid(jax.random.normal(key, (B, S, D, N)))
+    dBx = jax.random.normal(jax.random.fold_in(key, 1), (B, S, D, N)) * 0.2
+    h0 = jnp.zeros((B, D, N))
+    out_c, last_c = ssm._chunked_scan(dA, dBx, h0, chunk=8)
+    h = h0
+    outs = []
+    for t in range(S):
+        h = dA[:, t] * h + dBx[:, t]
+        outs.append(h)
+    out_s = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(last_c), np.asarray(out_s[:, -1]), atol=1e-5)
+
+
+def test_mamba1_decode_steps_match_prefill():
+    """Running decode token-by-token == one prefill pass (state equality)."""
+    cfg = get_config("falcon-mamba-7b", smoke=True).with_(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = ssm.mamba1_init(key, cfg)
+    x = jax.random.normal(key, (1, 6, cfg.d_model)) * 0.5
+    out_pre, cache_pre = ssm.mamba1_prefill(p, x, cfg)
+    cache = {"h": jnp.zeros_like(cache_pre["h"]), "conv": jnp.zeros_like(cache_pre["conv"])}
+    outs = []
+    for t in range(6):
+        o, cache = ssm.mamba1_decode(p, x[:, t : t + 1], cache, cfg)
+        outs.append(o)
+    out_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_pre), np.asarray(out_step), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache_pre["h"]), np.asarray(cache["h"]),
+                               atol=1e-4)

@@ -1,0 +1,81 @@
+"""Optimizers, schedules, pytree utils, checkpoint round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.optim import adam, constant, cosine_decay, sgd, sgd_momentum, warmup_cosine
+from repro.optim.sgd import apply_updates, clip_by_global_norm
+from repro.utils import trees
+
+
+def _quad_problem():
+    target = {"a": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array([[0.5]])}
+    params = jax.tree.map(jnp.zeros_like, target)
+
+    def loss(p):
+        return trees.tree_dot(trees.tree_sub(p, target), trees.tree_sub(p, target))
+
+    return params, target, loss
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd_momentum(0.05), adam(0.1)])
+def test_optimizers_converge_on_quadratic(opt):
+    params, target, loss = _quad_problem()
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(loss(params)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"x": jnp.ones((4,)) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 20.0)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["x"])), 1.0, rtol=1e-5)
+
+
+def test_schedules():
+    assert float(constant(0.5)(100)) == 0.5
+    cd = cosine_decay(1.0, 100)
+    assert float(cd(0)) == pytest.approx(1.0)
+    assert float(cd(100)) == pytest.approx(0.0, abs=1e-6)
+    wc = warmup_cosine(1.0, 10, 100)
+    assert float(wc(0)) < float(wc(9))
+    assert float(wc(9)) <= 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 50))
+def test_tree_flatten_roundtrip(n):
+    key = jax.random.PRNGKey(n)
+    tree = {"w": jax.random.normal(key, (n, 3)), "b": jax.random.normal(key, (2,)),
+            "nested": {"s": jax.random.normal(key, ())}}
+    vec = trees.tree_flatten_vector(tree)
+    assert vec.shape == (n * 3 + 2 + 1,)
+    back = trees.tree_unflatten_vector(vec, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_tree_weighted_mean():
+    t1 = {"w": jnp.array([2.0])}
+    t2 = {"w": jnp.array([6.0])}
+    out = trees.tree_weighted_mean([t1, t2], [1.0, 3.0])
+    np.testing.assert_allclose(float(out["w"][0]), 5.0)
+
+
+def test_save_load_pytree(tmp_path):
+    tree = {"layers": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "scale": np.float32(2.5) * np.ones((1,), np.float32)}
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    flat = load_pytree(path)
+    assert "layers/w" in flat and "scale" in flat
+    back = load_pytree(path, template=tree)
+    np.testing.assert_allclose(back["layers"]["w"], tree["layers"]["w"])

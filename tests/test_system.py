@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests: StoCFL recovers clusters and beats the
+global model; new-client inference works; checkpoints round-trip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_stocfl, save_stocfl
+from repro.core import StoCFL, StoCFLConfig, adjusted_rand_index
+from repro.core.baselines import FLConfig, FedAvg, IFCA
+from repro.data import rotated, shifted
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+EVAL = jax.jit(lambda p, b: simple.accuracy(p, b, TASK))
+
+
+def _fed(maker=rotated, n_clients=40, seed=1, **kw):
+    clients, tc, tests = maker(n_clusters=4, n_clients=n_clients, seed=seed, **kw)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    tests = {k: jax.tree.map(jnp.asarray, v) for k, v in tests.items()}
+    return clients, tc, tests
+
+
+@pytest.fixture(scope="module")
+def trained():
+    all_clients, all_tc, tests = _fed(n_clients=48)
+    held_idx = [i for i in range(48) if i % 6 == 5]      # 8 held-out clients
+    train_idx = [i for i in range(48) if i % 6 != 5]     # 40 participants
+    clients = [all_clients[i] for i in train_idx]
+    tc = [all_tc[i] for i in train_idx]
+    held = [(all_clients[i], all_tc[i]) for i in held_idx]
+    params = simple.init(jax.random.PRNGKey(0), TASK)
+    tr = StoCFL(LOSS, params, clients,
+                StoCFLConfig(tau=0.5, lam=0.05, lr=0.1, local_steps=5,
+                             sample_rate=0.25, seed=0), eval_fn=EVAL)
+    tr.fit(20)
+    return tr, tc, tests, clients, held
+
+
+def test_cluster_recovery(trained):
+    tr, tc, _, _, _ = trained
+    assign = tr.state.assignment()
+    ids = sorted(assign)
+    ari = adjusted_rand_index([assign[c] for c in ids], [tc[c] for c in ids])
+    assert ari == 1.0
+    assert tr.state.n_clusters() == 4       # K discovered, not given
+
+
+def test_cluster_models_beat_global(trained):
+    tr, tc, tests, _, _ = trained
+    res = tr.evaluate(tests, tc)
+    assert res["cluster_avg"] > res["global_avg"]
+    assert res["cluster_avg"] > 0.9
+
+
+def test_stocfl_beats_fedavg(trained):
+    tr, tc, tests, clients, _ = trained
+    params = simple.init(jax.random.PRNGKey(0), TASK)
+    fed = FedAvg(LOSS, params, clients,
+                 FLConfig(lr=0.1, local_steps=5, sample_rate=0.25, seed=0),
+                 eval_fn=EVAL)
+    fed.fit(20)
+    res_f = fed.evaluate(tests)
+    res_s = tr.evaluate(tests, tc)
+    assert res_s["cluster_avg"] > res_f["cluster_avg"]
+
+
+def test_new_client_inference(trained):
+    """§4.4: an unseen client from a known distribution joins its cluster."""
+    tr, tc, _, _, held = trained
+    hit = 0
+    for c, k in held:
+        out = tr.infer_new_client(c)
+        if out["cluster"] is not None:
+            members = tr.state.clusters()[out["cluster"]]
+            majority = max(set(tc[m] for m in members),
+                           key=lambda g: sum(tc[m] == g for m in members))
+            hit += int(majority == k)
+    assert hit >= 6
+
+
+def test_checkpoint_roundtrip(tmp_path, trained):
+    tr, tc, tests, clients, _ = trained
+    d = str(tmp_path / "ckpt")
+    save_stocfl(d, tr)
+    params = simple.init(jax.random.PRNGKey(0), TASK)
+    tr2 = StoCFL(LOSS, params, clients,
+                 StoCFLConfig(tau=0.5, lam=0.05, lr=0.1, local_steps=5,
+                              sample_rate=0.25, seed=0), eval_fn=EVAL)
+    load_stocfl(d, tr2)
+    assert tr2.state.n_clusters() == tr.state.n_clusters()
+    assert tr2.state.assignment() == tr.state.assignment()
+    r1 = tr.evaluate(tests, tc)
+    r2 = tr2.evaluate(tests, tc)
+    assert r1["cluster_avg"] == pytest.approx(r2["cluster_avg"], abs=1e-6)
+
+
+def test_ifca_runs_and_learns():
+    clients, tc, tests = _fed(n_clients=16)
+    params = simple.init(jax.random.PRNGKey(0), TASK)
+    tr = IFCA(LOSS, params, clients,
+              FLConfig(lr=0.1, local_steps=5, sample_rate=0.5, seed=0),
+              eval_fn=EVAL, n_models=4)
+    tr.fit(10)
+    res = tr.evaluate(tests)
+    assert res["cluster_avg"] > 0.5
