@@ -1,4 +1,4 @@
-"""Shared harness for the paper-table benchmarks."""
+"""Shared harness for the paper-table benchmarks — on the engine API."""
 from __future__ import annotations
 
 import time
@@ -7,8 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CFLSattler, Ditto, FLConfig, FedAvg, FedProx, IFCA,
-                        StoCFL, StoCFLConfig, adjusted_rand_index)
+from repro import engine
+from repro.core import adjusted_rand_index
 from repro.models import simple
 
 TASK = simple.SYNTH_MLP
@@ -28,35 +28,35 @@ def init_params(seed=0):
 
 def run_stocfl(clients, tc, tests, rounds=25, tau=0.5, lam=0.05, lr=0.1,
                local_steps=5, sample_rate=0.2, seed=0):
-    tr = StoCFL(LOSS, init_params(seed), clients,
-                StoCFLConfig(tau=tau, lam=lam, lr=lr, local_steps=local_steps,
-                             sample_rate=sample_rate, seed=seed), eval_fn=EVAL)
+    st = engine.init("stocfl", LOSS, init_params(seed), clients,
+                     engine.EngineConfig(tau=tau, lam=lam, lr=lr,
+                                         local_steps=local_steps,
+                                         sample_rate=sample_rate, seed=seed),
+                     eval_fn=EVAL)
     t0 = time.time()
-    tr.fit(rounds)
+    st = engine.run(st, rounds)
     wall = time.time() - t0
-    assign = tr.state.assignment()
+    assign = st.clusters.assignment()
     ids = sorted(assign)
     ari = adjusted_rand_index([assign[c] for c in ids], [tc[c] for c in ids]) if ids else 0.0
-    res = tr.evaluate(tests, tc)
+    res = engine.evaluate(st, tests, tc)
     return {"acc": res["cluster_avg"], "global_acc": res["global_avg"],
-            "ari": ari, "k": tr.state.n_clusters(),
-            "us_per_round": wall / rounds * 1e6, "trainer": tr}
+            "ari": ari, "k": st.clusters.n_clusters(),
+            "us_per_round": wall / rounds * 1e6, "state": st}
 
 
 def run_baseline(name, clients, tc, tests, rounds=25, lr=0.1, local_steps=5,
                  sample_rate=0.2, seed=0, mu=0.05, n_models=4):
-    cls = {"fedavg": FedAvg, "fedprox": FedProx, "ditto": Ditto,
-           "ifca": IFCA, "cfl": CFLSattler}[name]
-    cfg = FLConfig(lr=lr, local_steps=local_steps,
-                   sample_rate=1.0 if name == "cfl" else sample_rate,
-                   seed=seed, mu=mu)
-    kw = {"n_models": n_models} if name == "ifca" else {}
-    tr = cls(LOSS, init_params(seed), clients, cfg, eval_fn=EVAL, **kw)
+    cfg = engine.EngineConfig(lr=lr, local_steps=local_steps,
+                              sample_rate=1.0 if name == "cfl" else sample_rate,
+                              seed=seed, mu=mu, n_models=n_models)
+    st = engine.init(name, LOSS, init_params(seed), clients, cfg, eval_fn=EVAL)
     t0 = time.time()
-    tr.fit(rounds)
+    st = engine.run(st, rounds)
     wall = time.time() - t0
-    res = tr.evaluate(tests, tc)
-    return {"acc": res["cluster_avg"], "us_per_round": wall / rounds * 1e6}
+    res = engine.evaluate(st, tests, tc)
+    return {"acc": res["cluster_avg"], "us_per_round": wall / rounds * 1e6,
+            "state": st}
 
 
 def emit(rows):

@@ -16,7 +16,7 @@ def run(n_clients=60, rounds=40, seed=1):
         clients, tc, tests = maker(n_clients=n_clients, seed=seed)
         clients, tests = to_dev(clients, tests)
         out = run_stocfl(clients, tc, tests, rounds=rounds, sample_rate=0.1, seed=seed)
-        hist = out["trainer"].history
+        hist = out["state"].history
         k_curve = [h["n_clusters"] for h in hist[:: max(rounds // 8, 1)]]
         rows.append((f"fig3_{name}", out["us_per_round"],
                      f"ari={out['ari']:.3f};K={out['k']};k_curve={'/'.join(map(str, k_curve))}"))

@@ -16,14 +16,15 @@ def run(n_clients=60, rounds=30, seed=1):
     n_train = int(0.7 * n_clients)
     out = run_stocfl(clients[:n_train], tc[:n_train], tests, rounds=rounds,
                      sample_rate=0.2, seed=seed)
-    tr = out["trainer"]
+    st = out["state"]
 
     # participants
     part_acc = out["acc"]
     # unparticipated: infer cluster from Ψ, evaluate that cluster's model
+    from repro import engine
     accs = []
     for cid in range(n_train, n_clients):
-        inf = tr.infer_new_client(clients[cid])
+        inf = engine.infer(st, clients[cid])
         accs.append(float(EVAL(inf["model"], tests[tc[cid]])))
     unpart_acc = float(np.mean(accs))
     return [("table4_generalization", out["us_per_round"],

@@ -1,16 +1,18 @@
-"""Quickstart: StoCFL in ~40 lines.
+"""Quickstart: StoCFL on the functional engine API, in ~40 lines.
 
 Builds a 4-cluster rotated Non-IID federation, runs stochastic clustered
 federated learning with 20% participation, and shows that (a) the latent
 clusters are discovered without knowing K, and (b) cluster models beat a
-single global model.
+single global model. The server is an explicit pytree ``ServerState``;
+every round is a pure transition ``state -> (state, metrics)``.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import StoCFL, StoCFLConfig, adjusted_rand_index
+from repro import engine
+from repro.core import adjusted_rand_index
 from repro.data import rotated
 from repro.models import simple
 
@@ -26,19 +28,21 @@ loss_fn = lambda p, b: simple.loss_fn(p, b, task)
 acc_fn = jax.jit(lambda p, b: simple.accuracy(p, b, task))
 
 # 3. StoCFL: τ controls cluster granularity, λ the global-knowledge pull.
-trainer = StoCFL(
-    loss_fn, params, clients,
-    StoCFLConfig(tau=0.5, lam=0.05, lr=0.1, local_steps=5, sample_rate=0.2),
+#    Any registered strategy ("fedavg", "ifca", ...) runs through the same
+#    init -> run_round loop.
+state = engine.init(
+    "stocfl", loss_fn, params, clients,
+    engine.EngineConfig(tau=0.5, lam=0.05, lr=0.1, local_steps=5, sample_rate=0.2),
     eval_fn=acc_fn,
 )
-trainer.fit(rounds=30, log_every=5)
+state = engine.run(state, rounds=30, log_every=5)
 
 # 4. Results.
-assign = trainer.state.assignment()
+assign = state.clusters.assignment()
 ids = sorted(assign)
 ari = adjusted_rand_index([assign[i] for i in ids], [true_cluster[i] for i in ids])
-res = trainer.evaluate(test_sets, true_cluster)
-print(f"\ndiscovered clusters : {trainer.state.n_clusters()} (true: 4, K was never given)")
+res = engine.evaluate(state, test_sets, true_cluster)
+print(f"\ndiscovered clusters : {state.clusters.n_clusters()} (true: 4, K was never given)")
 print(f"cluster recovery ARI: {ari:.3f}")
 print(f"cluster-model acc   : {res['cluster_avg']:.4f}")
 print(f"global-model acc    : {res['global_avg']:.4f}")

@@ -1,1 +1,3 @@
-from repro.checkpoint.ckpt import load_pytree, save_pytree, save_stocfl, load_stocfl  # noqa: F401
+from repro.checkpoint.ckpt import (load_pytree, load_server_state,  # noqa: F401
+                                   load_stocfl, save_pytree,
+                                   save_server_state, save_stocfl)

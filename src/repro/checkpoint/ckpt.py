@@ -53,6 +53,82 @@ def load_pytree(path: str, template=None):
     return rebuild(template)
 
 
+# ---------------------------------------------------------------------------
+# Engine ServerState checkpoints: the state IS a pytree, so the arrays go
+# through save_pytree wholesale; host bookkeeping (partition, rng position,
+# history) rides in a json manifest. Restoring reattaches onto a freshly
+# engine.init'ed state (which supplies the context + parameter templates)
+# and resumes bit-exactly — including the client-sampling rng.
+# ---------------------------------------------------------------------------
+def save_server_state(dirpath: str, state) -> None:
+    """Checkpoint an ``engine.ServerState`` (any strategy) to a directory."""
+    os.makedirs(dirpath, exist_ok=True)
+    arrays = {"omega": state.omega,
+              "models": {str(k): v for k, v in state.models.items()},
+              "personal": {str(k): v for k, v in state.personal.items()}}
+    save_pytree(os.path.join(dirpath, "arrays.npz"), arrays)
+    manifest = {
+        "strategy": state.strategy,
+        "round": state.round,
+        "rng_state": state.rng_state,
+        "sizes": [int(s) for s in state.sizes],
+        "left": sorted(int(c) for c in state.left),
+        "members": ([list(map(int, m)) for m in state.members]
+                    if state.members is not None else None),
+        "history": list(state.history),
+        "model_keys": sorted(int(k) for k in state.models),
+        "personal_keys": sorted(int(k) for k in state.personal),
+        "clusters": None if state.clusters is None else {
+            "tau": state.clusters.tau,
+            "parent": {str(k): int(v) for k, v in state.clusters.uf.parent.items()},
+            "seen": sorted(int(c) for c in state.clusters.seen),
+        },
+    }
+    with open(os.path.join(dirpath, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if state.clusters is not None:
+        np.savez(os.path.join(dirpath, "reps.npz"),
+                 **{str(k): v for k, v in state.clusters.reps.items()})
+
+
+def load_server_state(dirpath: str, state):
+    """Restore a checkpoint onto a freshly-initialized ``ServerState``.
+
+    ``state`` supplies the context (loss/eval fns, clients, compiled
+    updates) and the parameter-shape templates; the returned state carries
+    the checkpointed arrays, partition, history, and rng position."""
+    from repro.core.clustering import ClusterState
+
+    with open(os.path.join(dirpath, "manifest.json")) as f:
+        man = json.load(f)
+    tmpl = state.ctx.init_params
+    template = {"omega": tmpl,
+                "models": {str(k): tmpl for k in man["model_keys"]},
+                "personal": {str(k): tmpl for k in man["personal_keys"]}}
+    arrays = load_pytree(os.path.join(dirpath, "arrays.npz"), template)
+    clusters = None
+    if man["clusters"] is not None:
+        clusters = ClusterState(man["clusters"]["tau"])
+        clusters.uf.parent = {int(k): int(v)
+                              for k, v in man["clusters"]["parent"].items()}
+        clusters.seen = set(man["clusters"]["seen"])
+        reps_path = os.path.join(dirpath, "reps.npz")
+        if os.path.exists(reps_path):
+            reps = np.load(reps_path)
+            clusters.reps = {int(k): reps[k] for k in reps.files}
+    return state.replace(
+        strategy=man["strategy"], round=man["round"],
+        rng_state=man["rng_state"],
+        sizes=tuple(man["sizes"]), left=frozenset(man["left"]),
+        omega=arrays["omega"],
+        models={int(k): v for k, v in arrays["models"].items()},
+        personal={int(k): v for k, v in arrays["personal"].items()},
+        clusters=clusters,
+        members=(tuple(tuple(m) for m in man["members"])
+                 if man["members"] is not None else None),
+        history=tuple(man["history"]))
+
+
 def save_stocfl(dirpath: str, trainer) -> None:
     """Full StoCFL server state: ω, cluster models, partition, reps."""
     os.makedirs(dirpath, exist_ok=True)

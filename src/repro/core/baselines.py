@@ -1,20 +1,23 @@
-"""Baselines the paper compares against (§4.2): FedAvg, FedProx, Ditto,
-IFCA (hypothesis clustering), CFL (Sattler recursive bi-partitioning).
+"""Baselines the paper compares against (§4.2) — DEPRECATED class shims.
 
-All share the cohort-vmapped local-SGD primitive so comparisons are
-apples-to-apples with StoCFL's trainer.
+The actual methods live in ``repro.engine.strategies`` as registry
+entries ("fedavg", "fedprox", "ditto", "ifca", "cfl") over the same
+vmapped cohort primitives as StoCFL, so comparisons are apples-to-apples
+by construction. These classes keep the original object surface for
+existing callers; new code should use the functional engine API:
+
+    state = engine.init("fedavg", loss_fn, params, clients, cfg, eval_fn=acc)
+    state, rec = engine.run_round(state)
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bilevel
-from repro.utils import trees
+# Module-object import only (see stocfl.py: engine<->core import cycle).
+from repro import engine
 
 
 @dataclasses.dataclass
@@ -26,194 +29,126 @@ class FLConfig:
     mu: float = 0.05          # FedProx / Ditto prox weight
 
 
-class _Base:
-    def __init__(self, loss_fn, init_params, clients, cfg: FLConfig, eval_fn=None):
-        self.loss_fn = loss_fn
+class _EngineShim:
+    """Common shell: holds one ``ServerState``, delegates every method."""
+
+    strategy: str = ""
+
+    def __init__(self, loss_fn, init_params, clients, cfg: FLConfig,
+                 eval_fn=None, **extra):
         self.cfg = cfg
-        self.clients = list(clients)
-        self.n = len(clients)
-        self.eval_fn = eval_fn
-        self.rng = np.random.default_rng(cfg.seed)
-        self.init_params = init_params
-        self.sizes = np.array([int(np.shape(jax.tree.leaves(c)[0])[0]) for c in clients])
+        ecfg = engine.EngineConfig(lr=cfg.lr, local_steps=cfg.local_steps,
+                                   sample_rate=cfg.sample_rate, seed=cfg.seed,
+                                   mu=cfg.mu, **extra)
+        self._st = engine.init(self.strategy, loss_fn, init_params, clients,
+                               ecfg, eval_fn=eval_fn)
 
-    def sample(self):
-        m = max(int(round(self.cfg.sample_rate * self.n)), 1)
-        return self.rng.choice(self.n, size=m, replace=False)
+    # ---------------------------------------------------------- state views
+    @property
+    def server_state(self) -> engine.ServerState:
+        return self._st
 
-    def _stack(self, ids):
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *[self.clients[int(c)] for c in ids])
+    @property
+    def clients(self):
+        return self._st.ctx.clients
+
+    @property
+    def n(self) -> int:
+        return self._st.n_clients
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.asarray(self._st.sizes)
+
+    @property
+    def init_params(self):
+        return self._st.ctx.init_params
+
+    @property
+    def loss_fn(self):
+        return self._st.ctx.loss_fn
+
+    @property
+    def eval_fn(self):
+        return self._st.ctx.eval_fn
+
+    # ------------------------------------------------------------- driving
+    def sample(self) -> np.ndarray:
+        rng_state, ids = engine.sample_clients(self._st)
+        self._st = self._st.replace(rng_state=rng_state)
+        return ids
+
+    def round(self, ids: Optional[Sequence[int]] = None):
+        self._st, rec = engine.run_round(self._st, ids)
+        return rec
 
     def fit(self, rounds: int):
         for _ in range(rounds):
             self.round()
         return self
 
+    def evaluate(self, test_sets, true_cluster=None):
+        return engine.evaluate(self._st, test_sets, true_cluster)
 
-class FedAvg(_Base):
-    def __init__(self, *a, **kw):
-        super().__init__(*a, **kw)
-        self.global_params = self.init_params
-        cfg = self.cfg
-        self._update = jax.jit(jax.vmap(
-            lambda p, b: bilevel.local_sgd(self.loss_fn, p, b, cfg.lr, cfg.local_steps),
-            in_axes=(None, 0)))
 
-    def round(self, ids=None):
-        ids = self.sample() if ids is None else np.asarray(ids)
-        outs = self._update(self.global_params, self._stack(ids))
-        self.global_params = bilevel.aggregate_stacked(outs, self.sizes[ids].astype(np.float32))
+class FedAvg(_EngineShim):
+    strategy = "fedavg"
 
-    def evaluate(self, test_sets: Dict[int, dict], true_cluster=None):
-        accs = {k: float(self.eval_fn(self.global_params, b)) for k, b in test_sets.items()}
-        return {"cluster_avg": float(np.mean(list(accs.values()))), "per": accs}
+    @property
+    def global_params(self):
+        return self._st.omega
+
+    @global_params.setter
+    def global_params(self, value):
+        self._st = self._st.replace(omega=value)
 
 
 class FedProx(FedAvg):
-    def __init__(self, *a, **kw):
-        super().__init__(*a, **kw)
-        cfg = self.cfg
-        self._update = jax.jit(jax.vmap(
-            lambda p, b: bilevel.local_sgd(self.loss_fn, p, b, cfg.lr, cfg.local_steps,
-                                           prox_to=p, lam=cfg.mu),
-            in_axes=(None, 0)))
-        # NOTE: prox_to=p (the broadcast global) is constant through the scan
-        # because local_sgd closes over the *initial* params for the prox.
+    strategy = "fedprox"
 
 
-class Ditto(_Base):
+class Ditto(FedAvg):
     """Global FedAvg + per-client personal models with prox to global."""
+    strategy = "ditto"
 
-    def __init__(self, *a, **kw):
-        super().__init__(*a, **kw)
-        self.global_params = self.init_params
-        self.personal = {i: self.init_params for i in range(self.n)}
-        cfg = self.cfg
-        self._gupd = jax.jit(jax.vmap(
-            lambda p, b: bilevel.local_sgd(self.loss_fn, p, b, cfg.lr, cfg.local_steps),
-            in_axes=(None, 0)))
-        self._pupd = jax.jit(jax.vmap(
-            lambda v, g, b: bilevel.local_sgd(self.loss_fn, v, b, cfg.lr, cfg.local_steps,
-                                              prox_to=g, lam=cfg.mu),
-            in_axes=(0, None, 0)))
-
-    def round(self, ids=None):
-        ids = self.sample() if ids is None else np.asarray(ids)
-        batches = self._stack(ids)
-        g_outs = self._gupd(self.global_params, batches)
-        v_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *[self.personal[int(c)] for c in ids])
-        v_outs = self._pupd(v_stack, self.global_params, batches)
-        self.global_params = bilevel.aggregate_stacked(g_outs, self.sizes[ids].astype(np.float32))
-        for j, c in enumerate(ids):
-            self.personal[int(c)] = jax.tree.map(lambda x: x[j], v_outs)
-
-    def evaluate(self, test_sets: Dict[int, dict], true_cluster: Sequence[int]):
-        """Per true cluster: average of its clients' personal models' acc."""
-        out = {}
-        for tc, batch in test_sets.items():
-            members = [i for i in range(self.n) if true_cluster[i] == tc]
-            accs = [float(self.eval_fn(self.personal[i], batch)) for i in members[:8]]
-            out[tc] = float(np.mean(accs)) if accs else float(self.eval_fn(self.global_params, batch))
-        return {"cluster_avg": float(np.mean(list(out.values()))), "per": out}
+    @property
+    def personal(self):
+        return self._st.personal
 
 
-class IFCA(_Base):
+class IFCA(_EngineShim):
     """Ghosh et al. 2020: M̃ hypothesis models, clients pick argmin loss."""
+    strategy = "ifca"
 
     def __init__(self, loss_fn, init_params, clients, cfg, eval_fn=None,
-                 n_models: int = 4, init_key=0):
-        super().__init__(loss_fn, init_params, clients, cfg, eval_fn)
-        keys = jax.random.split(jax.random.PRNGKey(init_key), n_models)
-        # perturb around init: IFCA needs distinct initializations
-        self.models = [jax.tree.map(
-            lambda x, k=k: x + 0.1 * jax.random.normal(jax.random.fold_in(k, 0), x.shape, x.dtype)
-            if jnp.issubdtype(x.dtype, jnp.floating) else x, init_params) for k in keys]
+                 n_models: int = 4, init_key: int = 0):
+        super().__init__(loss_fn, init_params, clients, cfg, eval_fn=eval_fn,
+                         n_models=n_models, init_key=init_key)
         self.n_models = n_models
-        cfg = self.cfg
-        self._upd = jax.jit(jax.vmap(
-            lambda p, b: bilevel.local_sgd(self.loss_fn, p, b, cfg.lr, cfg.local_steps),
-            in_axes=(0, 0)))
 
-    def _choose(self, batch):
-        losses = [float(self.loss_fn(m, batch)) for m in self.models]
-        return int(np.argmin(losses))
-
-    def round(self, ids=None):
-        ids = self.sample() if ids is None else np.asarray(ids)
-        choices = [self._choose(self.clients[int(c)]) for c in ids]
-        stacked_params = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                      *[self.models[ch] for ch in choices])
-        outs = self._upd(stacked_params, self._stack(ids))
-        for m in range(self.n_models):
-            idx = [j for j, ch in enumerate(choices) if ch == m]
-            if idx:
-                sel = jax.tree.map(lambda x: x[np.array(idx)], outs)
-                self.models[m] = bilevel.aggregate_stacked(
-                    sel, self.sizes[ids[np.array(idx)]].astype(np.float32))
-
-    def evaluate(self, test_sets: Dict[int, dict], true_cluster=None):
-        out = {}
-        for tc, batch in test_sets.items():
-            accs = [float(self.eval_fn(m, batch)) for m in self.models]
-            out[tc] = float(np.max(accs))     # best-model (oracle assignment)
-        return {"cluster_avg": float(np.mean(list(out.values()))), "per": out}
+    @property
+    def models(self):
+        return [self._st.models[m] for m in range(self.n_models)]
 
 
-class CFLSattler(_Base):
-    """Sattler et al. 2020a: full participation; recursively bi-partition a
-    cluster near stationarity: ‖mean Δ‖ < eps_rel · max‖Δᵢ‖ and
-    max‖Δᵢ‖ > eps2 (relative form — scale-free across tasks/lrs).
-
-    Bi-partition: seeds = least-similar pair by update-cosine, greedy
-    assignment to the more similar seed (the standard approximation of the
-    min-cross-similarity split)."""
+class CFLSattler(_EngineShim):
+    """Sattler et al. 2020a recursive bi-partitioning (full participation)."""
+    strategy = "cfl"
 
     def __init__(self, loss_fn, init_params, clients, cfg, eval_fn=None,
                  eps_rel: float = 0.35, eps2: float = 0.01):
-        super().__init__(loss_fn, init_params, clients, cfg, eval_fn)
+        super().__init__(loss_fn, init_params, clients, cfg, eval_fn=eval_fn,
+                         eps_rel=eps_rel, eps2=eps2)
         self.eps_rel, self.eps2 = eps_rel, eps2
-        self.clusters: List[List[int]] = [list(range(self.n))]
-        self.models = [self.init_params]
-        cfg = self.cfg
-        self._upd = jax.jit(jax.vmap(
-            lambda p, b: bilevel.local_sgd(self.loss_fn, p, b, cfg.lr, cfg.local_steps),
-            in_axes=(None, 0)))
 
-    def round(self, ids=None):
-        new_clusters, new_models = [], []
-        for members, model in zip(self.clusters, self.models):
-            outs = self._upd(model, self._stack(members))
-            deltas = jax.tree.map(lambda o, m: o - m, outs, model)
-            flat = np.stack([np.asarray(trees.tree_flatten_vector(
-                jax.tree.map(lambda x: x[j], deltas))) for j in range(len(members))])
-            new_model = bilevel.aggregate_stacked(outs, self.sizes[np.array(members)].astype(np.float32))
-            mean_norm = float(np.linalg.norm(flat.mean(axis=0)))
-            max_norm = float(np.linalg.norm(flat, axis=1).max())
-            if len(members) > 2 and max_norm > self.eps2 and mean_norm < self.eps_rel * max_norm:
-                sims = (flat / (np.linalg.norm(flat, axis=1, keepdims=True) + 1e-12))
-                M = sims @ sims.T
-                i, j = np.unravel_index(np.argmin(M), M.shape)
-                c1 = [m for idx, m in enumerate(members) if M[idx, i] >= M[idx, j]]
-                c2 = [m for m in members if m not in c1]
-                if c1 and c2:
-                    new_clusters += [c1, c2]
-                    new_models += [new_model, new_model]
-                    continue
-            new_clusters.append(members)
-            new_models.append(new_model)
-        self.clusters, self.models = new_clusters, new_models
+    @property
+    def clusters(self):
+        return [list(m) for m in self._st.members]
+
+    @property
+    def models(self):
+        return [self._st.models[k] for k in range(len(self._st.members))]
 
     def cluster_of(self, cid: int) -> int:
-        for k, c in enumerate(self.clusters):
-            if cid in c:
-                return k
-        return 0
-
-    def evaluate(self, test_sets: Dict[int, dict], true_cluster: Sequence[int]):
-        out = {}
-        for tc, batch in test_sets.items():
-            ks = [self.cluster_of(i) for i in range(self.n) if true_cluster[i] == tc]
-            k = max(set(ks), key=ks.count)
-            out[tc] = float(self.eval_fn(self.models[k], batch))
-        return {"cluster_avg": float(np.mean(list(out.values()))), "per": out,
-                "n_clusters": len(self.clusters)}
+        from repro.engine.registry import get_strategy
+        return get_strategy("cfl").cluster_of(self._st, cid)

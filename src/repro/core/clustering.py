@@ -56,6 +56,16 @@ class ClusterState:
         self.reps: Dict[int, np.ndarray] = {}       # client id -> Ψ(D_i)
         self.seen: set = set()                      # P in Algorithm 1
 
+    def copy(self) -> "ClusterState":
+        """Shallow-structural copy (reps arrays shared — they are never
+        mutated in place). Lets the engine's pure transitions fork the
+        clustering bookkeeping without touching the input state."""
+        new = ClusterState(self.tau)
+        new.uf.parent = dict(self.uf.parent)
+        new.reps = dict(self.reps)
+        new.seen = set(self.seen)
+        return new
+
     # ------------------------------------------------------------- observe
     def observe(self, client_ids: Sequence[int], reps) -> List[int]:
         """Record Ψ for newly-seen clients. Returns the new ids."""
@@ -123,21 +133,63 @@ class ClusterState:
         iu = np.triu_indices(M.shape[0], k=1)
         return float(np.sum(M[iu]))
 
-    # ------------------------------------------------------------- inference
-    def infer(self, rep) -> Tuple[Optional[int], float]:
-        """§4.4: nearest cluster for a new client's Ψ.
+    # ------------------------------------------------------------- departure
+    def remove(self, cid: int) -> Dict[int, int]:
+        """Drop a departed client from reps/seen AND the union-find so
+        ``cluster_means()``/``assignment()`` and root lookups stay
+        consistent. Each affected cluster is re-rooted at its smallest
+        remaining member id; returns {old_root: new_root} for clusters
+        whose root changed, so callers can remap cluster-model keys.
+        (A cluster emptied by the departure simply disappears from the
+        partition; its model is the caller's to keep or drop.)"""
+        cid = int(cid)
+        groups: Dict[int, List[int]] = {}
+        for i in self.uf.parent:
+            groups.setdefault(self.uf.find(i), []).append(i)
+        self.reps.pop(cid, None)
+        self.seen.discard(cid)
+        if cid not in self.uf.parent:
+            return {}
+        parent: Dict[int, int] = {}
+        remap: Dict[int, int] = {}
+        for root, members in groups.items():
+            members = [m for m in members if m != cid]
+            if not members:
+                continue
+            new_root = min(members)
+            if new_root != root:
+                remap[root] = new_root
+            for m in members:
+                parent[m] = new_root
+        self.uf.parent = parent
+        return remap
 
-        Returns (root or None, best cosine). None ⇒ caller should open a
-        new cluster (seeding its model from the nearest cluster)."""
+    # ------------------------------------------------------------- inference
+    def nearest(self, rep) -> Tuple[Optional[int], Optional[int], float]:
+        """Shared nearest-cluster-by-Ψ lookup (§4.4).
+
+        Returns (root or None, nearest_root, best cosine): root is the
+        nearest cluster iff its cosine clears τ; nearest_root is the
+        nearest cluster regardless (the seed donor when opening a fresh
+        cluster). Both None when no client has been observed yet."""
+        if not self.reps:
+            return None, None, 0.0
         roots, means = self.cluster_means()
         rep = np.asarray(rep, np.float32)
         rn = rep / (np.linalg.norm(rep) + 1e-12)
         mn = means / (np.linalg.norm(means, axis=1, keepdims=True) + 1e-12)
         sims = mn @ rn
         best = int(np.argmax(sims))
-        if sims[best] >= self.tau:
-            return roots[best], float(sims[best])
-        return None, float(sims[best])
+        root = roots[best] if sims[best] >= self.tau else None
+        return root, roots[best], float(sims[best])
+
+    def infer(self, rep) -> Tuple[Optional[int], float]:
+        """§4.4: nearest cluster for a new client's Ψ.
+
+        Returns (root or None, best cosine). None ⇒ caller should open a
+        new cluster (seeding its model from the nearest cluster)."""
+        root, _, sim = self.nearest(rep)
+        return root, sim
 
 
 def adjusted_rand_index(labels_a: Sequence[int], labels_b: Sequence[int]) -> float:

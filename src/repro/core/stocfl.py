@@ -1,9 +1,16 @@
-"""StoCFL trainer — Algorithm 1 end-to-end (host orchestration).
+"""StoCFL trainer — DEPRECATED class shim over ``repro.engine``.
 
-Simulates the federated system: the sampled cohort's bi-level updates run
-as a single vmapped/jitted computation (clients on the leading axis — the
-production mesh's client axis), the clustering service consumes Ψ
-representations, and cluster-model merges follow partition merges.
+New code should use the functional engine API directly:
+
+    from repro import engine
+    state = engine.init("stocfl", loss_fn, params, clients,
+                        engine.EngineConfig(tau=0.5, lam=0.05), eval_fn=acc)
+    state, rec = engine.run_round(state)
+
+This class keeps the original object surface (``.round()``, ``.fit()``,
+``.state``, ``.models``, ``.omega``, join/leave/infer) for existing
+callers and checkpoints; every method delegates to the engine's pure
+transitions, with the ``ServerState`` held as the single source of truth.
 
 Degenerations (paper §3.4): τ=1 → Ditto; τ=−1 → FedProx-family;
 λ=0 → conventional CFL; λ=0 ∧ τ=−1 → FedAvg.
@@ -11,17 +18,14 @@ Degenerations (paper §3.4): τ=1 → Ditto; τ=−1 → FedProx-family;
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bilevel
-from repro.core.aggregators import AGGREGATORS
-from repro.core.clustering import ClusterState
-from repro.core.extractor import make_extractor
-from repro.utils import trees
+# Module-object import only: repro.engine imports repro.core (clustering,
+# bilevel), which imports this shim — binding the module and resolving
+# attributes at call time keeps the cycle harmless.
+from repro import engine
 
 
 @dataclasses.dataclass
@@ -43,74 +47,87 @@ class StoCFL:
     def __init__(self, loss_fn: Callable, init_params, clients: Sequence[dict],
                  cfg: StoCFLConfig, eval_fn: Optional[Callable] = None,
                  leaf_filter: Optional[Callable] = None):
-        self.loss_fn = loss_fn
         self.cfg = cfg
-        self.clients = list(clients)
-        self.n = len(clients)
-        self.eval_fn = eval_fn                        # (params, batch) -> metric
-        self.rng = np.random.default_rng(cfg.seed)
+        ecfg = engine.EngineConfig(
+            tau=cfg.tau, lam=cfg.lam, lr=cfg.lr, local_steps=cfg.local_steps,
+            sample_rate=cfg.sample_rate, seed=cfg.seed,
+            aggregator=cfg.aggregator, project_dim=cfg.project_dim)
+        self._st = engine.init("stocfl", loss_fn, init_params, clients, ecfg,
+                               eval_fn=eval_fn, leaf_filter=leaf_filter)
 
-        self.omega = init_params
-        self.init_params = init_params
-        self.anchor = init_params                     # ψ = ω₀ (paper §4.2)
-        self.state = ClusterState(cfg.tau)
-        self.models: Dict[int, object] = {}           # root -> θ_k (lazy: default ω₀)
-        self.sizes = np.array([int(np.shape(jax.tree.leaves(c)[0])[0]) for c in clients])
+    # ---------------------------------------------------------- state views
+    @property
+    def server_state(self) -> engine.ServerState:
+        """The underlying engine state (pytree; checkpoint/shard this)."""
+        return self._st
 
-        self.extractor = make_extractor(loss_fn, self.anchor, cfg.project_dim,
-                                        leaf_filter=leaf_filter)
-        self.cohort_update = bilevel.make_cohort_update(
-            loss_fn, cfg.lr, cfg.lam, cfg.local_steps, backend="jnp")
-        self.history: List[dict] = []
+    @property
+    def omega(self):
+        return self._st.omega
+
+    @omega.setter
+    def omega(self, value):
+        self._st = self._st.replace(omega=value)
+
+    @property
+    def models(self):
+        return self._st.models
+
+    @models.setter
+    def models(self, value):
+        self._st = self._st.replace(models=dict(value))
+
+    @property
+    def state(self):
+        return self._st.clusters
+
+    @property
+    def history(self):
+        return list(self._st.history)
+
+    @history.setter
+    def history(self, value):
+        self._st = self._st.replace(history=tuple(value))
+
+    @property
+    def clients(self):
+        return self._st.ctx.clients
+
+    @property
+    def n(self) -> int:
+        return self._st.n_clients
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.asarray(self._st.sizes)
+
+    @property
+    def init_params(self):
+        return self._st.ctx.init_params
+
+    @property
+    def anchor(self):
+        return self._st.ctx.init_params          # ψ = ω₀ (paper §4.2)
+
+    @property
+    def loss_fn(self):
+        return self._st.ctx.loss_fn
+
+    @property
+    def eval_fn(self):
+        return self._st.ctx.eval_fn
+
+    @property
+    def extractor(self):
+        return self._st.ctx.extractor
 
     # ------------------------------------------------------------- models
     def cluster_model(self, root: int):
-        return self.models.get(root, self.init_params)
-
-    def _merge_models(self, merges):
-        for keep, absorb in merges:
-            m_keep = self.models.pop(keep, self.init_params)
-            m_abs = self.models.pop(absorb, self.init_params)
-            self.models[keep] = trees.tree_weighted_mean([m_keep, m_abs], [1.0, 1.0])
+        return self._st.cluster_model(root)
 
     # ------------------------------------------------------------- rounds
     def round(self, client_ids: Optional[Sequence[int]] = None) -> dict:
-        cfg = self.cfg
-        if client_ids is None:
-            client_ids = self.sample_clients()
-        client_ids = np.asarray(client_ids)
-
-        # --- stochastic client clustering (lines 5-13)
-        new_ids = [int(c) for c in client_ids if c not in self.state.seen]
-        if new_ids:
-            reps = [np.asarray(self.extractor(self.clients[c])) for c in new_ids]
-            self.state.observe(new_ids, reps)
-        merges = self.state.merge_round()
-        if merges:
-            self._merge_models(merges)
-
-        # --- bi-level CFL (lines 14-19): one SPMD cohort step
-        roots = [self.state.uf.find(int(c)) for c in client_ids]
-        thetas = jax.tree.map(lambda *xs: jnp.stack(xs),
-                              *[self.cluster_model(r) for r in roots])
-        batches = jax.tree.map(lambda *xs: jnp.stack(xs),
-                               *[self.clients[int(c)] for c in client_ids])
-        thetas_i, omegas_i = self.cohort_update(thetas, self.omega, batches)
-
-        w = self.sizes[client_ids].astype(np.float32)
-        self.omega = AGGREGATORS[self.cfg.aggregator](omegas_i, w)
-
-        for root in sorted(set(roots)):
-            idx = [i for i, r in enumerate(roots) if r == root]
-            sel = jax.tree.map(lambda x: x[np.array(idx)], thetas_i)
-            self.models[root] = bilevel.aggregate_stacked(sel, w[np.array(idx)])
-
-        rec = {
-            "n_clusters": self.state.n_clusters(),
-            "objective": self.state.objective(),
-            "sampled": len(client_ids),
-        }
-        self.history.append(rec)
+        self._st, rec = engine.run_round(self._st, client_ids)
         return rec
 
     def fit(self, rounds: int, log_every: int = 0):
@@ -122,84 +139,24 @@ class StoCFL:
 
     # ------------------------------------------------------------- eval
     def client_root(self, cid: int) -> int:
-        return self.state.uf.find(int(cid))
+        return self._st.client_root(cid)
 
-    def evaluate(self, test_sets: Dict[int, dict], true_cluster: Sequence[int]):
-        """test_sets: true-cluster-id -> batch; true_cluster[i] = ground
-        truth cluster of client i. Each true cluster is evaluated with the
-        model of the learned cluster holding most of its clients; the
-        global model ω is evaluated on everything."""
-        assert self.eval_fn is not None
-        assign = self.state.assignment()
-        out, glob = {}, {}
-        for tc, batch in test_sets.items():
-            roots = [assign[c] for c in assign if true_cluster[c] == tc]
-            if roots:
-                root = max(set(roots), key=roots.count)
-                model = self.cluster_model(root)
-            else:
-                model = self.omega
-            out[tc] = float(self.eval_fn(model, batch))
-            glob[tc] = float(self.eval_fn(self.omega, batch))
-        return {"cluster": out, "cluster_avg": float(np.mean(list(out.values()))),
-                "global": glob, "global_avg": float(np.mean(list(glob.values())))}
+    def evaluate(self, test_sets, true_cluster):
+        return engine.evaluate(self._st, test_sets, true_cluster)
 
     # ------------------------------------------------------------- §4.4 / §5
     def join_client(self, batch) -> int:
-        """Dynamic join (paper §5 future work): register a new client,
-        infer its cluster via Ψ (or open a fresh cluster seeded from the
-        nearest), and include it in future sampling rounds."""
-        cid = self.n
-        self.clients.append(batch)
-        self.n += 1
-        self.sizes = np.append(self.sizes,
-                               int(np.shape(jax.tree.leaves(batch)[0])[0]))
-        rep = np.asarray(self.extractor(batch))
-        # infer against the PRE-EXISTING clusters, then register
-        root, sim = self.state.infer(rep) if self.state.reps else (None, 0.0)
-        if root is None and self.state.reps:
-            roots, means = self.state.cluster_means()
-            near = roots[int(np.argmax(
-                (means / (np.linalg.norm(means, axis=1, keepdims=True) + 1e-12))
-                @ (rep / (np.linalg.norm(rep) + 1e-12))))]
-        else:
-            near = root
-        self.state.observe([cid], [rep])
-        if root is not None:
-            keep, absorb = min(root, cid), max(root, cid)
-            self.state.uf.union(keep, absorb)
-            # cid inherits the cluster model (no merge needed: cid had none)
-        elif near is not None:
-            # opens a new cluster, seeded from the nearest cluster's model
-            self.models[self.state.uf.find(cid)] = self.cluster_model(near)
+        self._st, cid = engine.join(self._st, batch)
         return cid
 
     def leave_client(self, cid: int) -> None:
-        """Dynamic leave: drop the client's Ψ from the clustering state;
-        its cluster keeps its model (knowledge persists, §5)."""
-        self.state.reps.pop(cid, None)
-        self.state.seen.discard(cid)
-        self._left = getattr(self, "_left", set())
-        self._left.add(int(cid))
+        self._st = engine.leave(self._st, cid)
 
     def sample_clients(self) -> np.ndarray:
-        m = max(int(round(self.cfg.sample_rate * self.n)), 1)
-        left = getattr(self, "_left", set())
-        pool = np.array([i for i in range(self.n) if i not in left])
-        return self.rng.choice(pool, size=min(m, len(pool)), replace=False)
+        rng_state, ids = engine.sample_clients(self._st)
+        self._st = self._st.replace(rng_state=rng_state)
+        return ids
 
-    # ------------------------------------------------------------- §4.4
     def infer_new_client(self, batch):
         """Cluster inference for a newly-joined client (§4.4)."""
-        rep = np.asarray(self.extractor(batch))
-        root, sim = self.state.infer(rep)
-        if root is None:
-            # new cluster seeded from the nearest cluster's model
-            roots, means = self.state.cluster_means()
-            near = roots[int(np.argmax(
-                (means / (np.linalg.norm(means, axis=1, keepdims=True) + 1e-12))
-                @ (rep / (np.linalg.norm(rep) + 1e-12))))]
-            return {"cluster": None, "seed_from": near, "similarity": sim,
-                    "model": self.cluster_model(near)}
-        return {"cluster": root, "seed_from": root, "similarity": sim,
-                "model": self.cluster_model(root)}
+        return engine.infer(self._st, batch)

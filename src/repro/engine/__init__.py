@@ -1,0 +1,16 @@
+"""repro.engine — functional federated-learning engine.
+
+An explicit, pytree-serializable ``ServerState``, pure transitions
+(``init`` / ``run_round`` / ``join`` / ``leave`` / ``evaluate`` /
+``infer``), and a registry-based ``Strategy`` protocol implemented by
+``stocfl`` and the paper's baselines (``fedavg``, ``fedprox``, ``ditto``,
+``ifca``, ``cfl``). See ``repro.engine.api`` for the full contract.
+"""
+from repro.engine.api import (evaluate, infer, init, join, leave,  # noqa: F401
+                              run, run_round, sample_clients)
+from repro.engine.registry import (STRATEGIES, get_strategy,  # noqa: F401
+                                   list_strategies, register)
+from repro.engine.state import (EngineConfig, EngineContext,  # noqa: F401
+                                ServerState)
+from repro.engine import strategies  # noqa: F401  (installs the registry)
+from repro.engine.strategies import Strategy  # noqa: F401

@@ -1,0 +1,101 @@
+"""Functional engine API: pure transitions over ``ServerState``.
+
+    state = engine.init("stocfl", loss_fn, params, clients, cfg, eval_fn=acc)
+    state, rec = engine.run_round(state)            # samples internally
+    state, rec = engine.run_round(state, [0, 3, 7]) # or explicit cohort
+    state, cid = engine.join(state, new_batch)      # §5 dynamic membership
+    state = engine.leave(state, cid)
+    engine.evaluate(state, test_sets, true_cluster)
+    engine.infer(state, unseen_batch)               # §4.4 cluster inference
+
+Every transition returns a NEW state; the input is never mutated (the one
+deliberate exception: ``join`` appends the new client's dataset to the
+context's client list — the context is the world, not the state). Client
+sampling draws from the numpy bit-generator state stored IN the state, so
+a checkpointed run resumes bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.extractor import make_extractor
+from repro.engine.registry import get_strategy
+from repro.engine.state import EngineConfig, EngineContext, ServerState
+
+
+def init(strategy: str, loss_fn, init_params, clients,
+         cfg: Optional[EngineConfig] = None, eval_fn=None,
+         leaf_filter=None, mesh=None) -> ServerState:
+    """Build the static context and the strategy's initial ``ServerState``."""
+    cfg = cfg or EngineConfig()
+    ctx = EngineContext(loss_fn=loss_fn, init_params=init_params,
+                        clients=list(clients), cfg=cfg, eval_fn=eval_fn,
+                        leaf_filter=leaf_filter, mesh=mesh)
+    strat = get_strategy(strategy)
+    if strat.needs_extractor:
+        ctx.extractor = make_extractor(loss_fn, init_params, cfg.project_dim,
+                                       leaf_filter=leaf_filter)
+    return strat.init_state(ctx)
+
+
+def sample_clients(state: ServerState):
+    """Draw one round's cohort; returns (advanced rng_state, client ids)."""
+    cfg = state.ctx.cfg
+    rng = state.rng()
+    m = max(int(round(cfg.sample_rate * state.n_clients)), 1)
+    pool = np.array([i for i in range(state.n_clients) if i not in state.left])
+    ids = rng.choice(pool, size=min(m, len(pool)), replace=False)
+    return rng.bit_generator.state, ids
+
+
+def run_round(state: ServerState, client_ids: Optional[Sequence[int]] = None):
+    """One server round: (state, client_ids?) -> (state', metrics)."""
+    strat = get_strategy(state.strategy)
+    rng_state = state.rng_state
+    if client_ids is None:
+        if strat.full_participation:
+            client_ids = np.array([i for i in range(state.n_clients)
+                                   if i not in state.left])
+        else:
+            rng_state, client_ids = sample_clients(state)
+    client_ids = np.asarray(client_ids)
+    if client_ids.size == 0:
+        raise ValueError("run_round needs a non-empty cohort "
+                         "(no clients sampled — all departed?)")
+    state, rec = strat.round(state.ctx, state, client_ids)
+    state = state.replace(round=state.round + 1, rng_state=rng_state,
+                          history=state.history + (dict(rec),))
+    return state, rec
+
+
+def run(state: ServerState, rounds: int, log_every: int = 0) -> ServerState:
+    """Convenience loop over ``run_round``."""
+    for t in range(rounds):
+        state, rec = run_round(state)
+        if log_every and t % log_every == 0:
+            extras = "".join(f" {k}={v:.3f}" if isinstance(v, float) else f" {k}={v}"
+                             for k, v in rec.items())
+            print(f"round {t}:{extras}")
+    return state
+
+
+def evaluate(state: ServerState, test_sets, true_cluster=None) -> dict:
+    return get_strategy(state.strategy).evaluate(state.ctx, state,
+                                                 test_sets, true_cluster)
+
+
+def join(state: ServerState, batch):
+    """Register a new client; returns (state', cid)."""
+    return get_strategy(state.strategy).join(state.ctx, state, batch)
+
+
+def leave(state: ServerState, cid: int) -> ServerState:
+    """Remove a client from sampling AND the partition, consistently."""
+    return get_strategy(state.strategy).leave(state.ctx, state, cid)
+
+
+def infer(state: ServerState, batch) -> dict:
+    """Cluster inference for an unseen client (§4.4), without joining."""
+    return get_strategy(state.strategy).infer(state.ctx, state, batch)

@@ -1,0 +1,27 @@
+"""Strategy registry — same mechanism as ``models/registry.py``: a flat
+name -> implementation table so drivers select methods by string and new
+methods plug in with a decorator, no orchestration rewiring."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+STRATEGIES: Dict[str, object] = {}
+
+
+def register(name: str):
+    """Class decorator: ``@register("fedavg")`` installs an instance."""
+    def deco(cls):
+        cls.name = name
+        STRATEGIES[name] = cls()
+        return cls
+    return deco
+
+
+def get_strategy(name: str):
+    if name not in STRATEGIES:
+        raise KeyError(f"unknown strategy {name!r}; registered: {sorted(STRATEGIES)}")
+    return STRATEGIES[name]
+
+
+def list_strategies() -> List[str]:
+    return sorted(STRATEGIES)

@@ -1,0 +1,142 @@
+"""Engine state: an explicit, pytree-serializable federated server.
+
+``ServerState`` is the ONLY thing a strategy transition may read and the
+only thing it may produce — transitions are pure: they never mutate their
+input, they return a new state (``dataclasses.replace`` + copied
+containers). The model-bearing fields (``omega``, ``models``,
+``personal``) are the pytree leaves, so the whole server checkpoint is
+``jax.device_get(state)`` away and the cohort step can be placed on a
+client-axis mesh; host-side bookkeeping (partition, rng, round counter)
+rides along as aux data.
+
+``EngineContext`` is the static world the state refers to: loss/eval
+functions, the client datasets, compiled cohort updates, the Ψ extractor
+and the optional mesh. It is built once by ``engine.init`` and is never
+checkpointed — restoring a checkpoint reattaches the arrays to a freshly
+built context.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.clustering import ClusterState
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Union of the knobs of every registered strategy.
+
+    StoCFL uses (tau, lam, lr, local_steps, sample_rate, aggregator,
+    project_dim); FedProx/Ditto read ``mu``; IFCA reads ``n_models`` and
+    ``init_key``; CFL reads (eps_rel, eps2) and always runs full
+    participation.
+    """
+    tau: float = 0.5
+    lam: float = 0.05
+    lr: float = 0.1
+    local_steps: int = 5
+    sample_rate: float = 0.1
+    seed: int = 0
+    aggregator: str = "mean"          # G(·): mean | median | trimmed_mean | krum
+    project_dim: Optional[int] = None
+    mu: float = 0.05                  # FedProx / Ditto prox weight
+    n_models: int = 4                 # IFCA hypothesis count
+    init_key: int = 0                 # IFCA perturbation key
+    eps_rel: float = 0.35             # CFL split thresholds
+    eps2: float = 0.01
+
+
+@dataclasses.dataclass
+class EngineContext:
+    """Static (non-checkpointed) world: functions, data, compiled updates."""
+    loss_fn: Callable
+    init_params: Any
+    clients: List[dict]
+    cfg: EngineConfig
+    eval_fn: Optional[Callable] = None
+    leaf_filter: Optional[Callable] = None
+    mesh: Optional[Any] = None        # jax Mesh: place cohort on client axis
+    extractor: Optional[Callable] = None
+    cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def jit(self, key: str, builder: Callable) -> Callable:
+        """Memoize a compiled update under ``key`` (per-context cache)."""
+        if key not in self.cache:
+            self.cache[key] = builder()
+        return self.cache[key]
+
+
+@dataclasses.dataclass
+class ServerState:
+    """The federated server as a value.
+
+    Pytree leaves: ``omega`` (global model), ``models`` (cluster /
+    hypothesis models keyed by int), ``personal`` (per-client personal
+    models, Ditto). Aux data: everything the host orchestration needs —
+    strategy name, round counter, numpy bit-generator state (so client
+    sampling is checkpoint-exact), per-client sample counts, the departed
+    set, the Ψ clustering bookkeeping, CFL membership, and the metric
+    history.
+    """
+    ctx: EngineContext
+    strategy: str
+    round: int
+    rng_state: dict
+    sizes: Tuple[int, ...]
+    left: frozenset
+    omega: Any
+    models: Dict[int, Any]
+    personal: Dict[int, Any]
+    clusters: Optional[ClusterState] = None
+    members: Optional[Tuple[Tuple[int, ...], ...]] = None   # CFL partition
+    history: Tuple[dict, ...] = ()
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def n_clients(self) -> int:
+        return len(self.ctx.clients)
+
+    def cluster_model(self, root: int):
+        """θ_k for a cluster root (lazy: ω₀ until first aggregate)."""
+        return self.models.get(root, self.ctx.init_params)
+
+    def client_root(self, cid: int) -> int:
+        assert self.clusters is not None
+        return self.clusters.uf.find(int(cid))
+
+    def rng(self) -> np.random.Generator:
+        """Materialize the generator at this state's position (pure: the
+        state only stores the serializable bit-generator state)."""
+        g = np.random.default_rng(0)
+        g.bit_generator.state = self.rng_state
+        return g
+
+    def replace(self, **kw) -> "ServerState":
+        return dataclasses.replace(self, **kw)
+
+
+def fresh_rng_state(seed: int) -> dict:
+    return np.random.default_rng(seed).bit_generator.state
+
+
+def _flatten_state(s: ServerState):
+    children = (s.omega, s.models, s.personal)
+    aux = (s.ctx, s.strategy, s.round, s.rng_state, s.sizes, s.left,
+           s.clusters, s.members, s.history)
+    return children, aux
+
+
+def _unflatten_state(aux, children):
+    omega, models, personal = children
+    ctx, strategy, rnd, rng_state, sizes, left, clusters, members, history = aux
+    return ServerState(ctx=ctx, strategy=strategy, round=rnd,
+                       rng_state=rng_state, sizes=sizes, left=left,
+                       omega=omega, models=models, personal=personal,
+                       clusters=clusters, members=members, history=history)
+
+
+jax.tree_util.register_pytree_node(ServerState, _flatten_state, _unflatten_state)

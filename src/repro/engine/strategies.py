@@ -1,0 +1,449 @@
+"""The six federated strategies as thin definitions over shared machinery.
+
+The paper frames StoCFL as a family that degenerates into the baselines
+(§3.4: τ=1 → Ditto, τ=−1 → FedProx-family, λ=0 → CFL, λ=0 ∧ τ=−1 →
+FedAvg); this module makes that literal: every method is a ``Strategy``
+over the same vmapped cohort primitives (``bilevel.local_sgd`` /
+``bilevel.make_cohort_update``), the same weighted aggregation, and the
+same pure ``ServerState`` transitions — so benchmarks compare methods,
+not orchestration code.
+
+All transitions are pure: they copy the containers they change and return
+a new ``ServerState``. Host-side control flow (partition bookkeeping,
+model selection) stays in numpy; the per-round math is one jitted SPMD
+computation with clients on the leading axis, optionally placed on the
+mesh's client axis (``EngineContext.mesh``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bilevel
+from repro.core.aggregators import AGGREGATORS
+from repro.core.clustering import ClusterState
+from repro.engine.registry import register
+from repro.engine.state import EngineContext, ServerState, fresh_rng_state
+from repro.sharding import specs
+from repro.utils import trees
+
+
+# --------------------------------------------------------------------- shared
+def client_sizes(clients) -> tuple:
+    return tuple(int(np.shape(jax.tree.leaves(c)[0])[0]) for c in clients)
+
+
+def _stack(ctx: EngineContext, ids) -> dict:
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[ctx.clients[int(c)] for c in ids])
+
+
+def _weights(state: ServerState, ids) -> np.ndarray:
+    return np.asarray(state.sizes, np.float32)[np.asarray(ids)]
+
+
+def _place(ctx: EngineContext, tree, replicated: bool = False):
+    """Place a cohort input on the client-axis mesh, when one is active."""
+    if ctx.mesh is None:
+        return tree
+    if replicated:
+        return specs.place_replicated(tree, ctx.mesh)
+    return specs.place_cohort(tree, ctx.mesh)
+
+
+def merge_cluster_models(models: Dict[int, object], merges, counts, init_params):
+    """Merge θ along partition merges, each side weighted by its member
+    count — a 10-client cluster absorbing a singleton moves by 1/11, not
+    1/2. ``counts`` is the pre-merge {root: n_members} snapshot; cascaded
+    merges within one round accumulate correctly."""
+    models = dict(models)
+    counts = dict(counts)
+    for keep, absorb in merges:
+        m_keep = models.pop(keep, init_params)
+        m_abs = models.pop(absorb, init_params)
+        n_k = float(counts.get(keep, 1))
+        n_a = float(counts.get(absorb, 1))
+        models[keep] = trees.tree_weighted_mean([m_keep, m_abs], [n_k, n_a])
+        counts[keep] = n_k + n_a
+    return models
+
+
+class Strategy:
+    """Protocol every federated method implements.
+
+    ``init_state(ctx)`` builds the initial ``ServerState``;
+    ``round(ctx, state, client_ids)`` is one pure server round;
+    ``evaluate`` / ``join`` / ``leave`` / ``infer`` are the serving-side
+    transitions. Register implementations with ``@register("name")``.
+    """
+
+    name = "base"
+    needs_extractor = False
+    full_participation = False
+
+    # ------------------------------------------------------------ lifecycle
+    def init_state(self, ctx: EngineContext) -> ServerState:
+        return ServerState(ctx=ctx, strategy=self.name, round=0,
+                           rng_state=fresh_rng_state(ctx.cfg.seed),
+                           sizes=client_sizes(ctx.clients), left=frozenset(),
+                           omega=ctx.init_params, models={}, personal={})
+
+    def round(self, ctx: EngineContext, state: ServerState, client_ids):
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ serving
+    def evaluate(self, ctx, state, test_sets, true_cluster=None) -> dict:
+        accs = {k: float(ctx.eval_fn(state.omega, b)) for k, b in test_sets.items()}
+        return {"cluster_avg": float(np.mean(list(accs.values()))), "per": accs}
+
+    def join(self, ctx, state, batch):
+        cid = len(ctx.clients)
+        ctx.clients.append(batch)
+        sizes = state.sizes + (int(np.shape(jax.tree.leaves(batch)[0])[0]),)
+        return state.replace(sizes=sizes), cid
+
+    def leave(self, ctx, state, cid):
+        return state.replace(left=state.left | {int(cid)})
+
+    def infer(self, ctx, state, batch) -> dict:
+        raise NotImplementedError(f"strategy {self.name!r} has no cluster inference")
+
+
+# --------------------------------------------------------------------- stocfl
+@register("stocfl")
+class StoCFLStrategy(Strategy):
+    """Algorithm 1: stochastic Ψ-clustering + bi-level cohort update."""
+
+    needs_extractor = True
+
+    def init_state(self, ctx):
+        return super().init_state(ctx).replace(clusters=ClusterState(ctx.cfg.tau))
+
+    def _cohort(self, ctx):
+        cfg = ctx.cfg
+        return ctx.jit("stocfl_cohort", lambda: bilevel.make_cohort_update(
+            ctx.loss_fn, cfg.lr, cfg.lam, cfg.local_steps, backend="jnp"))
+
+    def round(self, ctx, state, client_ids):
+        cfg = ctx.cfg
+        client_ids = np.asarray(client_ids)
+        clusters = state.clusters.copy()
+
+        # --- stochastic client clustering (Algorithm 1 lines 5-13)
+        new_ids = [int(c) for c in client_ids if c not in clusters.seen]
+        if new_ids:
+            reps = [np.asarray(ctx.extractor(ctx.clients[c])) for c in new_ids]
+            clusters.observe(new_ids, reps)
+        counts = {r: len(m) for r, m in clusters.clusters().items()}
+        merges = clusters.merge_round()
+        models = merge_cluster_models(state.models, merges, counts, ctx.init_params)
+
+        # --- bi-level CFL (lines 14-19): one SPMD cohort step
+        roots = [clusters.uf.find(int(c)) for c in client_ids]
+        thetas = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[models.get(r, ctx.init_params) for r in roots])
+        batches = _stack(ctx, client_ids)
+        thetas = _place(ctx, thetas)
+        batches = _place(ctx, batches)
+        omega = _place(ctx, state.omega, replicated=True)
+        thetas_i, omegas_i = self._cohort(ctx)(thetas, omega, batches)
+
+        w = _weights(state, client_ids)
+        omega = AGGREGATORS[cfg.aggregator](omegas_i, w)
+        for root in sorted(set(roots)):
+            idx = np.array([i for i, r in enumerate(roots) if r == root])
+            sel = jax.tree.map(lambda x: x[idx], thetas_i)
+            models[root] = bilevel.aggregate_stacked(sel, w[idx])
+
+        rec = {"n_clusters": clusters.n_clusters(),
+               "objective": clusters.objective(),
+               "sampled": len(client_ids)}
+        return state.replace(omega=omega, models=models, clusters=clusters), rec
+
+    def evaluate(self, ctx, state, test_sets, true_cluster=None):
+        """Each true cluster is evaluated with the model of the learned
+        cluster holding most of its clients; ω is evaluated on everything."""
+        assert ctx.eval_fn is not None
+        assign = state.clusters.assignment()
+        out, glob = {}, {}
+        for tc, batch in test_sets.items():
+            roots = [assign[c] for c in assign if true_cluster[c] == tc]
+            if roots:
+                root = max(set(roots), key=roots.count)
+                model = state.cluster_model(root)
+            else:
+                model = state.omega
+            out[tc] = float(ctx.eval_fn(model, batch))
+            glob[tc] = float(ctx.eval_fn(state.omega, batch))
+        return {"cluster": out, "cluster_avg": float(np.mean(list(out.values()))),
+                "global": glob, "global_avg": float(np.mean(list(glob.values())))}
+
+    def join(self, ctx, state, batch):
+        """Dynamic join (§5): register the client, infer its cluster via Ψ
+        against the PRE-EXISTING clusters, or open a fresh cluster seeded
+        from the nearest one's model."""
+        state, cid = super().join(ctx, state, batch)
+        clusters = state.clusters.copy()
+        models = dict(state.models)
+        rep = np.asarray(ctx.extractor(batch))
+        root, near, _sim = clusters.nearest(rep)
+        clusters.observe([cid], [rep])
+        if root is not None:
+            clusters.uf.union(min(root, cid), max(root, cid))
+            # cid inherits the cluster model (no merge needed: cid had none)
+        elif near is not None:
+            models[clusters.uf.find(cid)] = models.get(near, ctx.init_params)
+        return state.replace(clusters=clusters, models=models), cid
+
+    def leave(self, ctx, state, cid):
+        """Dynamic leave: drop the client from reps AND the union-find so
+        assignments stay consistent; the cluster keeps its model (knowledge
+        persists, §5), re-keyed if the departure changed the root."""
+        state = super().leave(ctx, state, cid)
+        clusters = state.clusters.copy()
+        remap = clusters.remove(cid)
+        models = {remap.get(k, k): v for k, v in state.models.items()}
+        return state.replace(clusters=clusters, models=models)
+
+    def infer(self, ctx, state, batch):
+        """Cluster inference for an unseen client (§4.4), without joining."""
+        rep = np.asarray(ctx.extractor(batch))
+        root, near, sim = state.clusters.nearest(rep)
+        src = root if root is not None else near
+        model = state.cluster_model(src) if src is not None else state.omega
+        return {"cluster": root, "seed_from": src, "similarity": sim, "model": model}
+
+
+# ------------------------------------------------------------------ baselines
+@register("fedavg")
+class FedAvgStrategy(Strategy):
+    """Single global model; λ=0 ∧ τ=−1 degeneration of StoCFL."""
+
+    prox = False
+
+    def _upd(self, ctx):
+        cfg = ctx.cfg
+
+        def build():
+            if self.prox:
+                fn = lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr,
+                                                    cfg.local_steps, prox_to=p,
+                                                    lam=cfg.mu)
+            else:
+                fn = lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr,
+                                                    cfg.local_steps)
+            return jax.jit(jax.vmap(fn, in_axes=(None, 0)))
+
+        return ctx.jit(f"{self.name}_upd", build)
+
+    def round(self, ctx, state, client_ids):
+        ids = np.asarray(client_ids)
+        batches = _place(ctx, _stack(ctx, ids))
+        outs = self._upd(ctx)(_place(ctx, state.omega, replicated=True), batches)
+        omega = bilevel.aggregate_stacked(outs, _weights(state, ids))
+        return state.replace(omega=omega), {"sampled": len(ids)}
+
+
+@register("fedprox")
+class FedProxStrategy(FedAvgStrategy):
+    """FedAvg + prox to the broadcast global (prox_to closes over the
+    round's initial params, constant through the local scan)."""
+    prox = True
+
+
+@register("ditto")
+class DittoStrategy(Strategy):
+    """Global FedAvg + per-client personal models with prox to global
+    (τ=1 degeneration: every client is its own cluster)."""
+
+    def init_state(self, ctx):
+        personal = {i: ctx.init_params for i in range(len(ctx.clients))}
+        return super().init_state(ctx).replace(personal=personal)
+
+    def _upds(self, ctx):
+        cfg = ctx.cfg
+        gupd = ctx.jit("ditto_g", lambda: jax.jit(jax.vmap(
+            lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr, cfg.local_steps),
+            in_axes=(None, 0))))
+        pupd = ctx.jit("ditto_p", lambda: jax.jit(jax.vmap(
+            lambda v, g, b: bilevel.local_sgd(ctx.loss_fn, v, b, cfg.lr,
+                                              cfg.local_steps, prox_to=g, lam=cfg.mu),
+            in_axes=(0, None, 0))))
+        return gupd, pupd
+
+    def round(self, ctx, state, client_ids):
+        ids = np.asarray(client_ids)
+        gupd, pupd = self._upds(ctx)
+        batches = _place(ctx, _stack(ctx, ids))
+        omega = _place(ctx, state.omega, replicated=True)
+        g_outs = gupd(omega, batches)
+        v_stack = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[state.personal[int(c)] for c in ids])
+        v_outs = pupd(_place(ctx, v_stack), omega, batches)
+        omega = bilevel.aggregate_stacked(g_outs, _weights(state, ids))
+        personal = dict(state.personal)
+        for j, c in enumerate(ids):
+            personal[int(c)] = jax.tree.map(lambda x: x[j], v_outs)
+        return state.replace(omega=omega, personal=personal), {"sampled": len(ids)}
+
+    def evaluate(self, ctx, state, test_sets, true_cluster=None):
+        """Per true cluster: average of its clients' personal models' acc."""
+        out = {}
+        n = state.n_clients
+        for tc, batch in test_sets.items():
+            members = [i for i in range(n) if true_cluster[i] == tc]
+            accs = [float(ctx.eval_fn(state.personal[i], batch)) for i in members[:8]]
+            out[tc] = (float(np.mean(accs)) if accs
+                       else float(ctx.eval_fn(state.omega, batch)))
+        return {"cluster_avg": float(np.mean(list(out.values()))), "per": out}
+
+    def join(self, ctx, state, batch):
+        state, cid = super().join(ctx, state, batch)
+        personal = dict(state.personal)
+        personal[cid] = ctx.init_params
+        return state.replace(personal=personal), cid
+
+
+@register("ifca")
+class IFCAStrategy(Strategy):
+    """Ghosh et al. 2020: M̃ hypothesis models, clients pick argmin loss."""
+
+    def init_state(self, ctx):
+        cfg = ctx.cfg
+        keys = jax.random.split(jax.random.PRNGKey(cfg.init_key), cfg.n_models)
+        # perturb around init: IFCA needs distinct initializations
+        models = {m: jax.tree.map(
+            lambda x, k=k: x + 0.1 * jax.random.normal(
+                jax.random.fold_in(k, 0), x.shape, x.dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, ctx.init_params)
+            for m, k in enumerate(keys)}
+        return super().init_state(ctx).replace(models=models)
+
+    def _upd(self, ctx):
+        cfg = ctx.cfg
+        return ctx.jit("ifca_upd", lambda: jax.jit(jax.vmap(
+            lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr, cfg.local_steps),
+            in_axes=(0, 0))))
+
+    def round(self, ctx, state, client_ids):
+        ids = np.asarray(client_ids)
+        choices = [int(np.argmin([float(ctx.loss_fn(state.models[m], ctx.clients[int(c)]))
+                                  for m in range(ctx.cfg.n_models)])) for c in ids]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[state.models[ch] for ch in choices])
+        outs = self._upd(ctx)(_place(ctx, stacked), _place(ctx, _stack(ctx, ids)))
+        w = _weights(state, ids)
+        models = dict(state.models)
+        for m in range(ctx.cfg.n_models):
+            idx = np.array([j for j, ch in enumerate(choices) if ch == m])
+            if len(idx):
+                sel = jax.tree.map(lambda x: x[idx], outs)
+                models[m] = bilevel.aggregate_stacked(sel, w[idx])
+        return state.replace(models=models), {"sampled": len(ids)}
+
+    def evaluate(self, ctx, state, test_sets, true_cluster=None):
+        out = {}
+        for tc, batch in test_sets.items():
+            accs = [float(ctx.eval_fn(state.models[m], batch))
+                    for m in range(ctx.cfg.n_models)]
+            out[tc] = float(np.max(accs))     # best-model (oracle assignment)
+        return {"cluster_avg": float(np.mean(list(out.values()))), "per": out}
+
+
+@register("cfl")
+class CFLStrategy(Strategy):
+    """Sattler et al. 2020a: full participation; recursively bi-partition a
+    cluster near stationarity (relative-norm criterion); split seeds are
+    the least-similar update pair, greedy assignment to the closer seed."""
+
+    full_participation = True
+
+    def init_state(self, ctx):
+        state = super().init_state(ctx)
+        return state.replace(members=(tuple(range(len(ctx.clients))),),
+                             models={0: ctx.init_params})
+
+    def _upd(self, ctx):
+        cfg = ctx.cfg
+        return ctx.jit("cfl_upd", lambda: jax.jit(jax.vmap(
+            lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr, cfg.local_steps),
+            in_axes=(None, 0))))
+
+    def round(self, ctx, state, client_ids):
+        cfg = ctx.cfg
+        upd = self._upd(ctx)
+        sizes = np.asarray(state.sizes, np.float32)
+        new_members, new_models = [], []
+        for k, members in enumerate(state.members):
+            members = list(members)
+            model = state.models[k]
+            outs = upd(model, _place(ctx, _stack(ctx, members)))
+            deltas = jax.tree.map(lambda o, m: o - m, outs, model)
+            flat = np.stack([np.asarray(trees.tree_flatten_vector(
+                jax.tree.map(lambda x: x[j], deltas))) for j in range(len(members))])
+            new_model = bilevel.aggregate_stacked(outs, sizes[np.array(members)])
+            mean_norm = float(np.linalg.norm(flat.mean(axis=0)))
+            max_norm = float(np.linalg.norm(flat, axis=1).max())
+            if len(members) > 2 and max_norm > cfg.eps2 and mean_norm < cfg.eps_rel * max_norm:
+                sims = flat / (np.linalg.norm(flat, axis=1, keepdims=True) + 1e-12)
+                M = sims @ sims.T
+                i, j = np.unravel_index(np.argmin(M), M.shape)
+                c1 = [m for idx, m in enumerate(members) if M[idx, i] >= M[idx, j]]
+                c2 = [m for m in members if m not in c1]
+                if c1 and c2:
+                    new_members += [tuple(c1), tuple(c2)]
+                    new_models += [new_model, new_model]
+                    continue
+            new_members.append(tuple(members))
+            new_models.append(new_model)
+        state = state.replace(members=tuple(new_members),
+                              models=dict(enumerate(new_models)))
+        return state, {"n_clusters": len(new_members),
+                       "sampled": sum(len(m) for m in new_members)}
+
+    def cluster_of(self, state, cid: int) -> int:
+        for k, c in enumerate(state.members):
+            if cid in c:
+                return k
+        return 0
+
+    def join(self, ctx, state, batch):
+        """CFL has no Ψ inference; assign the newcomer to the cluster whose
+        model fits its data best (argmin loss, IFCA-style) so it trains
+        and splits with that cluster from the next round on."""
+        state, cid = super().join(ctx, state, batch)
+        k = int(np.argmin([float(ctx.loss_fn(state.models[m], batch))
+                           for m in range(len(state.members))]))
+        members = list(state.members)
+        members[k] = members[k] + (cid,)
+        return state.replace(members=tuple(members)), cid
+
+    def leave(self, ctx, state, cid):
+        """Full participation trains on ``members``, so departure must
+        rewrite the partition: drop the client everywhere, discard any
+        cluster it leaves empty, and re-index the model table to match."""
+        state = super().leave(ctx, state, cid)
+        cid = int(cid)
+        members, models = [], {}
+        for k, group in enumerate(state.members):
+            group = tuple(m for m in group if m != cid)
+            if group:
+                models[len(members)] = state.models[k]
+                members.append(group)
+        if not members:                       # last client left: keep the
+            members = [()]                    # root cluster's model around
+            models = {0: state.models.get(0, ctx.init_params)}
+        return state.replace(members=tuple(members), models=models)
+
+    def evaluate(self, ctx, state, test_sets, true_cluster=None):
+        out = {}
+        for tc, batch in test_sets.items():
+            ks = [self.cluster_of(state, i) for i in range(state.n_clients)
+                  if true_cluster[i] == tc]
+            k = max(set(ks), key=ks.count)
+            out[tc] = float(ctx.eval_fn(state.models[k], batch))
+        return {"cluster_avg": float(np.mean(list(out.values()))), "per": out,
+                "n_clusters": len(state.members)}

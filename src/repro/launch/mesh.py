@@ -26,6 +26,17 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(dev_array, axes)
 
 
+def make_cohort_mesh(n: int = 0):
+    """1-D client-axis mesh for the engine's cohort step: the vmapped
+    per-client bi-level updates shard over ("data",) — each device owns a
+    slice of the sampled cohort. n=0 uses every local device; otherwise
+    the first n."""
+    import numpy as np
+    devices = jax.devices()
+    n = len(devices) if n <= 0 else min(n, len(devices))
+    return jax.sharding.Mesh(np.array(devices[:n]), ("data",))
+
+
 def make_host_mesh(model_parallel: int = 1):
     """Tiny mesh over the real local devices (CPU smoke / examples)."""
     import numpy as np

@@ -1,8 +1,11 @@
-"""Cluster-model serving driver.
+"""Cluster-model serving driver — on the functional engine API.
 
-StoCFL serving = route each request to its cluster's personalized model
-(§4.4 inference: nearest cluster mean by Ψ cosine), then batched
-prefill + greedy decode with the per-arch KV cache / SSM state.
+StoCFL serving = hold a ``ServerState``, route each request to its
+cluster's personalized model (§4.4 inference: nearest cluster mean by Ψ
+cosine via ``engine.infer``), then batched prefill + greedy decode with
+the per-arch KV cache / SSM state. Cluster reference Ψ's are registered
+through ``engine.join`` — the same dynamic-membership transition a
+training server uses.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \\
       --requests 8 --prompt-len 32 --gen 16
@@ -17,9 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.configs import get_config
-from repro.core.clustering import ClusterState
-from repro.core.extractor import llm_leaf_filter, make_extractor
+from repro.core.extractor import llm_leaf_filter
 from repro.data import synthetic_lm_batch
 from repro.models import build
 
@@ -41,16 +44,22 @@ def main():
     model = build(cfg)
     key = jax.random.PRNGKey(args.seed)
 
-    # --- K cluster models (stand-ins for a trained StoCFL server state)
-    models = {k: model.init(jax.random.fold_in(key, k)) for k in range(args.clusters)}
-    state = ClusterState(args.tau)
-    ext = make_extractor(model.loss_fn, models[0], project_dim=8192,
-                         leaf_filter=llm_leaf_filter)
+    # --- a serving ServerState: K cluster models (stand-ins for a trained
+    # checkpoint — a real deployment would `load_server_state` here), with
+    # each cluster's reference Ψ registered via the join transition.
+    params0 = model.init(key)
+    st = engine.init("stocfl", model.loss_fn, params0, [],
+                     engine.EngineConfig(tau=args.tau, seed=args.seed,
+                                         project_dim=8192),
+                     leaf_filter=llm_leaf_filter)
+    cluster_models = {}
     for k in range(args.clusters):
         # cluster reference Ψ from a healthy token sample of the domain
-        rep = ext(jax.tree.map(jnp.asarray,
-                               synthetic_lm_batch(cfg, 256, 8, seed=100 + k, domain=k)))
-        state.observe([k], [np.asarray(rep)])
+        ref = jax.tree.map(jnp.asarray,
+                           synthetic_lm_batch(cfg, 256, 8, seed=100 + k, domain=k))
+        st, cid = engine.join(st, ref)
+        cluster_models[st.client_root(cid)] = model.init(jax.random.fold_in(key, k))
+    st = st.replace(models=cluster_models)
 
     prefill = jax.jit(model.prefill)
     decode = jax.jit(model.decode)
@@ -66,10 +75,9 @@ def main():
         # running Ψ per client); the prompt alone is too thin at 24 tokens
         hist = jax.tree.map(jnp.asarray,
                             synthetic_lm_batch(cfg, 256, 8, seed=1000 + r, domain=dom))
-        rep = np.asarray(ext(hist))
-        root, sim = state.infer(rep)
-        root = root if root is not None else 0
-        params = models[root]
+        inf = engine.infer(st, hist)
+        root = inf["cluster"] if inf["cluster"] is not None else inf["seed_from"]
+        params = inf["model"]
 
         logits, cache = prefill(params, batch)
         # right-size the cache for generation
@@ -84,7 +92,8 @@ def main():
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             toks.append(int(tok[0]))
         n_tokens += len(toks)
-        print(f"req {r}: domain={dom} -> cluster={root} (cos={sim:.3f}) tokens={toks[:8]}...")
+        print(f"req {r}: domain={dom} -> cluster={root} "
+              f"(cos={inf['similarity']:.3f}) tokens={toks[:8]}...")
     dt = time.time() - t0
     print(json.dumps({"requests": args.requests, "tokens": n_tokens,
                       "wall_s": round(dt, 2), "tok_per_s": round(n_tokens / dt, 2)}))

@@ -1,10 +1,14 @@
-"""End-to-end StoCFL training driver.
+"""End-to-end training driver on the functional engine API.
+
+Any registered strategy (stocfl, fedavg, fedprox, ditto, ifca, cfl) runs
+through the same ``engine.init -> engine.run_round`` loop; StoCFL adds
+clustering metrics, checkpointing of the full ``ServerState``, and §4.4
+inference. ``--mesh`` places the vmapped cohort step on a client-axis
+mesh over the local devices.
 
 Two modes:
   classification (paper-faithful, default): cross-device federation on a
-    synthetic Non-IID setting with the paper's MLP task model; runs full
-    StoCFL (clustering + bi-level) or any baseline, reports per-cluster
-    accuracy, ARI, cluster count.
+    synthetic Non-IID setting with the paper's MLP task model.
 
       PYTHONPATH=src python -m repro.launch.train --setting rotated \\
           --rounds 100 --algo stocfl
@@ -26,12 +30,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_stocfl
-from repro.core import (CFLSattler, Ditto, FLConfig, FedAvg, FedProx, IFCA,
-                        StoCFL, StoCFLConfig, adjusted_rand_index)
+from repro import engine
+from repro.checkpoint import save_server_state
+from repro.core import adjusted_rand_index
 from repro.data import make_federation, synthetic_lm_batch
 from repro.models import build, simple
 from repro.configs import get_config
+from repro.launch.mesh import make_cohort_mesh
+
+
+def _engine_cfg(args) -> engine.EngineConfig:
+    return engine.EngineConfig(
+        tau=args.tau, lam=args.lam, lr=args.lr, local_steps=args.local_steps,
+        sample_rate=1.0 if args.algo == "cfl" else args.sample_rate,
+        seed=args.seed, mu=args.lam)
 
 
 def run_classification(args) -> dict:
@@ -47,34 +59,23 @@ def run_classification(args) -> dict:
     loss = lambda p, b: simple.loss_fn(p, b, task)
     evalf = jax.jit(lambda p, b: simple.accuracy(p, b, task))
 
+    mesh = make_cohort_mesh() if args.mesh else None
     t0 = time.time()
-    if args.algo == "stocfl":
-        tr = StoCFL(loss, params, clients,
-                    StoCFLConfig(tau=args.tau, lam=args.lam, lr=args.lr,
-                                 local_steps=args.local_steps,
-                                 sample_rate=args.sample_rate, seed=args.seed),
-                    eval_fn=evalf)
-        tr.fit(args.rounds, log_every=max(args.rounds // 10, 1))
-        assign = tr.state.assignment()
+    st = engine.init(args.algo, loss, params, clients, _engine_cfg(args),
+                     eval_fn=evalf, mesh=mesh)
+    st = engine.run(st, args.rounds, log_every=max(args.rounds // 10, 1))
+    res = engine.evaluate(st, test_sets, true_cluster)
+    out = {"algo": args.algo, "cluster_avg_acc": res["cluster_avg"],
+           "rounds": args.rounds, "wall_s": round(time.time() - t0, 1)}
+    if st.clusters is not None:
+        assign = st.clusters.assignment()
         ids = sorted(assign)
-        ari = adjusted_rand_index([assign[c] for c in ids], [true_cluster[c] for c in ids])
-        res = tr.evaluate(test_sets, true_cluster)
-        out = {"algo": "stocfl", "ari": ari, "n_clusters": tr.state.n_clusters(),
-               "cluster_avg_acc": res["cluster_avg"], "global_avg_acc": res["global_avg"],
-               "rounds": args.rounds, "wall_s": round(time.time() - t0, 1)}
-        if args.save:
-            save_stocfl(args.save, tr)
-    else:
-        cls = {"fedavg": FedAvg, "fedprox": FedProx, "ditto": Ditto,
-               "ifca": IFCA, "cfl": CFLSattler}[args.algo]
-        cfg = FLConfig(lr=args.lr, local_steps=args.local_steps,
-                       sample_rate=1.0 if args.algo == "cfl" else args.sample_rate,
-                       seed=args.seed, mu=args.lam)
-        tr = cls(loss, params, clients, cfg, eval_fn=evalf)
-        tr.fit(args.rounds)
-        res = tr.evaluate(test_sets, true_cluster)
-        out = {"algo": args.algo, "cluster_avg_acc": res["cluster_avg"],
-               "rounds": args.rounds, "wall_s": round(time.time() - t0, 1)}
+        out["ari"] = adjusted_rand_index([assign[c] for c in ids],
+                                         [true_cluster[c] for c in ids])
+        out["n_clusters"] = st.clusters.n_clusters()
+        out["global_avg_acc"] = res["global_avg"]
+    if args.save:
+        save_server_state(args.save, st)
     print(json.dumps(out, indent=1))
     return out
 
@@ -94,22 +95,25 @@ def run_llm(args) -> dict:
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
     from repro.core.extractor import llm_leaf_filter
-    tr = StoCFL(model.loss_fn, params, clients,
-                StoCFLConfig(tau=args.tau, lam=args.lam, lr=args.lr,
-                             local_steps=args.local_steps,
-                             sample_rate=args.sample_rate, seed=args.seed,
-                             project_dim=8192),
-                leaf_filter=llm_leaf_filter)
+    ecfg = engine.EngineConfig(tau=args.tau, lam=args.lam, lr=args.lr,
+                               local_steps=args.local_steps,
+                               sample_rate=args.sample_rate, seed=args.seed,
+                               project_dim=8192)
+    mesh = make_cohort_mesh() if args.mesh else None
+    st = engine.init("stocfl", model.loss_fn, params, clients, ecfg,
+                     leaf_filter=llm_leaf_filter, mesh=mesh)
     t0 = time.time()
     for t in range(args.rounds):
-        rec = tr.round()
-        loss0 = float(model.loss_fn(tr.omega, clients[0]))
+        st, rec = engine.run_round(st)
+        loss0 = float(model.loss_fn(st.omega, clients[0]))
         print(f"round {t}: clusters={rec['n_clusters']} omega_loss={loss0:.4f}")
-    assign = tr.state.assignment()
+    assign = st.clusters.assignment()
     ids = sorted(assign)
     ari = adjusted_rand_index([assign[c] for c in ids], [true_cluster[c] for c in ids])
-    out = {"arch": cfg.name, "ari": ari, "n_clusters": tr.state.n_clusters(),
+    out = {"arch": cfg.name, "ari": ari, "n_clusters": st.clusters.n_clusters(),
            "rounds": args.rounds, "wall_s": round(time.time() - t0, 1)}
+    if args.save:
+        save_server_state(args.save, st)
     print(json.dumps(out, indent=1))
     return out
 
@@ -120,9 +124,11 @@ def main():
                     choices=["pathological", "rotated", "shifted", "hybrid", "femnist"])
     ap.add_argument("--task", default="synth_mlp")
     ap.add_argument("--algo", default="stocfl",
-                    choices=["stocfl", "fedavg", "fedprox", "ditto", "ifca", "cfl"])
+                    choices=sorted(engine.list_strategies()))
     ap.add_argument("--arch", default=None, help="LLM mode: assigned arch id")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", action="store_true",
+                    help="place the cohort step on a client-axis mesh")
     ap.add_argument("--clients", type=int, default=80)
     ap.add_argument("--domains", type=int, default=2)
     ap.add_argument("--rounds", type=int, default=50)

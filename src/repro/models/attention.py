@@ -231,7 +231,10 @@ def _flash_decode_core(axis, windowed, q, k, v, k_new, v_new, pos):
 def _gqa_decode_flash(params, x, cache, pos, cfg):
     """shard_map flash-decode path (requires an active mesh ctx with a tp
     axis and a cache whose seq dim divides it)."""
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # jax < 0.5 keeps it under experimental
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.sharding import current_ctx
 
@@ -254,11 +257,15 @@ def _gqa_decode_flash(params, x, cache, pos, cfg):
     cache_spec = P(b_ax, tp, None, None)
     flat_spec = P(b_ax, None, None, None)
     core = functools.partial(_flash_decode_core, tp, bool(cfg.sliding_window))
-    out, k2, v2 = shard_map(
+    try:
+        smap = functools.partial(shard_map, check_vma=False)
+        smap(lambda: None, mesh=mesh, in_specs=(), out_specs=P())
+    except TypeError:  # jax < 0.6 spells it check_rep
+        smap = functools.partial(shard_map, check_rep=False)
+    out, k2, v2 = smap(
         core, mesh=mesh,
         in_specs=(flat_spec, cache_spec, cache_spec, flat_spec, flat_spec, P()),
         out_specs=(flat_spec, cache_spec, cache_spec),
-        check_vma=False,
     )(q, cache["k"], cache["v"], k_new, v_new, pos)
     out = out.reshape(B, 1, -1) @ params["wo"].astype(dt)
     return out, {"k": k2, "v": v2}

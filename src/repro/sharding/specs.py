@@ -186,6 +186,44 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 
 
+# ---------------------------------------------------------------------------
+# Cohort placement: the engine's vmapped cohort step carries clients on the
+# leading axis of every stacked pytree (thetas, batches). These helpers
+# place that axis on the mesh's client/data axes and replicate the shared
+# inputs (ω), so the whole round runs as one SPMD computation.
+# ---------------------------------------------------------------------------
+def client_axes(mesh: Mesh):
+    """Physical mesh axes that carry the client/cohort dimension."""
+    return tuple(a for a in ("pod", "data", "clients") if a in mesh.axis_names)
+
+
+def cohort_spec(mesh: Mesh, ndim: int) -> P:
+    """PartitionSpec sharding the leading (client) axis over client_axes."""
+    axes = client_axes(mesh)
+    if ndim == 0 or not axes:
+        return P()
+    lead = axes if len(axes) > 1 else axes[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def place_cohort(tree, mesh: Mesh):
+    """device_put a stacked cohort pytree with the leading client axis on
+    the mesh (divisibility-safe: a non-dividing cohort stays replicated)."""
+    def one(x):
+        spec = cohort_spec(mesh, getattr(x, "ndim", 0))
+        if not _divisible(x, spec, mesh):
+            spec = P()
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(one, tree)
+
+
+def place_replicated(tree, mesh: Mesh):
+    """device_put a pytree fully replicated over the mesh (ω, shared refs)."""
+    sh = NamedSharding(mesh, P())
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
 def unshard_fsdp(tree):
     """ZeRO-3 compute layout: re-constrain a layer's weights with the fsdp
     axis gathered (tp kept). Placed at the top of each layer body, this

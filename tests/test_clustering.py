@@ -1,6 +1,7 @@
 """Unit + property tests for stochastic federated client clustering."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the test extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.clustering import ClusterState, UnionFind, adjusted_rand_index

@@ -1,0 +1,245 @@
+"""Engine API tests: strategy parity, pure transitions, checkpoint
+round-trips with bitwise-identical trajectories, dynamic membership."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.checkpoint import load_server_state, save_server_state
+from repro.core import StoCFL, StoCFLConfig
+from repro.core.clustering import ClusterState
+from repro.data import rotated
+from repro.engine.strategies import merge_cluster_models
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+EVAL = jax.jit(lambda p, b: simple.accuracy(p, b, TASK))
+
+
+def _fed(n_clients=12, n_per=32, seed=3):
+    clients, tc, tests = rotated(n_clusters=2, n_clients=n_clients,
+                                 n_per=n_per, seed=seed)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    tests = {k: jax.tree.map(jnp.asarray, v) for k, v in tests.items()}
+    return clients, tc, tests
+
+
+def _params(seed=0):
+    return simple.init(jax.random.PRNGKey(seed), TASK)
+
+
+def _cfg(**kw):
+    kw.setdefault("local_steps", 2)
+    kw.setdefault("sample_rate", 0.5)
+    kw.setdefault("seed", 0)
+    return engine.EngineConfig(**kw)
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if not np.array_equal(np.asarray(x), np.asarray(y)):
+            return False
+    return True
+
+
+def test_registry_has_all_methods():
+    assert set(engine.list_strategies()) >= {
+        "stocfl", "fedavg", "fedprox", "ditto", "ifca", "cfl"}
+
+
+def test_stocfl_engine_matches_legacy_trainer():
+    """Acceptance: engine.run_round ≡ legacy StoCFL.round, same seed."""
+    clients, tc, tests = _fed()
+    st = engine.init("stocfl", LOSS, _params(), clients, _cfg(), eval_fn=EVAL)
+    tr = StoCFL(LOSS, _params(), clients,
+                StoCFLConfig(local_steps=2, sample_rate=0.5, seed=0),
+                eval_fn=EVAL)
+    for _ in range(4):
+        ids = tr.sample_clients()             # legacy-surface sampling...
+        rec_legacy = tr.round(ids)
+        st, rec_engine = engine.run_round(st)  # ...must equal engine sampling
+        assert rec_engine == rec_legacy
+    assert _leaves_equal(st.omega, tr.omega)
+    assert st.models.keys() == tr.models.keys()
+    for k in st.models:
+        assert _leaves_equal(st.models[k], tr.models[k])
+    assert engine.evaluate(st, tests, tc) == tr.evaluate(tests, tc)
+
+
+@pytest.mark.parametrize("name", ["stocfl", "fedavg", "fedprox", "ditto",
+                                  "ifca", "cfl"])
+def test_checkpoint_roundtrip_identical_trajectory(tmp_path, name):
+    """Run N rounds, checkpoint, restore into a FRESH context, continue —
+    the continued trajectory must be bitwise identical to the
+    uninterrupted one (sampling rng included)."""
+    clients, tc, tests = _fed()
+    st = engine.init(name, LOSS, _params(), clients, _cfg(), eval_fn=EVAL)
+    for _ in range(2):
+        st, _ = engine.run_round(st)
+    save_server_state(str(tmp_path / name), st)
+
+    # branch A: continue in-process
+    a, recs_a = st, []
+    for _ in range(3):
+        a, r = engine.run_round(a)
+        recs_a.append(r)
+
+    # branch B: fresh context + restore, then continue
+    b = engine.init(name, LOSS, _params(), clients, _cfg(), eval_fn=EVAL)
+    b = load_server_state(str(tmp_path / name), b)
+    assert b.round == st.round and b.history == st.history
+    recs_b = []
+    for _ in range(3):
+        b, r = engine.run_round(b)
+        recs_b.append(r)
+
+    assert recs_a == recs_b
+    assert _leaves_equal(a.omega, b.omega)
+    assert a.models.keys() == b.models.keys()
+    for k in a.models:
+        assert _leaves_equal(a.models[k], b.models[k])
+    assert engine.evaluate(a, tests, tc) == engine.evaluate(b, tests, tc)
+
+
+def test_run_round_is_pure():
+    """Transitions return new state; the input state is untouched."""
+    clients, _, _ = _fed()
+    st0 = engine.init("stocfl", LOSS, _params(), clients, _cfg())
+    before_omega = jax.tree.map(lambda x: np.asarray(x).copy(), st0.omega)
+    before_seen = set(st0.clusters.seen)
+    before_rng = dict(st0.rng_state)
+    st1, _ = engine.run_round(st0)
+    assert st1 is not st0
+    assert _leaves_equal(st0.omega, before_omega)
+    assert st0.clusters.seen == before_seen
+    assert st0.models == {}
+    assert st0.rng_state == before_rng and st1.rng_state != before_rng
+    assert st0.round == 0 and st1.round == 1
+
+
+def test_leave_keeps_partition_consistent():
+    """Regression: a departed client must vanish from the union-find too —
+    roots, assignment() and cluster_means() stay mutually consistent, and
+    cluster models follow a root change."""
+    clients, _, _ = _fed(n_clients=8)
+    st = engine.init("stocfl", LOSS, _params(), clients,
+                     _cfg(sample_rate=1.0))
+    st, _ = engine.run_round(st)
+    roots = sorted(st.clusters.clusters())
+    victim = roots[0]                      # a cluster ROOT departs
+    members = st.clusters.clusters()[victim]
+    st = engine.leave(st, victim)
+
+    assert victim not in st.clusters.reps
+    assert victim not in st.clusters.uf.parent
+    assign = st.clusters.assignment()
+    assert victim not in assign
+    # every assigned root is a live, observed client
+    mean_roots, _ = st.clusters.cluster_means()
+    assert set(assign.values()) == set(mean_roots)
+    # the cluster survived under its new root, model re-keyed along
+    if len(members) > 1:
+        new_root = min(m for m in members if m != victim)
+        assert new_root in mean_roots
+        assert new_root in st.models and victim not in st.models
+    # departed clients are never sampled again
+    for _ in range(5):
+        _, ids = engine.sample_clients(st)
+        assert victim not in ids
+    st, _ = engine.run_round(st)           # and rounds still run fine
+
+
+def test_join_then_leave_roundtrip():
+    clients, tc, _ = _fed(n_clients=8)
+    extra, _, _ = _fed(n_clients=2, seed=11)
+    st = engine.init("stocfl", LOSS, _params(), clients, _cfg(sample_rate=1.0))
+    st, _ = engine.run_round(st)
+    k0 = st.clusters.n_clusters()
+    st, cid = engine.join(st, extra[0])
+    assert cid == 8 and cid in st.clusters.assignment()
+    st = engine.leave(st, cid)
+    assert cid not in st.clusters.assignment()
+    assert st.clusters.n_clusters() == k0
+
+
+def test_cfl_join_and_leave_rewrite_partition():
+    """Regression: cfl trains on ``members``, so join/leave must rewrite
+    the partition — not just the sampling pool."""
+    clients, _, _ = _fed(n_clients=6)
+    extra, _, _ = _fed(n_clients=2, seed=11)
+    st = engine.init("cfl", LOSS, _params(), clients, _cfg())
+    st, _ = engine.run_round(st)
+
+    st = engine.leave(st, 2)
+    assert all(2 not in g for g in st.members)
+    assert sorted(st.models) == list(range(len(st.members)))
+    st, rec = engine.run_round(st)
+    assert rec["sampled"] == 5                # departed client not trained on
+
+    st, cid = engine.join(st, extra[0])
+    assert any(cid in g for g in st.members)  # newcomer actually trains
+    st, rec = engine.run_round(st)
+    assert rec["sampled"] == 6
+
+
+def test_nearest_consistent_with_infer():
+    rng = np.random.default_rng(0)
+    cs = ClusterState(tau=0.9)
+    reps = [np.eye(4)[i % 2] + 0.01 * rng.normal(size=4) for i in range(4)]
+    cs.observe(range(4), reps)
+    cs.merge_round()
+    probe = np.eye(4)[0]
+    root, near, sim = cs.nearest(probe)
+    assert (root, sim) == cs.infer(probe)
+    assert near is not None and sim > 0.9 and root == near
+    ortho = np.eye(4)[3]
+    root2, near2, _ = cs.nearest(ortho)
+    assert root2 is None and near2 in cs.clusters()
+
+
+def test_merge_weights_by_cardinality():
+    """Regression: cluster-model merges weight by member count, not 1:1."""
+    ones = {"w": jnp.ones((2,))}
+    fives = {"w": 5.0 * jnp.ones((2,))}
+    merged = merge_cluster_models({0: ones, 7: fives}, [(0, 7)],
+                                  {0: 3, 7: 1}, ones)
+    np.testing.assert_allclose(np.asarray(merged[0]["w"]),
+                               2.0 * np.ones(2), rtol=1e-6)   # (3·1+1·5)/4
+    # cascaded merge: counts accumulate
+    merged = merge_cluster_models({0: ones, 1: fives, 2: fives},
+                                  [(0, 1), (0, 2)], {0: 1, 1: 1, 2: 2}, ones)
+    np.testing.assert_allclose(np.asarray(merged[0]["w"]),
+                               4.0 * np.ones(2), rtol=1e-6)   # ((1+5)/2·2+2·5)/4
+
+
+def test_server_state_is_pytree():
+    clients, _, _ = _fed(n_clients=4)
+    st = engine.init("stocfl", LOSS, _params(), clients, _cfg(sample_rate=1.0))
+    st, _ = engine.run_round(st)
+    host = jax.device_get(st)              # pulls every model leaf to host
+    assert isinstance(host, engine.ServerState)
+    assert _leaves_equal(host.omega, st.omega)
+    n_leaves = len(jax.tree.leaves(st))
+    assert n_leaves == len(jax.tree.leaves(st.omega)) + sum(
+        len(jax.tree.leaves(m)) for m in st.models.values())
+
+
+def test_cohort_mesh_placement_matches_host():
+    """The mesh-placed cohort step computes the same round as the host path."""
+    from repro.launch.mesh import make_cohort_mesh
+    clients, _, _ = _fed(n_clients=6)
+    mesh = make_cohort_mesh()
+    a = engine.init("stocfl", LOSS, _params(), clients, _cfg(sample_rate=1.0))
+    b = engine.init("stocfl", LOSS, _params(), clients, _cfg(sample_rate=1.0),
+                    mesh=mesh)
+    for _ in range(2):
+        a, ra = engine.run_round(a)
+        b, rb = engine.run_round(b)
+        assert ra == rb
+    for la, lb in zip(jax.tree.leaves(a.omega), jax.tree.leaves(b.omega)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-6, atol=1e-6)
