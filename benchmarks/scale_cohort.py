@@ -1,0 +1,188 @@
+"""Scale trajectory bench: population × participation sweep on the cohort
+substrate, arena vs legacy restack. Writes ``BENCH_scale.json``.
+
+Sweeps clients ∈ {40, 400, 4000} × participation ∈ {0.1, 0.5, 1.0} of the
+StoCFL round on the paper's synthetic MLP task, in two modes:
+
+  arena   device-resident ClientArena + stacked ClusterBank: cohort data
+          and cluster models are single gathers; cohorts above
+          ``--chunk`` run in lax.map chunks (flat memory) — this is how
+          the 4000-client, 100%-participation point fits and finishes.
+  legacy  the arena-less fallback: per-round Python restack of cohort
+          data AND per-client cluster-model stacking. (The server-side
+          aggregation is the shared segment-sum path in BOTH modes — it
+          is kept identical so the parity tests can assert bitwise
+          equality — so the speedup isolates the gather/stack side.)
+          Run only up to ``--legacy-max-cohort`` clients·participation
+          (it is the thing being replaced; points above the cap are
+          reported as skipped, not silently dropped).
+
+The sweep is orchestration-honest: ``local_steps=1`` keeps the round in
+the regime where the server's data/model movement — the part the arena
+removes — is visible next to the (identical) client compute.
+
+  PYTHONPATH=src python -m benchmarks.scale_cohort              # full sweep
+  PYTHONPATH=src python -m benchmarks.scale_cohort --smoke      # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine
+from repro.data import rotated
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+
+
+def _federation(n_clients: int, n_per: int, seed: int = 0):
+    clients, _, _ = rotated(n_clusters=4, n_clients=n_clients, n_per=n_per,
+                            seed=seed)
+    return [jax.tree.map(jnp.asarray, c) for c in clients]
+
+
+def _cfg(participation: float, chunk: int,
+         local_steps: int) -> engine.EngineConfig:
+    return engine.EngineConfig(
+        tau=0.5, lam=0.05, lr=0.1, local_steps=local_steps,
+        sample_rate=participation, seed=0,
+        # full-gradient Ψ is |θ|-dim; the JL sketch keeps the per-round
+        # clustering state O(1024) per client at every population size
+        # (1024 preserves the cosine gaps well enough that the partition
+        # settles right after onboarding — smaller sketches keep merging
+        # for several rounds, which is clustering noise, not round cost)
+        project_dim=1024,
+        cohort_chunk=chunk)
+
+
+def _time_rounds(state, rounds: int, n_clients: int):
+    """Measure steady-state rounds: one full-participation onboarding
+    round first (observes every client, does all Ψ-merging, compiles the
+    big-cohort path), one sampled round (compiles the steady shapes),
+    then the timed rounds — so the metric is the per-round cost of a
+    fully-onboarded federation, not jit warm-up or the one-time
+    clustering transient."""
+    t0 = time.time()
+    state, _ = engine.run_round(state, np.arange(n_clients))
+    onboard = time.time() - t0
+    for _ in range(5):          # settle residual merges + the bounded set
+        state, _ = engine.run_round(state)   # of cohort-spans-G shapes
+    times = []
+    for _ in range(rounds):
+        t0 = time.time()
+        state, _ = engine.run_round(state)
+        jax.block_until_ready(state.omega)
+        times.append(time.time() - t0)
+    return state, float(np.median(times)), onboard
+
+
+def run_point(clients, n_clients: int, participation: float, mode: str,
+              chunk: int, rounds: int, local_steps: int) -> dict:
+    cohort = max(int(round(participation * n_clients)), 1)
+    eff_chunk = chunk if (mode == "arena" and cohort > chunk > 0) else 0
+    cfg = _cfg(participation, eff_chunk, local_steps)
+    t0 = time.time()
+    st = engine.init("stocfl", LOSS, simple.init(jax.random.PRNGKey(0), TASK),
+                     clients, cfg, arena=(mode == "arena"))
+    st, sec, onboard = _time_rounds(st, rounds, n_clients)
+    return {"clients": n_clients, "participation": participation,
+            "cohort": cohort, "mode": mode, "chunk": eff_chunk,
+            "sec_per_round": round(sec, 4),
+            "sec_onboard_round": round(onboard, 2),
+            "sec_total": round(time.time() - t0, 2),
+            "n_clusters": st.clusters.n_clusters(), "rounds": rounds}
+
+
+def run(smoke: bool = False, chunk: int = 512, rounds: int = 3,
+        n_per: int = 32, local_steps: int = 1,
+        legacy_max_cohort: int = 400):
+    populations = [40, 400] if smoke else [40, 400, 4000]
+    participations = [0.1, 1.0] if smoke else [0.1, 0.5, 1.0]
+    if smoke:
+        rounds = min(rounds, 3)
+    points, skipped = [], []
+    for n in populations:
+        clients = _federation(n, n_per)
+        for p in participations:
+            for mode in ("arena", "legacy"):
+                cohort = max(int(round(p * n)), 1)
+                if mode == "legacy" and cohort > legacy_max_cohort:
+                    skipped.append({"clients": n, "participation": p,
+                                    "mode": mode,
+                                    "reason": f"cohort {cohort} > "
+                                              f"--legacy-max-cohort "
+                                              f"{legacy_max_cohort}"})
+                    print(f"# skip clients={n} p={p} mode=legacy "
+                          f"(cohort {cohort} over legacy cap)")
+                    continue
+                pt = run_point(clients, n, p, mode, chunk, rounds, local_steps)
+                points.append(pt)
+                print(f"# clients={n} p={p} mode={mode} chunk={pt['chunk']} "
+                      f"sec/round={pt['sec_per_round']:.3f}")
+    return points, skipped
+
+
+def summarize(points) -> dict:
+    by = {(p["clients"], p["participation"], p["mode"]): p["sec_per_round"]
+          for p in points}
+    out = {}
+    for (n, part, mode), sec in sorted(by.items()):
+        leg = by.get((n, part, "legacy"))
+        if mode == "arena" and leg:
+            out[f"speedup_{n}_p{part}"] = round(leg / sec, 2)
+    n400 = [v for k, v in out.items() if k.startswith("speedup_400_")]
+    if n400:
+        out["speedup_400"] = round(max(n400), 2)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (40/400 clients, <=2 rounds)")
+    ap.add_argument("--chunk", type=int, default=512,
+                    help="cohort_chunk for arena points with big cohorts")
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="timed steady-state rounds (median reported)")
+    ap.add_argument("--n-per", type=int, default=32)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--legacy-max-cohort", type=int, default=400,
+                    help="largest cohort the legacy restack mode is run at")
+    ap.add_argument("--out", default="BENCH_scale.json")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    points, skipped = run(smoke=args.smoke, chunk=args.chunk,
+                          rounds=args.rounds, n_per=args.n_per,
+                          local_steps=args.local_steps,
+                          legacy_max_cohort=args.legacy_max_cohort)
+    doc = {
+        "bench": "scale_cohort",
+        "task": TASK.name,
+        "n_per": args.n_per,
+        "local_steps": args.local_steps,
+        "backend": jax.default_backend(),
+        "host": platform.machine(),
+        "smoke": args.smoke,
+        "wall_s": round(time.time() - t0, 1),
+        "points": points,
+        "skipped": skipped,
+        "summary": summarize(points),
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(json.dumps(doc["summary"], indent=1))
+    print(f"# wrote {args.out} ({len(points)} points, "
+          f"{len(skipped)} skipped) in {doc['wall_s']}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -99,6 +99,8 @@ def load_server_state(dirpath: str, state):
     the checkpointed arrays, partition, history, and rng position."""
     from repro.core.clustering import ClusterState
 
+    from repro.engine.bank import ClusterBank
+
     with open(os.path.join(dirpath, "manifest.json")) as f:
         man = json.load(f)
     tmpl = state.ctx.init_params
@@ -121,7 +123,8 @@ def load_server_state(dirpath: str, state):
         rng_state=man["rng_state"],
         sizes=tuple(man["sizes"]), left=frozenset(man["left"]),
         omega=arrays["omega"],
-        models={int(k): v for k, v in arrays["models"].items()},
+        models=ClusterBank.from_dict(
+            {int(k): v for k, v in arrays["models"].items()}),
         personal={int(k): v for k, v in arrays["personal"].items()},
         clusters=clusters,
         members=(tuple(tuple(m) for m in man["members"])

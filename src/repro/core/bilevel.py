@@ -53,9 +53,83 @@ def make_cohort_update(loss_fn, lr, lam, local_steps=1, backend: str = "auto"):
     return jax.jit(jax.vmap(cu, in_axes=(0, None, 0)))
 
 
+def chunk_map(fn, in_axes, chunk: int, donate=None):
+    """Memory-flat cohort execution: run a vmapped per-client ``fn`` over
+    the cohort in fixed-size chunks via ``lax.map``.
+
+    ``in_axes`` mirrors the vmap spec (0 = stacked per-client arg, None =
+    shared/broadcast arg). Cohorts of ≤ ``chunk`` clients run unchunked;
+    larger ones are padded to a chunk multiple (repeating leading rows —
+    the pad outputs are sliced off) and reshaped to ``(n_chunks, chunk,
+    ...)`` so ``lax.map`` executes one chunk at a time with reused
+    buffers: peak activation memory is O(chunk), not O(cohort), which is
+    what lets 100% participation at thousands of clients fit. The wrapper
+    is jitted so the whole chunk loop is one XLA program; ``donate``
+    argument positions (default: every stacked arg) are donated off-CPU
+    so their buffers are recycled in place — pass a narrower tuple when
+    the caller reuses a stacked input after the call.
+
+    ``chunk <= 0`` disables chunking (returns ``fn`` unchanged).
+    """
+    if not chunk or chunk <= 0:
+        return fn
+    mapped_pos = tuple(i for i, ax in enumerate(in_axes) if ax == 0)
+    donate = mapped_pos if donate is None else tuple(donate)
+
+    def wrapper(*args):
+        C = jax.tree.leaves(args[mapped_pos[0]])[0].shape[0]
+        if C <= chunk:
+            return fn(*args)
+        n_chunks = -(-C // chunk)
+        pad = n_chunks * chunk - C
+
+        def prep(tree):
+            def one(x):
+                if pad:
+                    x = jnp.concatenate([x, x[:pad]], axis=0)
+                return x.reshape((n_chunks, chunk) + x.shape[1:])
+
+            return jax.tree.map(one, tree)
+
+        stacked = tuple(prep(args[i]) for i in mapped_pos)
+
+        def body(chunks):
+            full = list(args)
+            for p, c in zip(mapped_pos, chunks):
+                full[p] = c
+            return fn(*full)
+
+        outs = jax.lax.map(body, stacked)
+        return jax.tree.map(
+            lambda x: x.reshape((n_chunks * chunk,) + x.shape[2:])[:C], outs)
+
+    if jax.default_backend() == "cpu":      # donation unimplemented on CPU
+        donate = ()
+    return jax.jit(wrapper, donate_argnums=donate)
+
+
 def aggregate(trees_list, weights):
     """Server Aggregate/FedAvg: sample-count weighted mean."""
     return trees.tree_weighted_mean(trees_list, weights)
+
+
+def aggregate_segments(stacked, weights, segment_ids, num_segments: int):
+    """Per-cluster FedAvg as ONE batched op: weighted mean over rows of a
+    stacked pytree grouped by ``segment_ids`` (cohort row -> cluster
+    index). Replaces the per-root Python gather/aggregate loop — the
+    server side of the round stays a fixed number of device ops no matter
+    how many clusters the cohort spans."""
+    w = jnp.asarray(weights, jnp.float32)
+    seg = jnp.asarray(segment_ids)
+    denom = jax.ops.segment_sum(w, seg, num_segments=num_segments)
+    wn = w / denom[seg]
+
+    def leaf(x):
+        wb = wn.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jax.ops.segment_sum(x * wb, seg,
+                                   num_segments=num_segments).astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked)
 
 
 def aggregate_stacked(stacked, weights):

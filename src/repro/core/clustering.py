@@ -87,11 +87,19 @@ class ClusterState:
         return out
 
     def cluster_means(self) -> Tuple[List[int], np.ndarray]:
-        """Ψ̃ per cluster: (roots, (K̃, D) matrix of member means)."""
-        cl = self.clusters()
-        roots = sorted(cl)
-        mat = np.stack([np.mean([self.reps[i] for i in cl[r]], axis=0) for r in roots])
-        return roots, mat
+        """Ψ̃ per cluster: (roots, (K̃, D) matrix of member means).
+
+        Vectorized (segment-sum over the stacked rep matrix) — the
+        per-cluster Python mean loop was O(N) host work per round, a wall
+        when thousands of singletons arrive in round 1."""
+        cids = sorted(self.reps)
+        per = np.fromiter((self.uf.find(c) for c in cids), np.int64, len(cids))
+        roots, inv = np.unique(per, return_inverse=True)
+        R = np.stack([self.reps[c] for c in cids])
+        mat = np.zeros((len(roots), R.shape[1]), np.float32)
+        np.add.at(mat, inv, R)
+        mat /= np.bincount(inv).astype(np.float32)[:, None]
+        return [int(r) for r in roots], mat
 
     def assignment(self) -> Dict[int, int]:
         return {cid: self.uf.find(cid) for cid in self.reps}
@@ -113,15 +121,17 @@ class ClusterState:
         if len(self.reps) < 2:
             return []
         roots, M = self.similarity_matrix()
+        # vectorized pair scan: threshold the whole matrix at once, then
+        # union only the qualifying pairs in the same row-major order the
+        # original O(K̃²) Python loop visited them (merge list unchanged).
+        iu, ju = np.nonzero(np.triu(M >= self.tau, k=1))
         merges = []
-        for i in range(len(roots)):
-            for j in range(i + 1, len(roots)):
-                if M[i, j] >= self.tau:
-                    ra, rb = self.uf.find(roots[i]), self.uf.find(roots[j])
-                    if ra != rb:
-                        keep, absorb = min(ra, rb), max(ra, rb)
-                        self.uf.union(keep, absorb)
-                        merges.append((keep, absorb))
+        for i, j in zip(iu.tolist(), ju.tolist()):
+            ra, rb = self.uf.find(roots[i]), self.uf.find(roots[j])
+            if ra != rb:
+                keep, absorb = min(ra, rb), max(ra, rb)
+                self.uf.union(keep, absorb)
+                merges.append((keep, absorb))
         return merges
 
     # ------------------------------------------------------------- metrics

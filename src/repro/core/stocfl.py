@@ -75,7 +75,8 @@ class StoCFL:
 
     @models.setter
     def models(self, value):
-        self._st = self._st.replace(models=dict(value))
+        from repro.engine.bank import ClusterBank
+        self._st = self._st.replace(models=ClusterBank.from_dict(dict(value)))
 
     @property
     def state(self):

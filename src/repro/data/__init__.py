@@ -8,5 +8,6 @@ from repro.data.synthetic import (  # noqa: F401
     rotated_pathological,
     shifted,
 )
+from repro.data.arena import ClientArena  # noqa: F401
 from repro.data.tokens import synthetic_lm_batch, token_stream  # noqa: F401
 from repro.data.dirichlet import dirichlet_label_skew, quantity_skew  # noqa: F401

@@ -1,0 +1,139 @@
+"""Device-resident client arena: pack every shard once, gather per round.
+
+The engine's legacy data path re-stacks the sampled cohort from the host
+client list every round (``jnp.stack`` over C pytrees — hundreds of
+dispatches plus H2D traffic at realistic populations). The arena packs
+ALL client shards into a single stacked device pytree up front, so a
+cohort is one ``jnp.take`` gather per leaf regardless of C — the
+substrate for §3.3's "arbitrary proportion of client participation" at
+thousands of clients.
+
+Ragged client sizes are handled by pad-and-mask: every client's arrays
+are zero-padded to the longest shard and the gathered batch carries a
+``"mask"`` row-validity array; mask-aware losses (``models/simple``)
+weight per-example terms by it, so pad rows contribute exactly nothing.
+Equal-size federations pack without padding and gather batches that are
+bitwise identical to the legacy restack — the arena/legacy parity tests
+rely on this.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ClientArena:
+    """All client shards as one stacked pytree with leading client axis.
+
+    ``packed``: pytree, leaves ``(N, n_max, ...)``; ``mask``:
+    ``(N, n_max)`` float32 row validity; ``sizes``: host ``(N,)`` true
+    shard lengths; ``ragged``: whether any padding exists.
+    """
+
+    def __init__(self, packed, mask, sizes: np.ndarray, ragged: bool):
+        self.packed = packed
+        self.mask = mask
+        self.sizes = np.asarray(sizes)
+        self.ragged = bool(ragged)
+
+    @classmethod
+    def from_clients(cls, clients: Sequence[Any]) -> "ClientArena":
+        if not clients:
+            raise ValueError("ClientArena needs at least one client")
+        sizes = np.array([int(np.shape(jax.tree.leaves(c)[0])[0])
+                          for c in clients])
+        for c, n in zip(clients, sizes):
+            for leaf in jax.tree.leaves(c):
+                assert np.shape(leaf)[0] == n, (
+                    "every client leaf must share the leading example axis")
+        n_max = int(sizes.max())
+        ragged = bool((sizes != n_max).any())
+
+        def pack(*xs):
+            xs = [np.asarray(x) for x in xs]
+            if not ragged:
+                return jnp.asarray(np.stack(xs))
+            out = np.zeros((len(xs), n_max) + xs[0].shape[1:], xs[0].dtype)
+            for i, x in enumerate(xs):
+                out[i, : x.shape[0]] = x
+            return jnp.asarray(out)
+
+        packed = jax.tree.map(pack, *clients)
+        if ragged and not isinstance(packed, dict):
+            raise TypeError("ragged arenas need dict batches (for the "
+                            "gathered 'mask' key); got "
+                            f"{type(clients[0]).__name__}")
+        mask = jnp.asarray(
+            (np.arange(n_max)[None, :] < sizes[:, None]).astype(np.float32))
+        return cls(packed, mask, sizes, ragged)
+
+    # ------------------------------------------------------------- append
+    def append(self, batch) -> "ClientArena":
+        """New arena with one more client: one padded-row concat per leaf
+        — a flat device copy with O(1) dispatches, instead of the O(N)
+        host repack + per-client Python loop + full H2D re-upload of
+        ``from_clients`` (§5 dynamic joins at thousands of resident
+        clients). The concat still touches every resident byte on device;
+        a growth-capacity buffer would amortize that if join bursts ever
+        dominate. Only a newcomer LONGER than every resident shard forces
+        re-padding the packed arrays to the new ``n_max``."""
+        n = int(np.shape(jax.tree.leaves(batch)[0])[0])
+        n_max = int(self.sizes.max())
+        packed, ragged = self.packed, self.ragged
+        if n > n_max:                         # grow the example axis
+            packed = jax.tree.map(
+                lambda x: jnp.pad(x, [(0, 0), (0, n - n_max)]
+                                  + [(0, 0)] * (x.ndim - 2)), packed)
+            mask_grown = jnp.pad(self.mask, [(0, 0), (0, n - n_max)])
+            ragged = ragged or bool((self.sizes != n).any())
+            n_max = n
+        else:
+            mask_grown = self.mask
+            ragged = ragged or n < n_max
+        if ragged and not isinstance(packed, dict):
+            raise TypeError("ragged arenas need dict batches (for the "
+                            "gathered 'mask' key)")
+
+        def one(x, b):
+            row = np.zeros((1, n_max) + x.shape[2:], x.dtype)
+            row[0, :n] = np.asarray(b)
+            return jnp.concatenate([x, jnp.asarray(row)])
+
+        packed = jax.tree.map(one, packed, batch)
+        row_mask = jnp.asarray(
+            (np.arange(n_max)[None, :] < n).astype(np.float32))
+        mask = jnp.concatenate([mask_grown, row_mask])
+        return ClientArena(packed, mask, np.append(self.sizes, n), ragged)
+
+    # ------------------------------------------------------------- gather
+    def gather(self, client_ids) -> Any:
+        """Stacked cohort batch for ``client_ids`` — one take per leaf.
+        Ragged arenas add a ``"mask"`` leaf for mask-aware losses."""
+        idx = jnp.asarray(np.asarray(client_ids, np.int32))
+        batch = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), self.packed)
+        if self.ragged:
+            batch = dict(batch)
+            batch["mask"] = jnp.take(self.mask, idx, axis=0)
+        return batch
+
+    def client(self, cid: int) -> Any:
+        """One client's unpadded shard (host-loop uses: Ψ extraction)."""
+        n = int(self.sizes[cid])
+        return jax.tree.map(lambda x: x[cid, :n], self.packed)
+
+    # ------------------------------------------------------------- stats
+    @property
+    def n_clients(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.packed))
+
+    def __repr__(self) -> str:
+        return (f"ClientArena(n={self.n_clients}, n_max={int(self.sizes.max())}, "
+                f"ragged={self.ragged}, mb={self.nbytes / 2**20:.1f})")

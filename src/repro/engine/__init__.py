@@ -12,5 +12,6 @@ from repro.engine.registry import (STRATEGIES, get_strategy,  # noqa: F401
                                    list_strategies, register)
 from repro.engine.state import (EngineConfig, EngineContext,  # noqa: F401
                                 ServerState)
+from repro.engine.bank import ClusterBank  # noqa: F401
 from repro.engine import strategies  # noqa: F401  (installs the registry)
 from repro.engine.strategies import Strategy  # noqa: F401

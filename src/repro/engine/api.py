@@ -27,12 +27,22 @@ from repro.engine.state import EngineConfig, EngineContext, ServerState
 
 def init(strategy: str, loss_fn, init_params, clients,
          cfg: Optional[EngineConfig] = None, eval_fn=None,
-         leaf_filter=None, mesh=None) -> ServerState:
-    """Build the static context and the strategy's initial ``ServerState``."""
+         leaf_filter=None, mesh=None, arena: bool = False) -> ServerState:
+    """Build the static context and the strategy's initial ``ServerState``.
+
+    ``arena=True`` packs all client shards into a device-resident
+    ``ClientArena`` so each round's cohort is one gather instead of a
+    per-round Python restack (ragged shard sizes are pad-and-masked; the
+    loss must then honor the batch's ``"mask"`` leaf). ``cfg.cohort_chunk``
+    bounds how many clients one vmapped step executes — see
+    ``bilevel.chunk_map``."""
     cfg = cfg or EngineConfig()
     ctx = EngineContext(loss_fn=loss_fn, init_params=init_params,
                         clients=list(clients), cfg=cfg, eval_fn=eval_fn,
                         leaf_filter=leaf_filter, mesh=mesh)
+    if arena:
+        from repro.data.arena import ClientArena
+        ctx.arena = ClientArena.from_clients(ctx.clients)
     strat = get_strategy(strategy)
     if strat.needs_extractor:
         ctx.extractor = make_extractor(loss_fn, init_params, cfg.project_dim,

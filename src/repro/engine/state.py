@@ -33,7 +33,9 @@ class EngineConfig:
     StoCFL uses (tau, lam, lr, local_steps, sample_rate, aggregator,
     project_dim); FedProx/Ditto read ``mu``; IFCA reads ``n_models`` and
     ``init_key``; CFL reads (eps_rel, eps2) and always runs full
-    participation.
+    participation. ``cohort_chunk`` bounds how many clients execute in
+    one vmapped step — larger cohorts run in lax.map chunks with flat
+    memory (see ``bilevel.chunk_map``); 0 = unchunked.
     """
     tau: float = 0.5
     lam: float = 0.05
@@ -48,6 +50,7 @@ class EngineConfig:
     init_key: int = 0                 # IFCA perturbation key
     eps_rel: float = 0.35             # CFL split thresholds
     eps2: float = 0.01
+    cohort_chunk: int = 0             # max clients per vmapped step (0=off)
 
 
 @dataclasses.dataclass
@@ -60,6 +63,7 @@ class EngineContext:
     eval_fn: Optional[Callable] = None
     leaf_filter: Optional[Callable] = None
     mesh: Optional[Any] = None        # jax Mesh: place cohort on client axis
+    arena: Optional[Any] = None       # ClientArena: device-resident shards
     extractor: Optional[Callable] = None
     cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
 

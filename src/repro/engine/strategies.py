@@ -8,6 +8,16 @@ over the same vmapped cohort primitives (``bilevel.local_sgd`` /
 same pure ``ServerState`` transitions — so benchmarks compare methods,
 not orchestration code.
 
+Scale substrate: when the context carries a ``ClientArena``, cohort data
+is ONE device gather (``arena.gather``) and cluster models are batched
+through the stacked ``ClusterBank`` (gather in, segment-sum aggregate
+out) — per-round host work is O(1) in cohort size. Without an arena the
+legacy per-round Python restack path runs instead (the pre-arena
+behavior, kept as the fallback and as the benchmark baseline). Cohorts
+larger than ``cfg.cohort_chunk`` execute in lax.map chunks with flat
+memory (``bilevel.chunk_map``), which is what sustains 100%
+participation at thousands of clients.
+
 All transitions are pure: they copy the containers they change and return
 a new ``ServerState``. Host-side control flow (partition bookkeeping,
 model selection) stays in numpy; the per-round math is one jitted SPMD
@@ -25,6 +35,7 @@ import numpy as np
 from repro.core import bilevel
 from repro.core.aggregators import AGGREGATORS
 from repro.core.clustering import ClusterState
+from repro.engine.bank import ClusterBank
 from repro.engine.registry import register
 from repro.engine.state import EngineContext, ServerState, fresh_rng_state
 from repro.sharding import specs
@@ -37,8 +48,28 @@ def client_sizes(clients) -> tuple:
 
 
 def _stack(ctx: EngineContext, ids) -> dict:
+    """Legacy cohort data path: per-round Python restack of the host
+    client list (the arena-less fallback)."""
     return jax.tree.map(lambda *xs: jnp.stack(xs),
                         *[ctx.clients[int(c)] for c in ids])
+
+
+def _batches(ctx: EngineContext, ids):
+    """Cohort data: one arena gather, or the legacy per-round restack."""
+    if ctx.arena is not None:
+        return ctx.arena.gather(ids)
+    return _stack(ctx, ids)
+
+
+def _chunk(ctx: EngineContext) -> int:
+    """Effective cohort chunk: the config knob, mesh-aligned so chunks
+    shard evenly over the client axis."""
+    return specs.align_cohort_chunk(int(ctx.cfg.cohort_chunk or 0), ctx.mesh)
+
+
+def _append_to_arena(ctx: EngineContext, batch) -> None:
+    if ctx.arena is not None:
+        ctx.arena = ctx.arena.append(batch)
 
 
 def _weights(state: ServerState, ids) -> np.ndarray:
@@ -54,11 +85,17 @@ def _place(ctx: EngineContext, tree, replicated: bool = False):
     return specs.place_cohort(tree, ctx.mesh)
 
 
-def merge_cluster_models(models: Dict[int, object], merges, counts, init_params):
+def merge_cluster_models(models, merges, counts, init_params):
     """Merge θ along partition merges, each side weighted by its member
     count — a 10-client cluster absorbing a singleton moves by 1/11, not
     1/2. ``counts`` is the pre-merge {root: n_members} snapshot; cascaded
-    merges within one round accumulate correctly."""
+    merges within one round accumulate correctly.
+
+    ``ClusterBank`` inputs take the batched gather/segment-sum path
+    (``bank.merge``); plain dicts keep the original sequential pairwise
+    means (same math — the cascade IS the flat count-weighted mean)."""
+    if isinstance(models, ClusterBank):
+        return models.merge(merges, counts, init_params)
     models = dict(models)
     counts = dict(counts)
     for keep, absorb in merges:
@@ -89,7 +126,8 @@ class Strategy:
         return ServerState(ctx=ctx, strategy=self.name, round=0,
                            rng_state=fresh_rng_state(ctx.cfg.seed),
                            sizes=client_sizes(ctx.clients), left=frozenset(),
-                           omega=ctx.init_params, models={}, personal={})
+                           omega=ctx.init_params, models=ClusterBank.empty(),
+                           personal={})
 
     def round(self, ctx: EngineContext, state: ServerState, client_ids):
         raise NotImplementedError
@@ -102,6 +140,7 @@ class Strategy:
     def join(self, ctx, state, batch):
         cid = len(ctx.clients)
         ctx.clients.append(batch)
+        _append_to_arena(ctx, batch)
         sizes = state.sizes + (int(np.shape(jax.tree.leaves(batch)[0])[0]),)
         return state.replace(sizes=sizes), cid
 
@@ -124,8 +163,10 @@ class StoCFLStrategy(Strategy):
 
     def _cohort(self, ctx):
         cfg = ctx.cfg
-        return ctx.jit("stocfl_cohort", lambda: bilevel.make_cohort_update(
-            ctx.loss_fn, cfg.lr, cfg.lam, cfg.local_steps, backend="jnp"))
+        return ctx.jit("stocfl_cohort", lambda: bilevel.chunk_map(
+            bilevel.make_cohort_update(ctx.loss_fn, cfg.lr, cfg.lam,
+                                       cfg.local_steps, backend="jnp"),
+            (0, None, 0), _chunk(ctx)))
 
     def round(self, ctx, state, client_ids):
         cfg = ctx.cfg
@@ -142,10 +183,15 @@ class StoCFLStrategy(Strategy):
         models = merge_cluster_models(state.models, merges, counts, ctx.init_params)
 
         # --- bi-level CFL (lines 14-19): one SPMD cohort step
-        roots = [clusters.uf.find(int(c)) for c in client_ids]
-        thetas = jax.tree.map(lambda *xs: jnp.stack(xs),
-                              *[models.get(r, ctx.init_params) for r in roots])
-        batches = _stack(ctx, client_ids)
+        roots = np.fromiter((clusters.uf.find(int(c)) for c in client_ids),
+                            np.int64, len(client_ids))
+        if ctx.arena is not None:
+            thetas = models.take(roots, ctx.init_params)     # one gather
+        else:                       # legacy per-client Python model stack
+            thetas = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[models.get(int(r), ctx.init_params)
+                                    for r in roots])
+        batches = _batches(ctx, client_ids)
         thetas = _place(ctx, thetas)
         batches = _place(ctx, batches)
         omega = _place(ctx, state.omega, replicated=True)
@@ -153,10 +199,9 @@ class StoCFLStrategy(Strategy):
 
         w = _weights(state, client_ids)
         omega = AGGREGATORS[cfg.aggregator](omegas_i, w)
-        for root in sorted(set(roots)):
-            idx = np.array([i for i, r in enumerate(roots) if r == root])
-            sel = jax.tree.map(lambda x: x[idx], thetas_i)
-            models[root] = bilevel.aggregate_stacked(sel, w[idx])
+        uroots, seg = np.unique(roots, return_inverse=True)
+        agg = bilevel.aggregate_segments(thetas_i, w, seg, len(uroots))
+        models = models.put([int(r) for r in uroots], agg)
 
         rec = {"n_clusters": clusters.n_clusters(),
                "objective": clusters.objective(),
@@ -187,7 +232,7 @@ class StoCFLStrategy(Strategy):
         from the nearest one's model."""
         state, cid = super().join(ctx, state, batch)
         clusters = state.clusters.copy()
-        models = dict(state.models)
+        models = state.models
         rep = np.asarray(ctx.extractor(batch))
         root, near, _sim = clusters.nearest(rep)
         clusters.observe([cid], [rep])
@@ -195,7 +240,8 @@ class StoCFLStrategy(Strategy):
             clusters.uf.union(min(root, cid), max(root, cid))
             # cid inherits the cluster model (no merge needed: cid had none)
         elif near is not None:
-            models[clusters.uf.find(cid)] = models.get(near, ctx.init_params)
+            models = models.set(clusters.uf.find(cid),
+                                models.get(near, ctx.init_params))
         return state.replace(clusters=clusters, models=models), cid
 
     def leave(self, ctx, state, cid):
@@ -205,8 +251,8 @@ class StoCFLStrategy(Strategy):
         state = super().leave(ctx, state, cid)
         clusters = state.clusters.copy()
         remap = clusters.remove(cid)
-        models = {remap.get(k, k): v for k, v in state.models.items()}
-        return state.replace(clusters=clusters, models=models)
+        return state.replace(clusters=clusters,
+                             models=state.models.rename(remap))
 
     def infer(self, ctx, state, batch):
         """Cluster inference for an unseen client (§4.4), without joining."""
@@ -235,13 +281,14 @@ class FedAvgStrategy(Strategy):
             else:
                 fn = lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr,
                                                     cfg.local_steps)
-            return jax.jit(jax.vmap(fn, in_axes=(None, 0)))
+            return bilevel.chunk_map(jax.jit(jax.vmap(fn, in_axes=(None, 0))),
+                                     (None, 0), _chunk(ctx))
 
         return ctx.jit(f"{self.name}_upd", build)
 
     def round(self, ctx, state, client_ids):
         ids = np.asarray(client_ids)
-        batches = _place(ctx, _stack(ctx, ids))
+        batches = _place(ctx, _batches(ctx, ids))
         outs = self._upd(ctx)(_place(ctx, state.omega, replicated=True), batches)
         omega = bilevel.aggregate_stacked(outs, _weights(state, ids))
         return state.replace(omega=omega), {"sampled": len(ids)}
@@ -265,19 +312,25 @@ class DittoStrategy(Strategy):
 
     def _upds(self, ctx):
         cfg = ctx.cfg
-        gupd = ctx.jit("ditto_g", lambda: jax.jit(jax.vmap(
-            lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr, cfg.local_steps),
-            in_axes=(None, 0))))
-        pupd = ctx.jit("ditto_p", lambda: jax.jit(jax.vmap(
-            lambda v, g, b: bilevel.local_sgd(ctx.loss_fn, v, b, cfg.lr,
-                                              cfg.local_steps, prox_to=g, lam=cfg.mu),
-            in_axes=(0, None, 0))))
+        # gupd must NOT donate batches: the same cohort batch feeds pupd
+        # right after (donation would free it on accelerators)
+        gupd = ctx.jit("ditto_g", lambda: bilevel.chunk_map(
+            jax.jit(jax.vmap(
+                lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr,
+                                               cfg.local_steps),
+                in_axes=(None, 0))), (None, 0), _chunk(ctx), donate=()))
+        pupd = ctx.jit("ditto_p", lambda: bilevel.chunk_map(
+            jax.jit(jax.vmap(
+                lambda v, g, b: bilevel.local_sgd(ctx.loss_fn, v, b, cfg.lr,
+                                                  cfg.local_steps, prox_to=g,
+                                                  lam=cfg.mu),
+                in_axes=(0, None, 0))), (0, None, 0), _chunk(ctx)))
         return gupd, pupd
 
     def round(self, ctx, state, client_ids):
         ids = np.asarray(client_ids)
         gupd, pupd = self._upds(ctx)
-        batches = _place(ctx, _stack(ctx, ids))
+        batches = _place(ctx, _batches(ctx, ids))
         omega = _place(ctx, state.omega, replicated=True)
         g_outs = gupd(omega, batches)
         v_stack = jax.tree.map(lambda *xs: jnp.stack(xs),
@@ -320,28 +373,40 @@ class IFCAStrategy(Strategy):
                 jax.random.fold_in(k, 0), x.shape, x.dtype)
             if jnp.issubdtype(x.dtype, jnp.floating) else x, ctx.init_params)
             for m, k in enumerate(keys)}
-        return super().init_state(ctx).replace(models=models)
+        return super().init_state(ctx).replace(models=ClusterBank.from_dict(models))
 
     def _upd(self, ctx):
         cfg = ctx.cfg
-        return ctx.jit("ifca_upd", lambda: jax.jit(jax.vmap(
-            lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr, cfg.local_steps),
-            in_axes=(0, 0))))
+        return ctx.jit("ifca_upd", lambda: bilevel.chunk_map(
+            jax.jit(jax.vmap(
+                lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr,
+                                               cfg.local_steps),
+                in_axes=(0, 0))), (0, 0), _chunk(ctx)))
+
+    def _choice(self, ctx):
+        """(M, ...) models × (C, ...) batches -> (C, M) losses, one
+        batched computation (the per-client Python loss loop was O(M·C)
+        host dispatches). The cohort axis leads so the same chunking
+        bounds the choice step's memory too — it would otherwise
+        materialize M·C activations at once."""
+        return ctx.jit("ifca_choice", lambda: bilevel.chunk_map(
+            jax.jit(lambda ms, bs: jax.vmap(
+                lambda b: jax.vmap(lambda m: ctx.loss_fn(m, b))(ms))(bs)),
+            (None, 0), _chunk(ctx), donate=()))
 
     def round(self, ctx, state, client_ids):
         ids = np.asarray(client_ids)
-        choices = [int(np.argmin([float(ctx.loss_fn(state.models[m], ctx.clients[int(c)]))
-                                  for m in range(ctx.cfg.n_models)])) for c in ids]
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
-                               *[state.models[ch] for ch in choices])
-        outs = self._upd(ctx)(_place(ctx, stacked), _place(ctx, _stack(ctx, ids)))
+        m_all = np.arange(ctx.cfg.n_models)
+        batches = _batches(ctx, ids)
+        hyps = state.models.take(m_all, ctx.init_params)
+        losses = np.asarray(self._choice(ctx)(hyps, batches))
+        choices = np.argmin(losses, axis=1)
+        thetas = state.models.take(choices, ctx.init_params)
+        outs = self._upd(ctx)(_place(ctx, thetas), _place(ctx, batches))
         w = _weights(state, ids)
-        models = dict(state.models)
-        for m in range(ctx.cfg.n_models):
-            idx = np.array([j for j, ch in enumerate(choices) if ch == m])
-            if len(idx):
-                sel = jax.tree.map(lambda x: x[idx], outs)
-                models[m] = bilevel.aggregate_stacked(sel, w[idx])
+        um, seg = np.unique(choices, return_inverse=True)
+        agg = bilevel.aggregate_segments(outs, w, seg, len(um))
+        models = state.models.put([int(m) for m in um], agg)
         return state.replace(models=models), {"sampled": len(ids)}
 
     def evaluate(self, ctx, state, test_sets, true_cluster=None):
@@ -364,13 +429,15 @@ class CFLStrategy(Strategy):
     def init_state(self, ctx):
         state = super().init_state(ctx)
         return state.replace(members=(tuple(range(len(ctx.clients))),),
-                             models={0: ctx.init_params})
+                             models=ClusterBank.from_dict({0: ctx.init_params}))
 
     def _upd(self, ctx):
         cfg = ctx.cfg
-        return ctx.jit("cfl_upd", lambda: jax.jit(jax.vmap(
-            lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr, cfg.local_steps),
-            in_axes=(None, 0))))
+        return ctx.jit("cfl_upd", lambda: bilevel.chunk_map(
+            jax.jit(jax.vmap(
+                lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr,
+                                               cfg.local_steps),
+                in_axes=(None, 0))), (None, 0), _chunk(ctx)))
 
     def round(self, ctx, state, client_ids):
         cfg = ctx.cfg
@@ -380,10 +447,9 @@ class CFLStrategy(Strategy):
         for k, members in enumerate(state.members):
             members = list(members)
             model = state.models[k]
-            outs = upd(model, _place(ctx, _stack(ctx, members)))
+            outs = upd(model, _place(ctx, _batches(ctx, members)))
             deltas = jax.tree.map(lambda o, m: o - m, outs, model)
-            flat = np.stack([np.asarray(trees.tree_flatten_vector(
-                jax.tree.map(lambda x: x[j], deltas))) for j in range(len(members))])
+            flat = np.asarray(jax.vmap(trees.tree_flatten_vector)(deltas))
             new_model = bilevel.aggregate_stacked(outs, sizes[np.array(members)])
             mean_norm = float(np.linalg.norm(flat.mean(axis=0)))
             max_norm = float(np.linalg.norm(flat, axis=1).max())
@@ -400,7 +466,7 @@ class CFLStrategy(Strategy):
             new_members.append(tuple(members))
             new_models.append(new_model)
         state = state.replace(members=tuple(new_members),
-                              models=dict(enumerate(new_models)))
+                              models=ClusterBank.from_dict(dict(enumerate(new_models))))
         return state, {"n_clusters": len(new_members),
                        "sampled": sum(len(m) for m in new_members)}
 
@@ -436,7 +502,8 @@ class CFLStrategy(Strategy):
         if not members:                       # last client left: keep the
             members = [()]                    # root cluster's model around
             models = {0: state.models.get(0, ctx.init_params)}
-        return state.replace(members=tuple(members), models=models)
+        return state.replace(members=tuple(members),
+                             models=ClusterBank.from_dict(models))
 
     def evaluate(self, ctx, state, test_sets, true_cluster=None):
         out = {}

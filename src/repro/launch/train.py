@@ -43,7 +43,7 @@ def _engine_cfg(args) -> engine.EngineConfig:
     return engine.EngineConfig(
         tau=args.tau, lam=args.lam, lr=args.lr, local_steps=args.local_steps,
         sample_rate=1.0 if args.algo == "cfl" else args.sample_rate,
-        seed=args.seed, mu=args.lam)
+        seed=args.seed, mu=args.lam, cohort_chunk=args.cohort_chunk)
 
 
 def run_classification(args) -> dict:
@@ -62,7 +62,7 @@ def run_classification(args) -> dict:
     mesh = make_cohort_mesh() if args.mesh else None
     t0 = time.time()
     st = engine.init(args.algo, loss, params, clients, _engine_cfg(args),
-                     eval_fn=evalf, mesh=mesh)
+                     eval_fn=evalf, mesh=mesh, arena=args.arena)
     st = engine.run(st, args.rounds, log_every=max(args.rounds // 10, 1))
     res = engine.evaluate(st, test_sets, true_cluster)
     out = {"algo": args.algo, "cluster_avg_acc": res["cluster_avg"],
@@ -98,10 +98,10 @@ def run_llm(args) -> dict:
     ecfg = engine.EngineConfig(tau=args.tau, lam=args.lam, lr=args.lr,
                                local_steps=args.local_steps,
                                sample_rate=args.sample_rate, seed=args.seed,
-                               project_dim=8192)
+                               project_dim=8192, cohort_chunk=args.cohort_chunk)
     mesh = make_cohort_mesh() if args.mesh else None
     st = engine.init("stocfl", model.loss_fn, params, clients, ecfg,
-                     leaf_filter=llm_leaf_filter, mesh=mesh)
+                     leaf_filter=llm_leaf_filter, mesh=mesh, arena=args.arena)
     t0 = time.time()
     for t in range(args.rounds):
         st, rec = engine.run_round(st)
@@ -129,6 +129,12 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mesh", action="store_true",
                     help="place the cohort step on a client-axis mesh")
+    ap.add_argument("--arena", action="store_true",
+                    help="pack client shards into a device-resident arena "
+                         "(cohort = one gather instead of a per-round restack)")
+    ap.add_argument("--cohort-chunk", type=int, default=0,
+                    help="max clients per vmapped step; larger cohorts run "
+                         "in lax.map chunks with flat memory (0 = unchunked)")
     ap.add_argument("--clients", type=int, default=80)
     ap.add_argument("--domains", type=int, default=2)
     ap.add_argument("--rounds", type=int, default=50)

@@ -84,13 +84,27 @@ def apply(params, x, cfg: TaskConfig):
 
 
 def loss_fn(params, batch, cfg: TaskConfig):
-    """batch: {"x": (B,...), "y": (B,) int32} -> mean CE loss."""
+    """batch: {"x": (B,...), "y": (B,) int32} -> mean CE loss.
+
+    An optional ``"mask"`` leaf ((B,) validity weights — the arena's
+    pad-and-mask representation of ragged client shards) turns the mean
+    into a masked mean: pad rows contribute exactly nothing."""
     logits = apply(params, batch["x"], cfg).astype(jnp.float32)
     logz = jax.scipy.special.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
-    return jnp.mean(logz - gold)
+    per = logz - gold
+    mask = batch.get("mask")
+    if mask is None:
+        return jnp.mean(per)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(per * m) / jnp.maximum(jnp.sum(m), 1.0)
 
 
 def accuracy(params, batch, cfg: TaskConfig):
     logits = apply(params, batch["x"], cfg)
-    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    hit = (jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32)
+    mask = batch.get("mask")
+    if mask is None:
+        return jnp.mean(hit)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(hit * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -197,6 +197,24 @@ def client_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data", "clients") if a in mesh.axis_names)
 
 
+def mesh_client_count(mesh: Mesh) -> int:
+    """Total devices along the client/cohort axes."""
+    n = 1
+    for a in client_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def align_cohort_chunk(chunk: int, mesh: Optional[Mesh]) -> int:
+    """Round ``cohort_chunk`` up to a multiple of the mesh's client-axis
+    size so every lax.map chunk shards evenly over the devices (a chunk
+    that doesn't divide falls back to replicated placement — wasteful)."""
+    if mesh is None or chunk <= 0:
+        return chunk
+    n = mesh_client_count(mesh)
+    return chunk if n <= 1 else -(-chunk // n) * n
+
+
 def cohort_spec(mesh: Mesh, ndim: int) -> P:
     """PartitionSpec sharding the leading (client) axis over client_axes."""
     axes = client_axes(mesh)

@@ -1,0 +1,233 @@
+"""Arena + chunked-cohort battery: the device-resident data path and the
+chunked executor must be invisible to every strategy — identical (bitwise
+where dtypes allow) or tightly-allclose trajectories vs the legacy
+per-round restack and the unchunked vmapped step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import bilevel
+from repro.data import rotated
+from repro.data.arena import ClientArena
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+EVAL = jax.jit(lambda p, b: simple.accuracy(p, b, TASK))
+ALL = ["stocfl", "fedavg", "fedprox", "ditto", "ifca", "cfl"]
+
+
+def _fed(n_clients=8, n_per=24, seed=3):
+    clients, tc, tests = rotated(n_clusters=2, n_clients=n_clients,
+                                 n_per=n_per, seed=seed)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    tests = {k: jax.tree.map(jnp.asarray, v) for k, v in tests.items()}
+    return clients, tc, tests
+
+
+def _params(seed=0):
+    return simple.init(jax.random.PRNGKey(seed), TASK)
+
+
+def _cfg(**kw):
+    kw.setdefault("local_steps", 2)
+    kw.setdefault("sample_rate", 0.5)
+    kw.setdefault("seed", 0)
+    return engine.EngineConfig(**kw)
+
+
+def _assert_state_close(a, b, exact=True):
+    assert a.round == b.round
+    assert a.history == b.history if exact else True
+    for la, lb in zip(jax.tree.leaves(a.omega), jax.tree.leaves(b.omega)):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        else:
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       rtol=2e-6, atol=1e-6)
+    assert a.models.keys() == b.models.keys()
+    for k in a.models:
+        for la, lb in zip(jax.tree.leaves(a.models[k]),
+                          jax.tree.leaves(b.models[k])):
+            if exact:
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+            else:
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           rtol=2e-6, atol=1e-6)
+    assert a.personal.keys() == b.personal.keys()
+    for k in a.personal:
+        for la, lb in zip(jax.tree.leaves(a.personal[k]),
+                          jax.tree.leaves(b.personal[k])):
+            if exact:
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+            else:
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           rtol=2e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------ arena basics
+def test_arena_pack_equal_sizes_is_exact():
+    clients, _, _ = _fed(n_clients=6)
+    ar = ClientArena.from_clients(clients)
+    assert not ar.ragged and ar.n_clients == 6
+    ids = [4, 1, 3]
+    got = ar.gather(ids)
+    want = jax.tree.map(lambda *xs: jnp.stack(xs), *[clients[i] for i in ids])
+    assert "mask" not in got                      # no pad -> legacy shapes
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_arena_ragged_pad_and_mask():
+    rng = np.random.default_rng(0)
+    sizes = [5, 9, 3]
+    clients = [{"x": rng.normal(size=(n, 4)).astype(np.float32),
+                "y": rng.integers(0, 3, size=n).astype(np.int32)}
+               for n in sizes]
+    ar = ClientArena.from_clients(clients)
+    assert ar.ragged
+    got = ar.gather([0, 1, 2])
+    assert got["x"].shape == (3, 9, 4) and got["mask"].shape == (3, 9)
+    np.testing.assert_array_equal(np.asarray(got["mask"]).sum(axis=1), sizes)
+    # pad rows are zero AND masked out
+    np.testing.assert_array_equal(np.asarray(got["x"][0, 5:]), 0.0)
+    # unpadded single-client view round-trips
+    for i, n in enumerate(sizes):
+        c = ar.client(i)
+        np.testing.assert_array_equal(np.asarray(c["x"]), clients[i]["x"])
+
+
+def test_arena_masked_loss_matches_unpadded():
+    """Masked loss over a padded shard == plain loss over the raw shard —
+    pad rows contribute exactly nothing."""
+    rng = np.random.default_rng(1)
+    sizes = [7, 12]
+    clients = [{"x": rng.normal(size=(n, 64)).astype(np.float32),
+                "y": rng.integers(0, 10, size=n).astype(np.int32)}
+               for n in sizes]
+    ar = ClientArena.from_clients(clients)
+    params = _params()
+    got = ar.gather([0, 1])
+    for i in range(2):
+        padded = jax.tree.map(lambda x: x[i], got)
+        want = float(LOSS(params, jax.tree.map(jnp.asarray, clients[i])))
+        assert float(LOSS(params, padded)) == pytest.approx(want, rel=1e-6)
+        want_acc = float(EVAL(params, jax.tree.map(jnp.asarray, clients[i])))
+        assert float(EVAL(params, padded)) == pytest.approx(want_acc, rel=1e-6)
+
+
+def test_ragged_federation_trains_only_with_arena():
+    """Ragged shards can't jnp.stack (legacy path); the arena's
+    pad-and-mask makes the same federation trainable."""
+    rng = np.random.default_rng(2)
+    clients = [{"x": rng.normal(size=(n, 64)).astype(np.float32),
+                "y": rng.integers(0, 10, size=n).astype(np.int32)}
+               for n in [16, 24, 8, 16, 24, 8]]
+    st = engine.init("stocfl", LOSS, _params(), clients,
+                     _cfg(sample_rate=1.0), arena=True)
+    assert tuple(st.ctx.arena.sizes) == (16, 24, 8, 16, 24, 8)
+    for _ in range(2):
+        st, rec = engine.run_round(st)
+    assert rec["sampled"] == 6
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(st.omega))
+
+
+def test_arena_append_matches_repack():
+    """O(1) append ≡ full from_clients repack, through every case: same
+    size, shorter (goes ragged), and longer (re-pads the arena)."""
+    rng = np.random.default_rng(3)
+    mk = lambda n: {"x": rng.normal(size=(n, 4)).astype(np.float32),
+                    "y": rng.integers(0, 3, size=n).astype(np.int32)}
+    clients = [mk(6), mk(6)]
+    ar = ClientArena.from_clients(clients)
+    for n_new in [6, 3, 9]:                   # equal, shorter, longer
+        clients.append(mk(n_new))
+        ar = ar.append(clients[-1])
+        want = ClientArena.from_clients(clients)
+        assert ar.ragged == want.ragged
+        np.testing.assert_array_equal(ar.sizes, want.sizes)
+        ga, gw = (a.gather(range(len(clients))) for a in (ar, want))
+        for la, lw in zip(jax.tree.leaves(ga), jax.tree.leaves(gw)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lw))
+
+
+# ------------------------------------------------------ arena/legacy parity
+@pytest.mark.parametrize("name", ALL)
+def test_arena_matches_legacy_restack(name):
+    """Equal-size federations: the arena gather feeds bit-identical
+    batches, so the whole ServerState trajectory is bitwise equal to the
+    legacy per-round restack path — for every registered strategy."""
+    clients, tc, tests = _fed()
+    a = engine.init(name, LOSS, _params(), clients, _cfg(), eval_fn=EVAL)
+    b = engine.init(name, LOSS, _params(), clients, _cfg(), eval_fn=EVAL,
+                    arena=True)
+    assert a.ctx.arena is None and b.ctx.arena is not None
+    for _ in range(3):
+        a, ra = engine.run_round(a)
+        b, rb = engine.run_round(b)
+        assert ra == rb
+    _assert_state_close(a, b, exact=True)
+    assert engine.evaluate(a, tests, tc) == engine.evaluate(b, tests, tc)
+
+
+# -------------------------------------------------- chunked cohort execution
+def test_chunk_map_matches_unchunked_fn():
+    cohort = bilevel.make_cohort_update(LOSS, lr=0.1, lam=0.05, local_steps=2)
+    chunked = bilevel.chunk_map(cohort, (0, None, 0), chunk=3)
+    clients, _, _ = _fed(n_clients=8)
+    params = _params()
+    thetas = jax.tree.map(lambda x: jnp.stack([x] * 8), params)
+    batches = jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
+    t0, o0 = cohort(thetas, params, batches)          # 8 = one vmap
+    t1, o1 = chunked(thetas, params, batches)         # 8 = 3+3+2(padded)
+    for a, b in zip(jax.tree.leaves((t0, o0)), jax.tree.leaves((t1, o1))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-6, atol=1e-6)
+
+
+def test_chunk_map_noop_below_chunk():
+    cohort = bilevel.make_cohort_update(LOSS, lr=0.1, lam=0.05, local_steps=1)
+    chunked = bilevel.chunk_map(cohort, (0, None, 0), chunk=16)
+    clients, _, _ = _fed(n_clients=4)
+    params = _params()
+    thetas = jax.tree.map(lambda x: jnp.stack([x] * 4), params)
+    batches = jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
+    t0, _ = cohort(thetas, params, batches)
+    t1, _ = chunked(thetas, params, batches)
+    for a, b in zip(jax.tree.leaves(t0), jax.tree.leaves(t1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_chunked_matches_unchunked_rounds(name):
+    """cohort_chunk must not change any strategy's trajectory (clients are
+    independent under vmap; chunking only re-tiles the batch axis)."""
+    clients, _, _ = _fed()
+    a = engine.init(name, LOSS, _params(), clients,
+                    _cfg(sample_rate=1.0), eval_fn=EVAL, arena=True)
+    b = engine.init(name, LOSS, _params(), clients,
+                    _cfg(sample_rate=1.0, cohort_chunk=3), eval_fn=EVAL,
+                    arena=True)
+    for _ in range(2):
+        a, ra = engine.run_round(a)
+        b, rb = engine.run_round(b)
+        assert ra.get("sampled") == rb.get("sampled")
+    _assert_state_close(b, a, exact=False)
+
+
+def test_chunked_arena_join_leave_still_work():
+    clients, _, _ = _fed(n_clients=8)
+    extra, _, _ = _fed(n_clients=2, seed=11)
+    st = engine.init("stocfl", LOSS, _params(), clients,
+                     _cfg(sample_rate=1.0, cohort_chunk=4), arena=True)
+    st, _ = engine.run_round(st)
+    st, cid = engine.join(st, extra[0])
+    assert st.ctx.arena.n_clients == 9        # arena repacked on join
+    st, rec = engine.run_round(st)
+    assert rec["sampled"] == 9
+    st = engine.leave(st, cid)
+    st, rec = engine.run_round(st)
+    assert rec["sampled"] == 8

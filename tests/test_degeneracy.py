@@ -1,0 +1,152 @@
+"""§3.4 degeneracy claims as executable trajectory tests: StoCFL's knobs
+collapse it onto each baseline, and the engine reproduces the baseline's
+trajectory round-for-round.
+
+  τ=1          → Ditto  (no merges: every client is its own cluster, the
+                 θ-prox to ω is Ditto's personal prox to the broadcast
+                 global; exact at local_steps=1, where the fused bi-level
+                 step proxes to the same pre-step ω Ditto broadcasts)
+  λ=0          → CFL    (no knowledge transfer: with the PARTITION frozen
+                 to the same clusters, per-cluster θ updates are plain
+                 local SGD + per-cluster FedAvg — exactly CFL's step)
+  λ=0 ∧ τ=−1   → FedAvg (single cluster + no prox: both θ_k and ω follow
+                 the FedAvg recursion)
+
+Each pair runs 3 rounds and must match allclose at every round.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.data import rotated
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+
+RTOL, ATOL = 2e-6, 1e-6
+
+
+def _fed(n_clients=8, n_per=24, seed=5):
+    clients, tc, tests = rotated(n_clusters=2, n_clients=n_clients,
+                                 n_per=n_per, seed=seed)
+    return [jax.tree.map(jnp.asarray, c) for c in clients], tc
+
+
+def _params(seed=0):
+    return simple.init(jax.random.PRNGKey(seed), TASK)
+
+
+def _close(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("arena", [False, True], ids=["legacy", "arena"])
+def test_tau_one_equals_ditto(arena):
+    """τ=1, E=1: per-client cluster models ≡ Ditto personal models and
+    both ω trajectories coincide, round by round."""
+    clients, _ = _fed()
+    n = len(clients)
+    cfg_s = engine.EngineConfig(tau=1.0, lam=0.05, lr=0.1, local_steps=1,
+                                sample_rate=0.5, seed=0)
+    cfg_d = engine.EngineConfig(lr=0.1, local_steps=1, sample_rate=0.5,
+                                seed=0, mu=0.05)
+    sto = engine.init("stocfl", LOSS, _params(), clients, cfg_s, arena=arena)
+    dit = engine.init("ditto", LOSS, _params(), clients, cfg_d, arena=arena)
+    for _ in range(3):
+        sto, rs = engine.run_round(sto)
+        dit, rd = engine.run_round(dit)
+        assert rs["sampled"] == rd["sampled"]      # same rng -> same cohort
+        assert rs["n_clusters"] == len(sto.clusters.seen)   # never merges
+        _close(sto.omega, dit.omega)
+        for cid in range(n):                       # singleton root == cid
+            _close(sto.cluster_model(cid), dit.personal[cid])
+
+
+@pytest.mark.parametrize("arena", [False, True], ids=["legacy", "arena"])
+def test_lam_zero_equals_cfl(arena):
+    """λ=0 with the partition frozen to the same clusters: StoCFL's
+    per-cluster θ transition ≡ CFL's per-cluster FedAvg of local SGD.
+
+    StoCFL discovers the partition in round 1 (Ψ-merging); CFL is then
+    started FROM that partition (members pre-set, split criterion
+    disabled via a huge eps2 so the partition stays frozen) with the same
+    per-cluster models, and both must stay in lockstep for 3 rounds."""
+    clients, _ = _fed()
+    cfg_s = engine.EngineConfig(tau=0.5, lam=0.0, lr=0.1, local_steps=2,
+                                sample_rate=1.0, seed=0)
+    sto = engine.init("stocfl", LOSS, _params(), clients, cfg_s, arena=arena)
+    sto, _ = engine.run_round(sto)                 # round 1: partition forms
+
+    part = {}
+    for cid, root in sto.clusters.assignment().items():
+        part.setdefault(root, []).append(cid)
+    roots = sorted(part)
+    assert len(roots) >= 2                         # a real multi-cluster case
+
+    cfg_c = engine.EngineConfig(lr=0.1, local_steps=2, sample_rate=1.0,
+                                seed=0, eps2=1e9)  # never split
+    cfl = engine.init("cfl", LOSS, _params(), clients, cfg_c, arena=arena)
+    cfl = cfl.replace(
+        members=tuple(tuple(sorted(part[r])) for r in roots),
+        models=engine.ClusterBank.from_dict(
+            {k: sto.models[r] for k, r in enumerate(roots)}))
+
+    for _ in range(3):
+        sto, _ = engine.run_round(sto)
+        cfl, rc = engine.run_round(cfl)
+        assert rc["n_clusters"] == len(roots)      # CFL partition frozen
+        assert sorted(part) == roots               # Ψ partition frozen too
+        part = {}
+        for cid, root in sto.clusters.assignment().items():
+            part.setdefault(root, []).append(cid)
+        for k, r in enumerate(roots):
+            _close(sto.models[r], cfl.models[k])
+
+
+@pytest.mark.parametrize("arena", [False, True], ids=["legacy", "arena"])
+def test_lam_zero_tau_minus_one_equals_fedavg(arena):
+    """λ=0 ∧ τ=−1: everything merges into one cluster, the prox vanishes —
+    StoCFL's single θ AND its ω both follow the FedAvg recursion.
+
+    Full participation makes the equivalence total. Under partial
+    participation only ω stays on FedAvg's trajectory: each round's
+    newly-OBSERVED clients enter the merge as lazy θ=ω₀ singletons
+    (knowledge-preserving seeding, §3.2), which nudges θ off the pure
+    recursion — asserted separately below."""
+    clients, _ = _fed()
+    cfg_s = engine.EngineConfig(tau=-1.0, lam=0.0, lr=0.1, local_steps=2,
+                                sample_rate=1.0, seed=0)
+    cfg_f = engine.EngineConfig(lr=0.1, local_steps=2, sample_rate=1.0, seed=0)
+    sto = engine.init("stocfl", LOSS, _params(), clients, cfg_s, arena=arena)
+    fed = engine.init("fedavg", LOSS, _params(), clients, cfg_f, arena=arena)
+    for _ in range(3):
+        sto, rs = engine.run_round(sto)
+        fed, rf = engine.run_round(fed)
+        assert rs["sampled"] == rf["sampled"]
+        assert rs["n_clusters"] == 1
+        _close(sto.omega, fed.omega)
+        root = min(sto.clusters.seen)
+        _close(sto.models[root], fed.omega)
+
+
+def test_lam_zero_tau_minus_one_omega_tracks_fedavg_partial():
+    """Partial participation (0.5): ω still follows FedAvg exactly — the
+    lazy-θ seeding above only perturbs the cluster model."""
+    clients, _ = _fed()
+    cfg_s = engine.EngineConfig(tau=-1.0, lam=0.0, lr=0.1, local_steps=2,
+                                sample_rate=0.5, seed=0)
+    cfg_f = engine.EngineConfig(lr=0.1, local_steps=2, sample_rate=0.5, seed=0)
+    sto = engine.init("stocfl", LOSS, _params(), clients, cfg_s)
+    fed = engine.init("fedavg", LOSS, _params(), clients, cfg_f)
+    for _ in range(3):
+        sto, rs = engine.run_round(sto)
+        fed, rf = engine.run_round(fed)
+        assert rs["sampled"] == rf["sampled"] and rs["n_clusters"] == 1
+        _close(sto.omega, fed.omega)

@@ -223,9 +223,17 @@ def test_server_state_is_pytree():
     host = jax.device_get(st)              # pulls every model leaf to host
     assert isinstance(host, engine.ServerState)
     assert _leaves_equal(host.omega, st.omega)
+    # cluster models are ONE stacked pytree (leading K axis), not K copies:
+    # the state's leaf count is omega + one stacked model, regardless of K
     n_leaves = len(jax.tree.leaves(st))
-    assert n_leaves == len(jax.tree.leaves(st.omega)) + sum(
-        len(jax.tree.leaves(m)) for m in st.models.values())
+    assert n_leaves == (len(jax.tree.leaves(st.omega))
+                        + len(jax.tree.leaves(st.models.stacked)))
+    k = len(st.models)
+    assert k >= 1
+    for leaf in jax.tree.leaves(st.models.stacked):
+        assert leaf.shape[0] == k
+    assert isinstance(host.models, engine.ClusterBank)
+    assert host.models.keys() == st.models.keys()
 
 
 def test_cohort_mesh_placement_matches_host():

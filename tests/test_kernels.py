@@ -95,6 +95,78 @@ def test_ssm_scan_decay_zero_is_pointwise():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
+# ---------------------------------------------- arena pad-and-mask shapes
+# The ClientArena pads ragged populations with zero rows; the kernels see
+# rep matrices whose tail rows are pad and flat params whose lengths don't
+# hit block multiples. Pad rows must be inert: exact zeros in the output,
+# zero influence on the real block.
+
+def test_cosine_sim_pad_rows_are_inert():
+    """Arena-style (N_real + pad) rep matrix: pallas == ref everywhere,
+    pad rows/cols come out exactly 0, and the real block is unchanged
+    vs computing on the unpadded matrix alone."""
+    n_real, n_pad, d = 11, 21, 40            # pad to a ragged non-multiple
+    x = jax.random.normal(KEY, (n_real, d))
+    xp = jnp.zeros((n_pad, d)).at[:n_real].set(x)
+    got = cosine_sim(xp, bn=16, bk=64, interpret=True)
+    want = ref.cosine_sim_ref(xp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    g = np.asarray(got)
+    np.testing.assert_array_equal(g[n_real:, :], 0.0)      # mask rows
+    np.testing.assert_array_equal(g[:, n_real:], 0.0)      # mask cols
+    alone = cosine_sim(x, bn=16, bk=64, interpret=True)
+    np.testing.assert_allclose(g[:n_real, :n_real], np.asarray(alone),
+                               atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_real=st.integers(1, 30), n_pad_extra=st.integers(0, 20))
+def test_cosine_sim_padded_sweep(n_real, n_pad_extra):
+    x = jax.random.normal(jax.random.PRNGKey(n_real * 31 + n_pad_extra),
+                          (n_real, 24))
+    xp = jnp.zeros((n_real + n_pad_extra, 24)).at[:n_real].set(x)
+    got = np.asarray(cosine_sim(xp, bn=8, bk=32, interpret=True))
+    np.testing.assert_allclose(got, np.asarray(ref.cosine_sim_ref(xp)),
+                               atol=1e-5)
+    assert (got[n_real:] == 0.0).all()
+
+
+def test_prox_update_ragged_tail_matches_ref():
+    """Flat param lengths from ragged-arena models never align to the
+    block; the kernel's internal zero-pad must not leak into the tail."""
+    for n in [1, 63, 64, 65, 255, 257, 1000]:
+        ks = jax.random.split(jax.random.PRNGKey(n), 4)
+        t, o, gt, go = (jax.random.normal(k, (n,)) for k in ks)
+        got_t, got_o = prox_update_flat(t, o, gt, go, 0.05, 0.3,
+                                        block=64, interpret=True)
+        want_t, want_o = ref.prox_update_ref(t, o, gt, go, 0.05, 0.3)
+        assert got_t.shape == (n,) and got_o.shape == (n,)
+        np.testing.assert_allclose(np.asarray(got_t), np.asarray(want_t),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o),
+                                   atol=1e-5)
+
+
+def test_prox_update_masked_region_identity():
+    """Zero gradients on masked entries (what a masked loss produces for
+    pad rows) leave θ moving only by the prox pull and ω exactly fixed —
+    pad examples cannot train."""
+    n = 130
+    t = jax.random.normal(KEY, (n,))
+    o = jax.random.normal(jax.random.fold_in(KEY, 1), (n,))
+    mask = (jnp.arange(n) < 77).astype(jnp.float32)
+    gt = jax.random.normal(jax.random.fold_in(KEY, 2), (n,)) * mask
+    go = jax.random.normal(jax.random.fold_in(KEY, 3), (n,)) * mask
+    got_t, got_o = prox_update_flat(t, o, gt, go, 0.1, 0.5,
+                                    block=64, interpret=True)
+    pad = np.asarray(mask) == 0.0
+    np.testing.assert_allclose(np.asarray(got_o)[pad],
+                               np.asarray(o)[pad], atol=1e-6)
+    want_pad_t = np.asarray(t)[pad] - 0.1 * 0.5 * (np.asarray(t)[pad]
+                                                   - np.asarray(o)[pad])
+    np.testing.assert_allclose(np.asarray(got_t)[pad], want_pad_t, atol=1e-6)
+
+
 # ------------------------------------------------------------ ops wrappers
 def test_ops_backend_agreement():
     x = jax.random.normal(KEY, (20, 30))

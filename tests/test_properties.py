@@ -1,0 +1,170 @@
+"""Property-based battery for ``UnionFind`` / ``ClusterState`` — the host
+bookkeeping the whole bi-level orchestration trusts. Invariants:
+
+  * the partition reached by merging is independent of merge/observation
+    order (the merge pass is the transitive closure of the τ-threshold
+    graph, so only the edge SET matters);
+  * ``remove()`` leaves the union-find, reps, and assignment mutually
+    consistent (roots are live minimum members; remap is exact);
+  * the Eq. 2 objective Σ_{i<j} cos(Ψ̃_i, Ψ̃_j) is non-increasing under
+    merge passes for representations in the non-negative cone.
+
+The cone restriction on the last property is necessary, not cosmetic:
+with mixed-sign Ψ a merge can INCREASE Eq. 2 (e.g. unit reps a,b with
+cos(a,b)=0.31 ≥ τ and a third cluster c ≈ −(a+b): merging {a,b} replaces
+cos(a,c)+cos(b,c) ≈ −1.62 with cos(m,c) ≈ −1, a net increase). For
+non-negative vectors, cos(mean(G), x) ≤ Σ_{g∈G} cos(g, x) (Cauchy-Schwarz
+plus |Σg| ≥ max|g| when all pairwise dots are ≥ 0) and every removed
+intra-pair contributes ≥ 0, so each merge pass can only shrink the sum.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the test extra
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import ClusterState, UnionFind
+
+
+# --------------------------------------------------------------- generators
+def _unit_reps(labels, seed, d=8, noise=0.05):
+    rng = np.random.default_rng(seed)
+    anchors = rng.normal(size=(max(labels) + 1, d))
+    anchors /= np.linalg.norm(anchors, axis=1, keepdims=True)
+    out = []
+    for g in labels:
+        v = anchors[g] + rng.normal(size=d) * noise
+        out.append((v / np.linalg.norm(v)).astype(np.float32))
+    return out
+
+
+def _partition(cs: ClusterState):
+    """Partition as a canonical set of frozensets of client ids."""
+    return frozenset(frozenset(m) for m in cs.clusters().values())
+
+
+# ----------------------------------------------------------------- unionfind
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(st.lists(st.tuples(st.integers(0, 15), st.integers(0, 15)),
+                max_size=40),
+       st.integers(0, 10_000))
+def test_unionfind_order_independent(edges, shuffle_seed):
+    """The final partition depends only on the edge SET, never the order
+    unions are applied in; every root is its component's smallest id."""
+    a, b = UnionFind(), UnionFind()
+    for i in range(16):
+        a.add(i)
+        b.add(i)
+    shuffled = list(edges)
+    np.random.default_rng(shuffle_seed).shuffle(shuffled)
+    for x, y in edges:
+        a.union(x, y)
+    for x, y in shuffled:
+        b.union(x, y)
+    groups_a, groups_b = {}, {}
+    for i in range(16):
+        groups_a.setdefault(a.find(i), set()).add(i)
+        groups_b.setdefault(b.find(i), set()).add(i)
+    assert set(map(frozenset, groups_a.values())) == \
+        set(map(frozenset, groups_b.values()))
+    for root, members in groups_a.items():
+        assert root == min(members)           # smaller id always wins
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(st.lists(st.integers(0, 3), min_size=2, max_size=24),
+       st.integers(0, 100), st.integers(0, 10_000))
+def test_merge_partition_observation_order_independent(labels, seed,
+                                                       shuffle_seed):
+    """Observing the same clients in any order yields the same partition:
+    merge_round unions every pair of the τ-graph transitively, and the
+    graph is a function of the rep set alone."""
+    reps = _unit_reps(labels, seed)
+    ids = list(range(len(labels)))
+    perm = list(ids)
+    np.random.default_rng(shuffle_seed).shuffle(perm)
+
+    cs_a = ClusterState(tau=0.8)
+    cs_a.observe(ids, reps)
+    cs_a.merge_round()
+
+    cs_b = ClusterState(tau=0.8)
+    cs_b.observe(perm, [reps[i] for i in perm])
+    cs_b.merge_round()
+
+    assert _partition(cs_a) == _partition(cs_b)
+    # idempotence: a second pass with no new observations changes nothing
+    before = _partition(cs_a)
+    cs_a.merge_round()
+    assert _partition(cs_a) == before
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(st.lists(st.integers(0, 3), min_size=3, max_size=20),
+       st.integers(0, 100),
+       st.lists(st.integers(0, 19), min_size=1, max_size=6))
+def test_remove_keeps_roots_consistent(labels, seed, departures):
+    """After any sequence of removals: (a) no removed id survives anywhere,
+    (b) every assigned root is a live observed client and the minimum of
+    its members, (c) the returned remap points exactly at the re-rooted
+    clusters, (d) cluster_means covers exactly the live roots."""
+    cs = ClusterState(tau=0.8)
+    cs.observe(range(len(labels)), _unit_reps(labels, seed))
+    cs.merge_round()
+    for cid in departures:
+        cid = cid % len(labels)
+        before = {r: set(m) for r, m in cs.clusters().items()}
+        remap = cs.remove(cid)
+        assert cid not in cs.reps and cid not in cs.seen
+        assert cid not in cs.uf.parent
+        for old, new in remap.items():
+            assert old != new
+            assert new == min(m for m in before[old] if m != cid)
+        if not cs.reps:
+            assert cs.assignment() == {}
+            continue
+        assign = cs.assignment()
+        assert cid not in assign
+        roots, _ = cs.cluster_means()
+        assert set(assign.values()) == set(roots)
+        for r, members in cs.clusters().items():
+            assert r == min(members)
+            assert r in cs.reps
+
+
+# ------------------------------------------------------------- Eq. 2 descent
+@settings(max_examples=30, deadline=None, derandomize=True)
+@given(n=st.integers(2, 18), d=st.integers(2, 10),
+       tau=st.floats(0.3, 0.95), seed=st.integers(0, 1000))
+def test_objective_nonincreasing_under_merges_nonneg_cone(n, d, tau, seed):
+    """Eq. 2 descent: in the non-negative cone, every merge pass (and
+    chains of passes) can only lower Σ_{i<j} cos(Ψ̃_i, Ψ̃_j)."""
+    rng = np.random.default_rng(seed)
+    reps = [rng.uniform(0.05, 1.0, size=d).astype(np.float32)
+            for _ in range(n)]
+    cs = ClusterState(tau=tau)
+    cs.observe(range(n), reps)
+    obj = cs.objective()
+    for _ in range(3):                        # cascaded passes too
+        merges = cs.merge_round()
+        after = cs.objective()
+        assert after <= obj + 1e-4
+        obj = after
+        if not merges:
+            break
+
+
+def test_objective_can_increase_outside_cone():
+    """Documents WHY the cone restriction above exists: a legal mixed-sign
+    configuration where one merge raises Eq. 2 — monotonicity is a
+    cone property, not a general one."""
+    a = np.array([1.0, 0.0, 0.0], np.float32)
+    th = np.arccos(0.31)
+    b = np.array([np.cos(th), np.sin(th), 0.0], np.float32)
+    c = -(a + b) / np.linalg.norm(a + b)
+    cs = ClusterState(tau=0.3)
+    cs.observe([0, 1, 2], [a, b, c.astype(np.float32)])
+    before = cs.objective()
+    cs.merge_round()                          # merges {a,b}; c stays apart
+    assert cs.n_clusters() == 2
+    assert cs.objective() > before
