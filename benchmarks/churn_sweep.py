@@ -1,0 +1,249 @@
+"""Dynamic-federation bench: churn rate × population sweep plus the §5
+newly-joined-client recovery experiment. Writes ``BENCH_churn.json``.
+
+Two questions, one artifact:
+
+1. **Does churn cost anything per round?** For each (population N, churn
+   fraction c): onboard a rotated federation on the arena path, measure
+   the static steady-state round time, then drive ``repro.sim.simulate``
+   with a Poisson timeline whose total join+leave volume is ``c·N`` over
+   the run and measure the steady-state round time *under churn*
+   (``sec_train`` — the ``run_round`` call alone) next to the per-event
+   application cost. The headline ratio ``churn_over_static`` should
+   stay ~1: joins are amortized-O(1) arena writes, leaves are
+   tombstones, and ``cohort_quantum`` keeps the set of compiled cohort
+   shapes bounded while the population drifts.
+
+2. **Do newly-joined clients recover (§5)?** Train a federation to a
+   settled partition, burst-join 20% new clients drawn from the same
+   latent distributions, and record the routed-model accuracy of the
+   newcomers vs. a sample of incumbents every round — the recovery curve
+   (``recovery.joined_acc`` / ``incumbent_acc``; final gap should be
+   within ~2 accuracy points).
+
+  PYTHONPATH=src python -m benchmarks.churn_sweep            # full sweep
+  PYTHONPATH=src python -m benchmarks.churn_sweep --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine
+from repro.data import rotated, rotated_factory
+from repro.models import simple
+from repro.sim import Timeline, simulate
+from repro.sim.events import Join
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+EVAL = jax.jit(lambda p, b: simple.accuracy(p, b, TASK))
+
+
+def _federation(n_clients: int, n_per: int, seed: int = 0):
+    clients, tc, tests = rotated(n_clusters=4, n_clients=n_clients,
+                                 n_per=n_per, seed=seed)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    tests = {k: jax.tree.map(jnp.asarray, v) for k, v in tests.items()}
+    return clients, tc, tests
+
+
+def _cfg(sample_rate: float, chunk: int, local_steps: int,
+         seed: int = 0) -> engine.EngineConfig:
+    # Ψ sketched to 1024 dims: keeps per-client clustering state O(1k) at
+    # every population (same choice/rationale as benchmarks/scale_cohort)
+    return engine.EngineConfig(tau=0.5, lam=0.05, lr=0.1,
+                               local_steps=local_steps,
+                               sample_rate=sample_rate, seed=seed,
+                               project_dim=1024, cohort_chunk=chunk)
+
+
+def _onboard(state, n_clients: int, settle: int = 3):
+    """One full-participation onboarding round (all Ψ observed, big
+    shapes compiled) + settle rounds, so both the static and the churn
+    measurements start from the same steady partition."""
+    t0 = time.time()
+    state, _ = engine.run_round(state, np.arange(n_clients))
+    onboard = time.time() - t0
+    for _ in range(settle):
+        state, _ = engine.run_round(state)
+    return state, onboard
+
+
+def _static_rounds(state, rounds: int):
+    times = []
+    for _ in range(rounds):
+        t0 = time.time()
+        state, _ = engine.run_round(state)
+        jax.block_until_ready(state.omega)
+        times.append(time.time() - t0)
+    return state, float(np.median(times))
+
+
+def churn_point(n_clients: int, churn: float, rounds: int, n_per: int,
+                sample_rate: float, chunk: int, quantum: int,
+                seed: int = 0) -> dict:
+    """One sweep point: static steady-state timing, then the same state
+    driven through a Poisson churn timeline of total volume churn·N."""
+    clients, tc, tests = _federation(n_clients, n_per, seed)
+    cfg = _cfg(sample_rate, chunk, local_steps=1, seed=seed)
+    t_start = time.time()
+    st = engine.init("stocfl", LOSS, simple.init(jax.random.PRNGKey(0), TASK),
+                     clients, cfg, eval_fn=EVAL, arena=True)
+    st, onboard = _onboard(st, n_clients)
+    st, sec_static = _static_rounds(st, rounds=5)
+
+    rate = churn * n_clients / (2 * rounds)      # joins + leaves = churn·N
+    tl = Timeline.from_poisson(rounds=rounds, join_rate=rate,
+                               leave_rate=rate, n_clusters=4,
+                               seed=seed, start=0)
+    factory = rotated_factory(n_clusters=4, n_per=n_per, seed=seed)
+    st, log = simulate(st, tl, rounds=rounds, client_factory=factory,
+                       seed=seed, cohort_quantum=quantum)
+
+    trained = [r for r in log.records if not r["skipped"]]
+    warm = trained[min(3, max(len(trained) - 2, 0)):]   # drop compile warmup
+    sec_churn = float(np.median([r["sec_train"] for r in warm]))
+    ev_rounds = [r for r in warm if r["had_events"]]
+    sec_event = (float(np.median([r["sec_round"] - r["sec_train"]
+                                  for r in ev_rounds]))
+                 if ev_rounds else 0.0)
+    arena = st.ctx.arena
+    return {
+        "clients": n_clients, "churn": churn, "rounds": rounds,
+        "events": tl.counts(), "joined": len(log.joined),
+        "departed": len(log.departed),
+        "sec_onboard": round(onboard, 2),
+        "sec_round_static": round(sec_static, 4),
+        "sec_round_churn": round(sec_churn, 4),
+        "sec_event_apply": round(sec_event, 4),
+        "churn_over_static": round(sec_churn / sec_static, 3),
+        "n_registered_final": st.n_clients,
+        "n_live_final": st.n_clients - len(st.left),
+        "arena": {"capacity": arena.capacity, "n_rows": arena.n_rows,
+                  "dead_resident": sum(1 for c in arena.dead
+                                       if arena.rows[c] >= 0)},
+        "n_clusters_final": st.clusters.n_clusters(),
+        "sec_total": round(time.time() - t_start, 2),
+        "records": log.records,
+    }
+
+
+def recovery_experiment(n_clients: int, join_frac: float, pre_rounds: int,
+                        post_rounds: int, n_per: int, seed: int = 0) -> dict:
+    """§5 newly-joined-client experiment: settle a federation, burst-join
+    ``join_frac``·N fresh clients from the same latent clusters, and
+    track routed accuracy of newcomers vs incumbents every round."""
+    clients, tc, tests = _federation(n_clients, n_per, seed)
+    cfg = _cfg(sample_rate=0.2, chunk=0, local_steps=3, seed=seed)
+    st = engine.init("stocfl", LOSS, simple.init(jax.random.PRNGKey(0), TASK),
+                     clients, cfg, eval_fn=EVAL, arena=True)
+    st, _ = _onboard(st, n_clients, settle=0)
+    st = engine.run(st, pre_rounds)
+
+    n_join = max(int(round(join_frac * n_clients)), 1)
+    rng = np.random.default_rng(seed + 1)
+    joins = [Join(t=0, cluster=int(rng.integers(4))) for _ in range(n_join)]
+    factory = rotated_factory(n_clusters=4, n_per=n_per, seed=seed)
+    st, log = simulate(st, Timeline(joins), rounds=post_rounds,
+                       client_factory=factory, seed=seed, eval_every=1,
+                       test_sets=tests, true_cluster=tc)
+    ts, joined = log.curve("joined_acc")
+    _, incumbent = log.curve("incumbent_acc")
+    gaps = [round(i - j, 5) for i, j in zip(incumbent, joined)]
+    return {
+        "clients": n_clients, "joined": n_join, "join_frac": join_frac,
+        "pre_rounds": pre_rounds, "post_rounds": post_rounds,
+        "rounds": ts, "joined_acc": [round(a, 5) for a in joined],
+        "incumbent_acc": [round(a, 5) for a in incumbent],
+        "gap": gaps, "final_gap": gaps[-1] if gaps else None,
+        "recovered_within_2pts": bool(gaps and abs(gaps[-1]) <= 0.02),
+    }
+
+
+def run(smoke: bool = False, rounds: int = 30, n_per: int = 32,
+        sample_rate: float = 0.1, chunk: int = 64, quantum: int = 32):
+    populations = [40] if smoke else [200, 1000]
+    churns = [0.2] if smoke else [0.05, 0.2]
+    if smoke:
+        rounds = min(rounds, 8)
+    points = []
+    for n in populations:
+        for c in churns:
+            # the quantum must stay below the nominal cohort or every
+            # round degenerates to the single-shape floor
+            q = min(quantum, max(int(sample_rate * n / 2), 2))
+            pt = churn_point(n, c, rounds, n_per, sample_rate, chunk, q)
+            points.append(pt)
+            print(f"# clients={n} churn={c} static={pt['sec_round_static']:.3f}s "
+                  f"churn={pt['sec_round_churn']:.3f}s "
+                  f"ratio={pt['churn_over_static']}")
+    rec = (recovery_experiment(24, 0.25, pre_rounds=6, post_rounds=6,
+                               n_per=n_per)
+           if smoke else
+           recovery_experiment(400, 0.2, pre_rounds=20, post_rounds=15,
+                               n_per=64))
+    print(f"# recovery: final_gap={rec['final_gap']} "
+          f"within_2pts={rec['recovered_within_2pts']}")
+    return points, rec
+
+
+def summarize(points, rec) -> dict:
+    out = {}
+    for p in points:
+        out[f"ratio_{p['clients']}_c{p['churn']}"] = p["churn_over_static"]
+    out["max_churn_over_static"] = max(p["churn_over_static"] for p in points)
+    out["recovery_final_gap"] = rec["final_gap"]
+    out["recovered_within_2pts"] = rec["recovered_within_2pts"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (40 clients, few rounds)")
+    ap.add_argument("--rounds", type=int, default=30,
+                    help="churn rounds per sweep point")
+    ap.add_argument("--n-per", type=int, default=32)
+    ap.add_argument("--sample-rate", type=float, default=0.1)
+    ap.add_argument("--chunk", type=int, default=64,
+                    help="cohort_chunk (bounds memory AND, with --quantum, "
+                         "the compiled-shape set)")
+    ap.add_argument("--quantum", type=int, default=32,
+                    help="cohort_quantum under churn (see repro.sim.simulate)")
+    ap.add_argument("--out", default="BENCH_churn.json")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    points, rec = run(smoke=args.smoke, rounds=args.rounds, n_per=args.n_per,
+                      sample_rate=args.sample_rate, chunk=args.chunk,
+                      quantum=args.quantum)
+    doc = {
+        "bench": "churn_sweep",
+        "task": TASK.name,
+        "n_per": args.n_per,
+        "sample_rate": args.sample_rate,
+        "chunk": args.chunk,
+        "quantum": args.quantum,
+        "backend": jax.default_backend(),
+        "host": platform.machine(),
+        "smoke": args.smoke,
+        "wall_s": round(time.time() - t0, 1),
+        "points": points,
+        "recovery": rec,
+        "summary": summarize(points, rec),
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(json.dumps(doc["summary"], indent=1))
+    print(f"# wrote {args.out} ({len(points)} points) in {doc['wall_s']}s")
+
+
+if __name__ == "__main__":
+    main()

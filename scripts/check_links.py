@@ -1,0 +1,61 @@
+"""Markdown link check: every relative link in the repo's docs must
+resolve to a real file (network-free — http(s) links are skipped, as are
+intra-page anchors). Run standalone or via the tier-1 docs test:
+
+    python scripts/check_links.py [files...]
+
+Exits non-zero listing every broken link, so the CI docs step (and the
+test that wraps it) fails the moment ARCHITECTURE/README/EXPERIMENTS
+drift from the tree.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "EXPERIMENTS.md",
+                 "ROADMAP.md", "CHANGES.md"]
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_file(path: str, root: str = ".") -> list:
+    """Broken relative links in one markdown file, as (target, reason)."""
+    broken = []
+    with open(os.path.join(root, path)) as f:
+        text = f.read()
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        resolved = os.path.normpath(os.path.join(root, os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            broken.append((target, f"{resolved} does not exist"))
+    return broken
+
+
+def check(files=None, root: str = ".") -> dict:
+    """{file: [(target, reason), ...]} over ``files`` (default: the
+    repo's top-level docs that exist)."""
+    files = [f for f in (files or DEFAULT_FILES)
+             if os.path.exists(os.path.join(root, f))]
+    out = {}
+    for path in files:
+        bad = check_file(path, root)
+        if bad:
+            out[path] = bad
+    return out
+
+
+def main(argv) -> int:
+    broken = check(argv or None)
+    for path, items in broken.items():
+        for target, reason in items:
+            print(f"{path}: broken link '{target}' ({reason})")
+    if not broken:
+        print("all markdown links resolve")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

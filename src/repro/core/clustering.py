@@ -108,9 +108,22 @@ class ClusterState:
         return len(self.clusters())
 
     # ------------------------------------------------------------- merging
-    def similarity_matrix(self) -> Tuple[List[int], np.ndarray]:
+    def similarity_matrix(self, pad_to: int = 64) -> Tuple[List[int], np.ndarray]:
+        """(roots, K̃×K̃ cosine matrix over cluster means).
+
+        The device computation is padded to a multiple of ``pad_to`` rows
+        (zero rows: norm-guarded to similarity 0, sliced off before
+        return). Under churn (§5) the cluster count drifts every round,
+        and an exact-shape kernel would recompile per K̃ — quantizing the
+        shape bounds the compile set the same way the TPU Pallas kernel's
+        internal 128-padding already does."""
         roots, means = self.cluster_means()
-        M = np.asarray(ops.pairwise_cosine(means))
+        k = len(roots)
+        if pad_to and k % pad_to:
+            kp = -(-k // pad_to) * pad_to
+            means = np.concatenate(
+                [means, np.zeros((kp - k, means.shape[1]), means.dtype)])
+        M = np.asarray(ops.pairwise_cosine(means))[:k, :k]
         return roots, M
 
     def merge_round(self) -> List[Tuple[int, int]]:

@@ -1,10 +1,13 @@
 from repro.data.synthetic import (  # noqa: F401
+    SETTING_FACTORIES,
     SETTINGS,
+    drift_batch,
     femnist_like,
     hybrid,
     make_federation,
     pathological,
     rotated,
+    rotated_factory,
     rotated_pathological,
     shifted,
 )

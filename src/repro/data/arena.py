@@ -15,32 +15,72 @@ weight per-example terms by it, so pad rows contribute exactly nothing.
 Equal-size federations pack without padding and gather batches that are
 bitwise identical to the legacy restack — the arena/legacy parity tests
 rely on this.
+
+Dynamic membership (§5) is first-class: the packed arrays carry spare
+row *capacity* that doubles on demand (``grow``), so ``append`` is one
+O(row) device write instead of an O(N) full-buffer concat per join, and
+departures ``tombstone`` their row in place — the data stays resident
+(old forked states can still gather it) until enough rows die that
+``compact`` reclaims them in one gather. Client ids stay stable through
+all of it: gathers translate cid -> physical row through a host-side
+index, so the engine's ``ServerState`` bookkeeping never learns about
+row moves.
 """
 from __future__ import annotations
 
-from typing import Any, List, Sequence
+import functools
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
+@functools.lru_cache(maxsize=None)
+def _row_writer():
+    """Jitted single-row scatter ``x.at[i].set(v)``; the stacked buffer is
+    donated off-CPU so the write recycles it in place (true O(row) joins
+    on accelerators — on CPU jax ignores donation and copies)."""
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(lambda x, i, v: x.at[i].set(v), donate_argnums=donate)
+
+
 class ClientArena:
     """All client shards as one stacked pytree with leading client axis.
 
-    ``packed``: pytree, leaves ``(N, n_max, ...)``; ``mask``:
-    ``(N, n_max)`` float32 row validity; ``sizes``: host ``(N,)`` true
-    shard lengths; ``ragged``: whether any padding exists.
+    Layout: ``packed`` leaves are ``(capacity, n_max, ...)`` arrays of
+    which rows ``[0, n_rows)`` are occupied and the rest are zeroed spare
+    capacity; ``mask`` is the ``(capacity, n_max)`` float32 row-validity
+    companion. Host-side bookkeeping maps stable client ids to physical
+    rows: ``sizes[cid]`` is the true shard length, ``rows[cid]`` the
+    physical row (−1 once ``compact`` reclaimed it), ``dead`` the set of
+    tombstoned cids whose rows are still resident. ``ragged`` is true
+    when any *live* shard is shorter than ``n_max`` (gathers then carry
+    the ``"mask"`` leaf).
     """
 
-    def __init__(self, packed, mask, sizes: np.ndarray, ragged: bool):
+    def __init__(self, packed, mask, sizes: np.ndarray, ragged: bool,
+                 rows: Optional[np.ndarray] = None,
+                 n_rows: Optional[int] = None,
+                 dead: frozenset = frozenset()):
         self.packed = packed
         self.mask = mask
         self.sizes = np.asarray(sizes)
         self.ragged = bool(ragged)
+        self.rows = (np.arange(len(self.sizes), dtype=np.int64)
+                     if rows is None else np.asarray(rows, np.int64))
+        self.n_rows = int(len(self.sizes) if n_rows is None else n_rows)
+        self.dead = frozenset(int(c) for c in dead)
 
+    # ------------------------------------------------------------- builders
     @classmethod
-    def from_clients(cls, clients: Sequence[Any]) -> "ClientArena":
+    def from_clients(cls, clients: Sequence[Any],
+                     capacity: Optional[int] = None) -> "ClientArena":
+        """Pack a client list into a fresh arena (one H2D upload).
+
+        ``capacity`` pre-allocates spare rows for expected joins (default:
+        exactly ``len(clients)`` rows — growth then starts on the first
+        ``append``)."""
         if not clients:
             raise ValueError("ClientArena needs at least one client")
         sizes = np.array([int(np.shape(jax.tree.leaves(c)[0])[0])
@@ -51,12 +91,13 @@ class ClientArena:
                     "every client leaf must share the leading example axis")
         n_max = int(sizes.max())
         ragged = bool((sizes != n_max).any())
+        cap = max(int(capacity or 0), len(clients))
 
         def pack(*xs):
             xs = [np.asarray(x) for x in xs]
-            if not ragged:
+            if not ragged and cap == len(xs):
                 return jnp.asarray(np.stack(xs))
-            out = np.zeros((len(xs), n_max) + xs[0].shape[1:], xs[0].dtype)
+            out = np.zeros((cap, n_max) + xs[0].shape[1:], xs[0].dtype)
             for i, x in enumerate(xs):
                 out[i, : x.shape[0]] = x
             return jnp.asarray(out)
@@ -66,53 +107,189 @@ class ClientArena:
             raise TypeError("ragged arenas need dict batches (for the "
                             "gathered 'mask' key); got "
                             f"{type(clients[0]).__name__}")
-        mask = jnp.asarray(
-            (np.arange(n_max)[None, :] < sizes[:, None]).astype(np.float32))
-        return cls(packed, mask, sizes, ragged)
+        mask = np.zeros((cap, n_max), np.float32)
+        mask[: len(sizes)] = np.arange(n_max)[None, :] < sizes[:, None]
+        return cls(packed, jnp.asarray(mask), sizes, ragged,
+                   n_rows=len(clients))
+
+    # --------------------------------------------------------------- views
+    @property
+    def n_max(self) -> int:
+        """Example-axis length every shard is padded to."""
+        return int(jax.tree.leaves(self.packed)[0].shape[1])
+
+    @property
+    def capacity(self) -> int:
+        """Allocated rows (``n_rows`` occupied, the rest spare)."""
+        return int(jax.tree.leaves(self.packed)[0].shape[0])
+
+    def _live(self) -> np.ndarray:
+        """Cids that are resident and not tombstoned."""
+        alive = (self.rows >= 0)
+        alive[list(self.dead & set(range(len(self.sizes))))] = False
+        return np.nonzero(alive)[0]
+
+    def _recompute_ragged(self, sizes: np.ndarray, rows: np.ndarray,
+                          dead: frozenset) -> bool:
+        alive = rows >= 0
+        if dead:
+            alive[list(dead)] = False
+        live_sizes = sizes[alive]
+        return bool(live_sizes.size and (live_sizes != self.n_max).any())
+
+    # ------------------------------------------------------------- growth
+    def grow(self, min_capacity: int) -> "ClientArena":
+        """New arena with row capacity >= ``min_capacity``: capacity
+        doubles (amortized-O(1) appends) and the new rows are zeroed spare
+        space — one concat per leaf, paid O(log N) times over N joins
+        instead of on every join."""
+        cap = self.capacity
+        if min_capacity <= cap:
+            return self
+        new_cap = cap
+        while new_cap < min_capacity:
+            new_cap *= 2
+
+        def one(x):
+            pad = jnp.zeros((new_cap - cap,) + x.shape[1:], x.dtype)
+            return jnp.concatenate([x, pad])
+
+        return ClientArena(jax.tree.map(one, self.packed), one(self.mask),
+                           self.sizes, self.ragged, self.rows, self.n_rows,
+                           self.dead)
+
+    def _grow_example_axis(self, n: int) -> "ClientArena":
+        """Re-pad every row to a longer example axis (a newcomer longer
+        than every resident shard — rare, full copy)."""
+        n_max = self.n_max
+        if n <= n_max:
+            return self
+
+        def one(x):
+            return jnp.pad(x, [(0, 0), (0, n - n_max)]
+                           + [(0, 0)] * (x.ndim - 2))
+
+        packed = jax.tree.map(one, self.packed)
+        live = self.sizes[self._live()]
+        ragged = bool(live.size and (live != n).any())
+        return ClientArena(packed, one(self.mask), self.sizes, ragged,
+                           self.rows, self.n_rows, self.dead)
 
     # ------------------------------------------------------------- append
     def append(self, batch) -> "ClientArena":
-        """New arena with one more client: one padded-row concat per leaf
-        — a flat device copy with O(1) dispatches, instead of the O(N)
-        host repack + per-client Python loop + full H2D re-upload of
-        ``from_clients`` (§5 dynamic joins at thousands of resident
-        clients). The concat still touches every resident byte on device;
-        a growth-capacity buffer would amortize that if join bursts ever
-        dominate. Only a newcomer LONGER than every resident shard forces
-        re-padding the packed arrays to the new ``n_max``."""
+        """New arena with one more client: one O(row) device write into
+        spare capacity (``grow`` doubles the row axis when full, so the
+        per-join cost is amortized O(1) — §5 dynamic joins at thousands
+        of resident clients stay flat). Only a newcomer LONGER than every
+        resident shard forces re-padding the example axis. Off-CPU the
+        write donates the packed buffers: the *input* arena's arrays are
+        invalidated — always rebind (``arena = arena.append(b)``)."""
         n = int(np.shape(jax.tree.leaves(batch)[0])[0])
-        n_max = int(self.sizes.max())
-        packed, ragged = self.packed, self.ragged
-        if n > n_max:                         # grow the example axis
-            packed = jax.tree.map(
-                lambda x: jnp.pad(x, [(0, 0), (0, n - n_max)]
-                                  + [(0, 0)] * (x.ndim - 2)), packed)
-            mask_grown = jnp.pad(self.mask, [(0, 0), (0, n - n_max)])
-            ragged = ragged or bool((self.sizes != n).any())
-            n_max = n
-        else:
-            mask_grown = self.mask
-            ragged = ragged or n < n_max
-        if ragged and not isinstance(packed, dict):
+        ar = self._grow_example_axis(n)
+        ar = ar.grow(ar.n_rows + 1)
+        n_max = ar.n_max
+        sizes = np.append(ar.sizes, n)
+        rows = np.append(ar.rows, ar.n_rows)
+        ragged = ar.ragged or n < n_max
+        if ragged and not isinstance(ar.packed, dict):
             raise TypeError("ragged arenas need dict batches (for the "
                             "gathered 'mask' key)")
+        write = _row_writer()
+        i = jnp.asarray(ar.n_rows, jnp.int32)
 
         def one(x, b):
-            row = np.zeros((1, n_max) + x.shape[2:], x.dtype)
-            row[0, :n] = np.asarray(b)
-            return jnp.concatenate([x, jnp.asarray(row)])
+            row = np.zeros((n_max,) + x.shape[2:], x.dtype)
+            row[:n] = np.asarray(b)
+            return write(x, i, jnp.asarray(row))
 
-        packed = jax.tree.map(one, packed, batch)
-        row_mask = jnp.asarray(
-            (np.arange(n_max)[None, :] < n).astype(np.float32))
-        mask = jnp.concatenate([mask_grown, row_mask])
-        return ClientArena(packed, mask, np.append(self.sizes, n), ragged)
+        packed = jax.tree.map(one, ar.packed, batch)
+        mask = write(ar.mask, i, jnp.asarray(
+            (np.arange(n_max) < n).astype(np.float32)))
+        return ClientArena(packed, mask, sizes, ragged, rows,
+                           ar.n_rows + 1, ar.dead)
+
+    def update(self, cid: int, batch) -> "ClientArena":
+        """Rewrite one resident client's shard in place (distribution
+        drift, §5): one O(row) device write. The new shard must fit the
+        current example axis (``n <= n_max``); drift hooks preserve shard
+        length so this never re-pads."""
+        row = int(self.rows[cid])
+        if row < 0:
+            raise KeyError(f"client {cid} was compacted away")
+        n = int(np.shape(jax.tree.leaves(batch)[0])[0])
+        n_max = self.n_max
+        if n > n_max:
+            raise ValueError(f"update shard len {n} > arena n_max {n_max}")
+        sizes = self.sizes.copy()
+        sizes[cid] = n
+        ragged = self._recompute_ragged(sizes, self.rows, self.dead)
+        # validate BEFORE the donating writes: raising after them would
+        # leave the caller holding an arena whose buffers were consumed
+        if ragged and not isinstance(self.packed, dict):
+            raise TypeError("ragged arenas need dict batches (for the "
+                            "gathered 'mask' key)")
+        write = _row_writer()
+        i = jnp.asarray(row, jnp.int32)
+
+        def one(x, b):
+            r = np.zeros((n_max,) + x.shape[2:], x.dtype)
+            r[:n] = np.asarray(b)
+            return write(x, i, jnp.asarray(r))
+
+        packed = jax.tree.map(one, self.packed, batch)
+        mask = write(self.mask, i, jnp.asarray(
+            (np.arange(n_max) < n).astype(np.float32)))
+        return ClientArena(packed, mask, sizes, ragged, self.rows,
+                           self.n_rows, self.dead)
+
+    # ---------------------------------------------------------- departures
+    def tombstone(self, cid: int, compact_frac: float = 0.5) -> "ClientArena":
+        """Mark a departed client's row dead — O(1), no device op; the
+        data stays gatherable (forked pre-departure states remain valid)
+        until dead rows exceed ``compact_frac`` of the occupied rows, at
+        which point the arena ``compact``s itself. ``compact_frac <= 0``
+        disables auto-compaction."""
+        cid = int(cid)
+        if cid in self.dead or not 0 <= cid < len(self.sizes):
+            return self
+        dead = self.dead | {cid}
+        ar = ClientArena(self.packed, self.mask, self.sizes,
+                         self._recompute_ragged(self.sizes, self.rows, dead),
+                         self.rows, self.n_rows, dead)
+        n_dead_resident = sum(1 for c in dead if ar.rows[c] >= 0)
+        if compact_frac > 0 and n_dead_resident > compact_frac * ar.n_rows:
+            return ar.compact()
+        return ar
+
+    def compact(self) -> "ClientArena":
+        """Reclaim tombstoned rows: one gather per leaf keeps only live
+        rows (registered order preserved), dead cids' rows become −1, and
+        capacity shrinks to the live count (the next ``append`` regrows).
+        Gathering a compacted-away cid is an error — by then every state
+        that could sample it has processed the departure."""
+        live = self._live()
+        if not live.size:
+            raise ValueError("compact would empty the arena")
+        src = jnp.asarray(self.rows[live].astype(np.int32))
+        packed = jax.tree.map(lambda x: jnp.take(x, src, axis=0), self.packed)
+        mask = jnp.take(self.mask, src, axis=0)
+        rows = np.full(len(self.sizes), -1, np.int64)
+        rows[live] = np.arange(live.size)
+        ragged = self._recompute_ragged(self.sizes, rows, self.dead)
+        return ClientArena(packed, mask, self.sizes, ragged, rows,
+                           int(live.size), self.dead)
 
     # ------------------------------------------------------------- gather
     def gather(self, client_ids) -> Any:
-        """Stacked cohort batch for ``client_ids`` — one take per leaf.
-        Ragged arenas add a ``"mask"`` leaf for mask-aware losses."""
-        idx = jnp.asarray(np.asarray(client_ids, np.int32))
+        """Stacked cohort batch for ``client_ids`` — one take per leaf,
+        cids translated to physical rows. Ragged arenas add a ``"mask"``
+        leaf for mask-aware losses."""
+        cids = np.asarray(client_ids, np.int64)
+        rows = self.rows[cids]
+        if (rows < 0).any():
+            bad = cids[rows < 0].tolist()
+            raise KeyError(f"clients {bad} were compacted out of the arena")
+        idx = jnp.asarray(rows.astype(np.int32))
         batch = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), self.packed)
         if self.ragged:
             batch = dict(batch)
@@ -121,13 +298,22 @@ class ClientArena:
 
     def client(self, cid: int) -> Any:
         """One client's unpadded shard (host-loop uses: Ψ extraction)."""
+        row = int(self.rows[cid])
+        if row < 0:
+            raise KeyError(f"client {cid} was compacted away")
         n = int(self.sizes[cid])
-        return jax.tree.map(lambda x: x[cid, :n], self.packed)
+        return jax.tree.map(lambda x: x[row, :n], self.packed)
 
     # ------------------------------------------------------------- stats
     @property
     def n_clients(self) -> int:
+        """Registered clients (tombstoned included — ids are stable)."""
         return len(self.sizes)
+
+    @property
+    def n_live(self) -> int:
+        """Registered minus tombstoned."""
+        return len(self.sizes) - len(self.dead)
 
     @property
     def nbytes(self) -> int:
@@ -135,5 +321,6 @@ class ClientArena:
                    for x in jax.tree.leaves(self.packed))
 
     def __repr__(self) -> str:
-        return (f"ClientArena(n={self.n_clients}, n_max={int(self.sizes.max())}, "
+        return (f"ClientArena(n={self.n_clients}, live={self.n_live}, "
+                f"capacity={self.capacity}, n_max={self.n_max}, "
                 f"ragged={self.ragged}, mb={self.nbytes / 2**20:.1f})")

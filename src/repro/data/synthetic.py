@@ -209,3 +209,50 @@ def rotated_partial(n_clusters=4, n_clients=40, n_per=12, seed=1, rot_dims=16):
 
 
 SETTINGS["rotated_partial"] = rotated_partial
+
+
+# ----------------------------------------------------------- churn hooks
+def rotated_factory(n_clusters=4, n_per=128, seed=0):
+    """Client factory for §5 churn simulations over the ``rotated``
+    setting: draws FRESH clients from the same latent distributions as
+    ``rotated(n_clusters=..., seed=...)`` — the class prototypes and
+    per-cluster orthogonal transforms are rebuilt with the identical rng
+    consumption order, so a client made for ``cluster=k`` is a new i.i.d.
+    draw from the distribution incumbent cluster k trained on (the
+    paper's newly-joined-client experiment).
+
+    Returns ``factory(cluster, rng, n=n_per) -> {"x", "y"}`` — the
+    signature ``repro.sim.simulate`` expects for ``client_factory``.
+    """
+    rng = np.random.default_rng(seed)
+    protos = _protos(rng)
+    qs = [np.eye(DIM, dtype=np.float32)] + [_orthogonal(rng, DIM)
+                                            for _ in range(n_clusters - 1)]
+
+    def factory(cluster, rng2, n=n_per):
+        k = int(cluster) % n_clusters if cluster is not None else \
+            int(rng2.integers(n_clusters))
+        y = rng2.integers(0, N_CLASSES, size=n)
+        return _batch(_sample(rng2, protos, y) @ qs[k], y)
+
+    return factory
+
+
+SETTING_FACTORIES = {
+    "rotated": rotated_factory,
+}
+
+
+def drift_batch(batch, rng, strength: float = 0.05):
+    """Distribution-drift hook (``repro.sim`` ``Drift`` events): rotate a
+    client's feature space by a small random orthogonal transform
+    ``Q = qr(I + strength·G)`` — the continuous analogue of the
+    ``rotated`` skew. Labels and shard length are preserved, so arena
+    rows rewrite in place (``ClientArena.update``)."""
+    x = np.asarray(batch["x"], np.float32)
+    d = x.shape[1]
+    g = rng.normal(size=(d, d)).astype(np.float32)
+    q, _ = np.linalg.qr(np.eye(d, dtype=np.float32) + strength * g)
+    out = {k: np.asarray(v) for k, v in batch.items() if k not in ("x",)}
+    out["x"] = (x @ q.astype(np.float32)).astype(np.float32)
+    return out

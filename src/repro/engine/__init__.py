@@ -15,3 +15,11 @@ from repro.engine.state import (EngineConfig, EngineContext,  # noqa: F401
 from repro.engine.bank import ClusterBank  # noqa: F401
 from repro.engine import strategies  # noqa: F401  (installs the registry)
 from repro.engine.strategies import Strategy  # noqa: F401
+
+__all__ = [
+    "init", "run", "run_round", "sample_clients",
+    "evaluate", "join", "leave", "infer",
+    "EngineConfig", "EngineContext", "ServerState",
+    "Strategy", "ClusterBank",
+    "register", "get_strategy", "list_strategies", "STRATEGIES",
+]

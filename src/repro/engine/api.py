@@ -9,10 +9,11 @@
     engine.infer(state, unseen_batch)               # §4.4 cluster inference
 
 Every transition returns a NEW state; the input is never mutated (the one
-deliberate exception: ``join`` appends the new client's dataset to the
-context's client list — the context is the world, not the state). Client
-sampling draws from the numpy bit-generator state stored IN the state, so
-a checkpointed run resumes bit-exactly.
+deliberate exception: ``join``/``leave`` update the context's client
+list/arena — the context is the world, not the state). Client sampling
+draws from the numpy bit-generator state stored IN the state, so a
+checkpointed run resumes bit-exactly. ``repro.sim.simulate`` drives these
+same transitions over a churn timeline — there is no second code path.
 """
 from __future__ import annotations
 
@@ -30,12 +31,30 @@ def init(strategy: str, loss_fn, init_params, clients,
          leaf_filter=None, mesh=None, arena: bool = False) -> ServerState:
     """Build the static context and the strategy's initial ``ServerState``.
 
-    ``arena=True`` packs all client shards into a device-resident
-    ``ClientArena`` so each round's cohort is one gather instead of a
-    per-round Python restack (ragged shard sizes are pad-and-masked; the
-    loss must then honor the batch's ``"mask"`` leaf). ``cfg.cohort_chunk``
-    bounds how many clients one vmapped step executes — see
-    ``bilevel.chunk_map``."""
+    Args:
+      strategy: registered strategy name (``engine.list_strategies()``) —
+        ``"stocfl"`` (Algorithm 1) or one of the paper's §4 baselines.
+      loss_fn: ``(params, batch) -> scalar`` local objective f_i.
+      init_params: ω₀ — also the frozen Ψ anchor (§3.1) and the lazy
+        cluster-model default θ_k.
+      clients: list of client datasets (pytrees with a shared leading
+        example axis).
+      cfg: ``EngineConfig`` hyperparameters (strategy-specific subset).
+      eval_fn: optional ``(params, batch) -> accuracy`` used by
+        ``evaluate`` and the simulator's §5 recovery tracking.
+      leaf_filter: optional Ψ restriction to a parameter subset (LLM
+        anchors: ``extractor.llm_leaf_filter``).
+      mesh: optional jax Mesh; cohort steps are placed on its client axis.
+      arena: pack all client shards into a device-resident
+        ``ClientArena`` so each round's cohort is one gather instead of a
+        per-round Python restack (ragged shard sizes are pad-and-masked;
+        the loss must then honor the batch's ``"mask"`` leaf).
+        ``cfg.cohort_chunk`` bounds how many clients one vmapped step
+        executes — see ``bilevel.chunk_map``.
+
+    Returns:
+      The strategy's initial ``ServerState`` (round 0, nothing trained).
+    """
     cfg = cfg or EngineConfig()
     ctx = EngineContext(loss_fn=loss_fn, init_params=init_params,
                         clients=list(clients), cfg=cfg, eval_fn=eval_fn,
@@ -50,18 +69,39 @@ def init(strategy: str, loss_fn, init_params, clients,
     return strat.init_state(ctx)
 
 
-def sample_clients(state: ServerState):
-    """Draw one round's cohort; returns (advanced rng_state, client ids)."""
+def sample_clients(state: ServerState, unavailable=frozenset()):
+    """Draw one round's cohort without replacement (§3.3 "arbitrary
+    proportion of client participation").
+
+    The cohort size is ``cfg.sample_rate`` × the LIVE population
+    (registered minus departed), drawn from the generator state stored in
+    ``state`` — pure and checkpoint-exact. ``unavailable`` removes
+    additional clients from the pool for this draw only (the simulator's
+    availability windows, §5).
+
+    Returns:
+      (advanced rng bit-generator state, sampled client id array).
+    """
     cfg = state.ctx.cfg
     rng = state.rng()
-    m = max(int(round(cfg.sample_rate * state.n_clients)), 1)
-    pool = np.array([i for i in range(state.n_clients) if i not in state.left])
+    pool = np.array([i for i in range(state.n_clients)
+                     if i not in state.left and i not in unavailable])
+    live = state.n_clients - len(state.left)
+    m = max(int(round(cfg.sample_rate * live)), 1)
     ids = rng.choice(pool, size=min(m, len(pool)), replace=False)
     return rng.bit_generator.state, ids
 
 
 def run_round(state: ServerState, client_ids: Optional[Sequence[int]] = None):
-    """One server round: (state, client_ids?) -> (state', metrics)."""
+    """One server round: ``(state, client_ids?) -> (state', metrics)``.
+
+    With ``client_ids=None`` the cohort is sampled internally (advancing
+    the state's rng; full-participation strategies take every live
+    client). An explicit cohort skips sampling and leaves the rng
+    untouched — the hook the simulator uses to apply availability
+    windows and straggler dropout before training. ``metrics`` is the
+    strategy's per-round record (appended to ``state.history``).
+    """
     strat = get_strategy(state.strategy)
     rng_state = state.rng_state
     if client_ids is None:
@@ -81,7 +121,9 @@ def run_round(state: ServerState, client_ids: Optional[Sequence[int]] = None):
 
 
 def run(state: ServerState, rounds: int, log_every: int = 0) -> ServerState:
-    """Convenience loop over ``run_round``."""
+    """Convenience loop: ``rounds`` × ``run_round`` with optional progress
+    printing every ``log_every`` rounds. Returns the final state (per-round
+    metrics accumulate in ``state.history``)."""
     for t in range(rounds):
         state, rec = run_round(state)
         if log_every and t % log_every == 0:
@@ -92,20 +134,51 @@ def run(state: ServerState, rounds: int, log_every: int = 0) -> ServerState:
 
 
 def evaluate(state: ServerState, test_sets, true_cluster=None) -> dict:
+    """Strategy-appropriate held-out evaluation (paper §4.2 protocol).
+
+    Args:
+      test_sets: ``{latent cluster id: batch}`` held-out sets.
+      true_cluster: latent cluster per client id — used by clustered
+        strategies to route each test set through the learned cluster
+        holding most of that latent cluster's clients.
+
+    Returns:
+      Dict with at least ``cluster_avg`` (mean per-cluster accuracy);
+      StoCFL adds per-cluster and global-model numbers.
+    """
     return get_strategy(state.strategy).evaluate(state.ctx, state,
                                                  test_sets, true_cluster)
 
 
 def join(state: ServerState, batch):
-    """Register a new client; returns (state', cid)."""
+    """Register a newly-arrived client (§5 dynamic membership).
+
+    Appends ``batch`` to the context's client list (and arena, amortized
+    O(1) via capacity doubling), assigns the next client id, and lets the
+    strategy place the newcomer — StoCFL runs Ψ-inference against the
+    existing partition (§4.4), joining the nearest cluster above τ or
+    opening a fresh one seeded from the nearest cluster's model.
+
+    Returns:
+      (state', new client id).
+    """
     return get_strategy(state.strategy).join(state.ctx, state, batch)
 
 
 def leave(state: ServerState, cid: int) -> ServerState:
-    """Remove a client from sampling AND the partition, consistently."""
+    """Remove a client from the federation (§5 departures).
+
+    The client stops being sampled, the clustering partition drops it
+    consistently (clusters keep their models — knowledge persists), and
+    its arena row is tombstoned (reclaimed in bulk once enough rows die).
+    Returns the new state.
+    """
     return get_strategy(state.strategy).leave(state.ctx, state, cid)
 
 
 def infer(state: ServerState, batch) -> dict:
-    """Cluster inference for an unseen client (§4.4), without joining."""
+    """Cluster inference for an UNSEEN client (§4.4), without joining:
+    which cluster would serve this data, at what Ψ-cosine similarity,
+    with which model. Returns ``{"cluster", "seed_from", "similarity",
+    "model"}``; raises for strategies with no inference rule."""
     return get_strategy(state.strategy).infer(state.ctx, state, batch)

@@ -22,6 +22,14 @@ updates return a NEW bank. It is registered as a pytree node (children:
 the stacked model; aux: the root tuple), so it rides inside
 ``ServerState`` through ``jax.device_get`` and the mesh placement
 helpers unchanged.
+
+Shape stability under churn (§5): the stacked arrays carry power-of-two
+row *capacity* (occupied rows first, zero rows after), and ``put`` pads
+its scatter to a power-of-two update count through a scratch row. A
+varying federation drifts the cluster count K every round; without the
+quantization each new K (and each new per-round unique-cluster count)
+would be a fresh XLA compile of every gather/scatter in the round —
+the dominant cost of a churning round, not the math.
 """
 from __future__ import annotations
 
@@ -33,11 +41,24 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _pow2(n: int) -> int:
+    """Smallest power of two >= n (capacity / scatter-width quantum)."""
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+def _pad_rows(tree, n_new: int):
+    """Append ``n_new`` zero rows to every leaf's leading axis."""
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.zeros((n_new,) + x.shape[1:], x.dtype)]), tree)
+
+
 class ClusterBank(Mapping):
     """K cluster/hypothesis models stacked on the leading axis.
 
-    ``stacked``: pytree whose leaves are ``(K, ...)`` arrays (``None``
-    when empty); ``roots``: tuple of int keys, position i ↔ row i.
+    ``stacked``: pytree whose leaves are ``(capacity, ...)`` arrays with
+    the K occupied rows first and zeroed spare rows after (``None`` when
+    empty); ``roots``: tuple of int keys, position i ↔ row i.
     """
 
     def __init__(self, stacked, roots: Sequence[int] = ()):
@@ -49,18 +70,32 @@ class ClusterBank(Mapping):
     # ------------------------------------------------------------ builders
     @classmethod
     def empty(cls) -> "ClusterBank":
+        """The no-clusters bank (``stacked`` is None)."""
         return cls(None, ())
 
     @classmethod
     def from_dict(cls, models: Dict[int, Any]) -> "ClusterBank":
+        """Stack a ``{root: pytree}`` dict into a bank (rows in sorted
+        root order, capacity-padded)."""
         roots = sorted(int(k) for k in models)
         if not roots:
             return cls.empty()
         stacked = jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
                                *[models[r] for r in roots])
+        cap = _pow2(len(roots))
+        if cap > len(roots):
+            stacked = _pad_rows(stacked, cap - len(roots))
         return cls(stacked, roots)
 
+    @property
+    def capacity(self) -> int:
+        """Allocated rows (>= ``len(self)``, a power of two)."""
+        if self.stacked is None:
+            return 0
+        return int(jax.tree.leaves(self.stacked)[0].shape[0])
+
     def to_dict(self) -> Dict[int, Any]:
+        """Materialize back to a plain ``{root: pytree}`` dict."""
         return {r: self[r] for r in self.roots}
 
     # ------------------------------------------------------------ mapping
@@ -103,15 +138,18 @@ class ClusterBank(Mapping):
     # ------------------------------------------------------------ gathers
     def take(self, roots, default):
         """Batched model gather: row per requested root, ``default`` for
-        roots with no model yet (lazy θ_k = ω₀). One jnp.take per leaf."""
+        roots with no model yet (lazy θ_k = ω₀). One jnp.take per leaf;
+        the default row (when needed) is appended once at index
+        ``capacity``, so the gather shape depends only on (capacity,
+        len(roots)) — both quantized."""
         roots = np.atleast_1d(np.asarray(roots)).astype(np.int64)
-        k = len(self.roots)
-        idx = np.fromiter((self._index.get(int(r), k) for r in roots),
+        cap = self.capacity
+        idx = np.fromiter((self._index.get(int(r), cap) for r in roots),
                           np.int32, len(roots))
         if self.stacked is None:
             ext = jax.tree.map(lambda d: jnp.asarray(d)[None], default)
             idx = np.zeros(len(roots), np.int32)
-        elif (idx == k).any():
+        elif (idx == cap).any():
             ext = jax.tree.map(
                 lambda x, d: jnp.concatenate(
                     [x, jnp.asarray(d)[None].astype(x.dtype)]),
@@ -124,29 +162,45 @@ class ClusterBank(Mapping):
     # ------------------------------------------------------------ scatters
     def put(self, roots, updates) -> "ClusterBank":
         """Scatter stacked ``updates`` (leading axis ↔ ``roots``) into the
-        bank; unknown roots grow new rows. Rows not named stay untouched."""
+        bank; unknown roots grow new rows (capacity doubles when full).
+        Rows not named stay untouched.
+
+        ``updates`` may carry MORE rows than ``len(roots)``: the first
+        ``len(roots)`` rows are real, the rest are discarded through a
+        scratch row. Callers quantize their update count that way (e.g.
+        ``aggregate_segments`` padded to a power-of-two segment count),
+        so the scatter compiles once per (capacity, row-count) pair
+        instead of once per distinct per-round cluster count."""
         roots = [int(r) for r in np.atleast_1d(np.asarray(roots))]
+        n = len(roots)
         assert len(set(roots)) == len(roots), "put() roots must be unique"
+        n_rows = int(np.shape(jax.tree.leaves(updates)[0])[0])
+        assert n_rows >= n, "updates carry fewer rows than roots"
         novel = [r for r in roots if r not in self._index]
         all_roots = self.roots + tuple(novel)
         index = {r: i for i, r in enumerate(all_roots)}
-        idx = jnp.asarray(np.array([index[r] for r in roots], np.int32))
         if self.stacked is None:
+            cap = _pow2(len(all_roots))
             base = jax.tree.map(
-                lambda u: jnp.zeros((len(all_roots),) + u.shape[1:], u.dtype),
-                updates)
-        elif novel:
-            base = jax.tree.map(
-                lambda x: jnp.concatenate(
-                    [x, jnp.zeros((len(novel),) + x.shape[1:], x.dtype)]),
-                self.stacked)
+                lambda u: jnp.zeros((cap,) + u.shape[1:], u.dtype), updates)
         else:
-            base = self.stacked
-        stacked = jax.tree.map(lambda b, u: b.at[idx].set(u.astype(b.dtype)),
-                               base, updates)
+            base, cap = self.stacked, self.capacity
+            if len(all_roots) > cap:
+                cap = _pow2(len(all_roots))
+                base = _pad_rows(base, cap - self.capacity)
+        # pad rows dump into a scratch row at index ``cap``, sliced off
+        idx_np = np.full(n_rows, cap, np.int32)
+        idx_np[:n] = [index[r] for r in roots]
+        idx = jnp.asarray(idx_np)
+        stacked = jax.tree.map(
+            lambda b, u: jnp.concatenate(
+                [b, jnp.zeros((1,) + b.shape[1:], b.dtype)]
+            ).at[idx].set(u.astype(b.dtype))[:cap],
+            base, updates)
         return ClusterBank(stacked, all_roots)
 
     def set(self, root: int, model) -> "ClusterBank":
+        """Write one root's model (grows a row if the root is new)."""
         return self.put([root], jax.tree.map(lambda x: jnp.asarray(x)[None], model))
 
     def __setitem__(self, root, model):
@@ -155,14 +209,23 @@ class ClusterBank(Mapping):
         self.stacked, self.roots, self._index = nb.stacked, nb.roots, nb._index
 
     def drop(self, roots) -> "ClusterBank":
+        """Remove rows for ``roots`` (one keep-gather per leaf; the new
+        bank is re-padded to a power-of-two capacity)."""
         rm = {int(r) for r in roots} & set(self.roots)
         if not rm:
             return self
         keep = [r for r in self.roots if r not in rm]
         if not keep:
             return ClusterBank.empty()
-        idx = jnp.asarray(np.array([self._index[r] for r in keep], np.int32))
-        stacked = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), self.stacked)
+        cap = _pow2(len(keep))
+        idx_np = np.full(cap, self.capacity, np.int32)   # spare rows: zeros
+        idx_np[: len(keep)] = [self._index[r] for r in keep]
+        idx = jnp.asarray(idx_np)
+        stacked = jax.tree.map(
+            lambda x: jnp.take(
+                jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)]),
+                idx, axis=0),
+            self.stacked)
         return ClusterBank(stacked, keep)
 
     def rename(self, remap: Dict[int, int]) -> "ClusterBank":

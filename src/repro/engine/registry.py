@@ -18,10 +18,13 @@ def register(name: str):
 
 
 def get_strategy(name: str):
+    """Resolve a registered strategy instance by name (KeyError lists
+    the registered names on a miss)."""
     if name not in STRATEGIES:
         raise KeyError(f"unknown strategy {name!r}; registered: {sorted(STRATEGIES)}")
     return STRATEGIES[name]
 
 
 def list_strategies() -> List[str]:
+    """Sorted names of every registered strategy."""
     return sorted(STRATEGIES)

@@ -102,6 +102,8 @@ class ServerState:
     # ------------------------------------------------------------- helpers
     @property
     def n_clients(self) -> int:
+        """Registered clients, departed included (ids are stable; the
+        live count is ``n_clients - len(left)``)."""
         return len(self.ctx.clients)
 
     def cluster_model(self, root: int):
@@ -109,6 +111,7 @@ class ServerState:
         return self.models.get(root, self.ctx.init_params)
 
     def client_root(self, cid: int) -> int:
+        """Union-find root (= cluster id) of an observed client."""
         assert self.clusters is not None
         return self.clusters.uf.find(int(cid))
 
@@ -120,6 +123,8 @@ class ServerState:
         return g
 
     def replace(self, **kw) -> "ServerState":
+        """``dataclasses.replace`` shorthand — the one way transitions
+        derive a new state from an old one."""
         return dataclasses.replace(self, **kw)
 
 

@@ -35,7 +35,7 @@ import numpy as np
 from repro.core import bilevel
 from repro.core.aggregators import AGGREGATORS
 from repro.core.clustering import ClusterState
-from repro.engine.bank import ClusterBank
+from repro.engine.bank import ClusterBank, _pow2 as bank_pow2
 from repro.engine.registry import register
 from repro.engine.state import EngineContext, ServerState, fresh_rng_state
 from repro.sharding import specs
@@ -70,6 +70,13 @@ def _chunk(ctx: EngineContext) -> int:
 def _append_to_arena(ctx: EngineContext, batch) -> None:
     if ctx.arena is not None:
         ctx.arena = ctx.arena.append(batch)
+
+
+def _retire_from_arena(ctx: EngineContext, cid: int) -> None:
+    """Tombstone a departed client's arena row (compacted in bulk once
+    enough rows die — see ``ClientArena.tombstone``)."""
+    if ctx.arena is not None:
+        ctx.arena = ctx.arena.tombstone(int(cid))
 
 
 def _weights(state: ServerState, ids) -> np.ndarray:
@@ -123,6 +130,7 @@ class Strategy:
 
     # ------------------------------------------------------------ lifecycle
     def init_state(self, ctx: EngineContext) -> ServerState:
+        """Round-0 ``ServerState``: ω = ω₀, empty bank, fresh sampling rng."""
         return ServerState(ctx=ctx, strategy=self.name, round=0,
                            rng_state=fresh_rng_state(ctx.cfg.seed),
                            sizes=client_sizes(ctx.clients), left=frozenset(),
@@ -130,14 +138,21 @@ class Strategy:
                            personal={})
 
     def round(self, ctx: EngineContext, state: ServerState, client_ids):
+        """One pure server round over the sampled cohort:
+        ``(ctx, state, client_ids) -> (state', metrics dict)``."""
         raise NotImplementedError
 
     # ------------------------------------------------------------ serving
     def evaluate(self, ctx, state, test_sets, true_cluster=None) -> dict:
+        """Held-out evaluation; the base serves every test set with ω."""
         accs = {k: float(ctx.eval_fn(state.omega, b)) for k, b in test_sets.items()}
         return {"cluster_avg": float(np.mean(list(accs.values()))), "per": accs}
 
     def join(self, ctx, state, batch):
+        """Register a new client (§5): append its data to the world
+        (client list + arena) and its size to the state; returns
+        ``(state', cid)``. Subclasses add placement (Ψ-inference, model
+        seeding)."""
         cid = len(ctx.clients)
         ctx.clients.append(batch)
         _append_to_arena(ctx, batch)
@@ -145,9 +160,14 @@ class Strategy:
         return state.replace(sizes=sizes), cid
 
     def leave(self, ctx, state, cid):
+        """Departure (§5): stop sampling ``cid`` and tombstone its arena
+        row. Subclasses additionally repair their partition."""
+        _retire_from_arena(ctx, cid)
         return state.replace(left=state.left | {int(cid)})
 
     def infer(self, ctx, state, batch) -> dict:
+        """Cluster inference for unseen data (§4.4) — clustered
+        strategies only."""
         raise NotImplementedError(f"strategy {self.name!r} has no cluster inference")
 
 
@@ -200,7 +220,12 @@ class StoCFLStrategy(Strategy):
         w = _weights(state, client_ids)
         omega = AGGREGATORS[cfg.aggregator](omegas_i, w)
         uroots, seg = np.unique(roots, return_inverse=True)
-        agg = bilevel.aggregate_segments(thetas_i, w, seg, len(uroots))
+        # pow2-padded segment count: the per-round unique-cluster count
+        # drifts under churn, and an exact count would recompile the
+        # segment-sum + scatter every round (pad rows are zero, discarded
+        # by put's scratch row)
+        agg = bilevel.aggregate_segments(thetas_i, w, seg,
+                                         bank_pow2(len(uroots)))
         models = models.put([int(r) for r in uroots], agg)
 
         rec = {"n_clusters": clusters.n_clusters(),
@@ -405,7 +430,7 @@ class IFCAStrategy(Strategy):
         outs = self._upd(ctx)(_place(ctx, thetas), _place(ctx, batches))
         w = _weights(state, ids)
         um, seg = np.unique(choices, return_inverse=True)
-        agg = bilevel.aggregate_segments(outs, w, seg, len(um))
+        agg = bilevel.aggregate_segments(outs, w, seg, bank_pow2(len(um)))
         models = state.models.put([int(m) for m in um], agg)
         return state.replace(models=models), {"sampled": len(ids)}
 

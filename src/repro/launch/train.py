@@ -4,7 +4,12 @@ Any registered strategy (stocfl, fedavg, fedprox, ditto, ifca, cfl) runs
 through the same ``engine.init -> engine.run_round`` loop; StoCFL adds
 clustering metrics, checkpointing of the full ``ServerState``, and §4.4
 inference. ``--mesh`` places the vmapped cohort step on a client-axis
-mesh over the local devices.
+mesh over the local devices. ``--churn`` swaps the static loop for the
+§5 dynamic-federation simulator (``repro.sim``): Poisson joins/leaves/
+stragglers or a replayed JSON trace, e.g.
+
+      PYTHONPATH=src python -m repro.launch.train --setting rotated \\
+          --rounds 50 --arena --churn join=1.0,leave=0.5,straggle=0.1
 
 Two modes:
   classification (paper-faithful, default): cross-device federation on a
@@ -46,6 +51,24 @@ def _engine_cfg(args) -> engine.EngineConfig:
         seed=args.seed, mu=args.lam, cohort_chunk=args.cohort_chunk)
 
 
+def _churn_timeline(args, n_clusters: int):
+    """Build the --churn Timeline (trace path or Poisson spec) plus the
+    setting's client factory for Join events."""
+    from repro.data.synthetic import SETTING_FACTORIES
+    from repro.sim import Timeline
+    tl = Timeline.from_spec(args.churn, rounds=args.rounds, seed=args.seed,
+                            n_clusters=n_clusters)
+    factory = None
+    if args.setting in SETTING_FACTORIES:
+        factory = SETTING_FACTORIES[args.setting](n_clusters=n_clusters,
+                                                  seed=args.seed)
+    elif any(k == "join" for k in tl.counts()):
+        raise SystemExit(f"--churn with joins needs a client factory; "
+                         f"setting {args.setting!r} has none "
+                         f"(see repro.data.synthetic.SETTING_FACTORIES)")
+    return tl, factory
+
+
 def run_classification(args) -> dict:
     clients_np, true_cluster, test_sets = make_federation(
         args.setting, n_clients=args.clients, seed=args.seed)
@@ -63,10 +86,31 @@ def run_classification(args) -> dict:
     t0 = time.time()
     st = engine.init(args.algo, loss, params, clients, _engine_cfg(args),
                      eval_fn=evalf, mesh=mesh, arena=args.arena)
-    st = engine.run(st, args.rounds, log_every=max(args.rounds // 10, 1))
+    out = {"algo": args.algo, "rounds": args.rounds}
+    if args.churn:
+        from repro.sim import simulate
+        tl, factory = _churn_timeline(args, n_clusters=len(test_sets))
+        st, log = simulate(st, tl, rounds=args.rounds,
+                           client_factory=factory, seed=args.seed,
+                           cohort_quantum=args.cohort_quantum,
+                           eval_every=max(args.rounds // 10, 1),
+                           test_sets=test_sets, true_cluster=true_cluster)
+        out["churn"] = {"timeline": tl.counts(),
+                        "joined": len(log.joined),
+                        "departed": len(log.departed),
+                        "final_gap": log.records[-1].get("gap")}
+        # joined clients need latent-cluster labels for evaluate()
+        true_cluster = list(true_cluster) + [
+            log.joined[cid] if log.joined[cid] is not None else -1
+            for cid in sorted(log.joined)]
+        if args.save_log:
+            with open(args.save_log, "w") as f:
+                json.dump(log.to_json(), f, indent=1)
+    else:
+        st = engine.run(st, args.rounds, log_every=max(args.rounds // 10, 1))
     res = engine.evaluate(st, test_sets, true_cluster)
-    out = {"algo": args.algo, "cluster_avg_acc": res["cluster_avg"],
-           "rounds": args.rounds, "wall_s": round(time.time() - t0, 1)}
+    out.update({"cluster_avg_acc": res["cluster_avg"],
+                "wall_s": round(time.time() - t0, 1)})
     if st.clusters is not None:
         assign = st.clusters.assignment()
         ids = sorted(assign)
@@ -135,6 +179,17 @@ def main():
     ap.add_argument("--cohort-chunk", type=int, default=0,
                     help="max clients per vmapped step; larger cohorts run "
                          "in lax.map chunks with flat memory (0 = unchunked)")
+    ap.add_argument("--churn", default=None,
+                    help="dynamic-federation mode (§5): a JSON trace path, "
+                         "or Poisson churn 'join=2.0,leave=1.5,straggle=0.1' "
+                         "(see repro.sim.Timeline.from_spec)")
+    ap.add_argument("--cohort-quantum", type=int, default=0,
+                    help="under --churn, truncate each cohort to a multiple "
+                         "of this so the set of compiled cohort shapes stays "
+                         "bounded as the population drifts (0 = off)")
+    ap.add_argument("--save-log", default=None,
+                    help="under --churn, write the per-round simulator log "
+                         "(SimLog.to_json) to this path")
     ap.add_argument("--clients", type=int, default=80)
     ap.add_argument("--domains", type=int, default=2)
     ap.add_argument("--rounds", type=int, default=50)

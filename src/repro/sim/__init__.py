@@ -1,0 +1,24 @@
+"""repro.sim — event-driven dynamic-federation simulator (paper §5).
+
+The engine (``repro.engine``) gives the churn *primitives* — pure
+``join`` / ``leave`` / ``infer`` transitions and an arena that grows and
+compacts — and this package drives them over time: a ``Timeline`` of
+typed events (``Join``, ``Leave``, ``Straggle``, ``Drift``,
+``Availability`` windows) generated stochastically
+(``Timeline.from_poisson``), replayed from a JSON trace
+(``Timeline.from_trace``), or written explicitly, and a
+``simulate(state, timeline, rounds)`` loop that interleaves events with
+``engine.run_round`` while recording the §5 joined-client accuracy
+trajectory. See ``docs/ARCHITECTURE.md`` for where this layer sits.
+"""
+from repro.sim.events import (Availability, Drift, Join, Leave,  # noqa: F401
+                              Straggle, event_from_dict, to_dict)
+from repro.sim.simulate import (SimLog, routed_accuracy,  # noqa: F401
+                                routed_model, simulate)
+from repro.sim.timeline import Timeline  # noqa: F401
+
+__all__ = [
+    "Availability", "Drift", "Join", "Leave", "Straggle", "Timeline",
+    "SimLog", "simulate", "routed_model", "routed_accuracy",
+    "event_from_dict", "to_dict",
+]

@@ -1,0 +1,255 @@
+"""The dynamic-federation simulation loop (paper §5 at scale).
+
+``simulate(state, timeline, rounds)`` interleaves a ``Timeline``'s
+events with ``engine.run_round``: joins route new clients through
+``engine.join`` (Ψ-inference against the live partition), departures
+through ``engine.leave`` (partition + arena stay consistent), drift
+rewrites client shards in place, and availability windows / stragglers
+constrain each round's cohort *before* it trains. Every transition is
+the engine's own pure API — the simulator adds no second code path, it
+only drives the one that exists.
+
+The loop records a per-round log (population, cohort, wall time, event
+markers, cluster count) plus the §5 joined-client accuracy trajectory:
+at each eval point, the routed-model accuracy of newly-joined clients
+vs. a sample of incumbents — the "accuracy recovers to the incumbents'
+level" curve the paper's dynamic experiment plots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine
+from repro.engine.registry import get_strategy
+from repro.sim.events import Drift, Join, Leave, Straggle
+from repro.sim.timeline import Timeline
+
+
+@dataclasses.dataclass
+class SimLog:
+    """What a simulation run recorded.
+
+    ``records``: one dict per round — ``t``, ``events`` (short labels),
+    ``n_registered`` / ``n_live`` population, ``cohort`` size actually
+    trained, ``sec_train`` (the ``run_round`` call alone) and
+    ``sec_round`` (+ event application) wall times, ``skipped`` (no
+    available cohort),
+    plus ``n_clusters`` and — at eval points — ``joined_acc`` /
+    ``incumbent_acc`` / ``gap``. ``joined``: cid -> latent cluster of
+    every client that joined mid-run; ``departed``: cids that left.
+    """
+    records: List[dict] = dataclasses.field(default_factory=list)
+    joined: Dict[int, Optional[int]] = dataclasses.field(default_factory=dict)
+    departed: List[int] = dataclasses.field(default_factory=list)
+
+    def curve(self, key: str):
+        """(rounds, values) trajectory of a recorded metric, skipping
+        rounds where it was not measured."""
+        ts = [r["t"] for r in self.records if r.get(key) is not None]
+        vs = [r[key] for r in self.records if r.get(key) is not None]
+        return ts, vs
+
+    def to_json(self) -> dict:
+        """JSON-able view (the ``BENCH_churn.json`` event-log schema)."""
+        return {"records": self.records,
+                "joined": {str(k): v for k, v in self.joined.items()},
+                "departed": list(self.departed)}
+
+
+def routed_model(state, cid: int):
+    """The model the server would serve client ``cid`` today: its
+    cluster's model when the strategy tracks a partition (StoCFL Ψ /
+    CFL membership), its personal model (Ditto), the argmin-local-loss
+    hypothesis (IFCA — the paper's own routing rule, since IFCA keeps no
+    persistent assignment), the global ω otherwise (§4.4 routing)."""
+    if state.clusters is not None and cid in state.clusters.reps:
+        return state.cluster_model(state.clusters.uf.find(int(cid)))
+    if state.members is not None:
+        for k, group in enumerate(state.members):
+            if cid in group:
+                return state.models.get(k, state.omega)
+    if cid in state.personal:
+        return state.personal[cid]
+    if len(state.models):                    # IFCA: hypotheses, no partition
+        batch = state.ctx.clients[int(cid)]
+        losses = {m: float(state.ctx.loss_fn(state.models[m], batch))
+                  for m in state.models}
+        return state.models[min(losses, key=losses.get)]
+    return state.omega
+
+
+def routed_accuracy(state, cids, tc_of: Dict[int, int], test_sets) -> Optional[float]:
+    """Mean routed-model accuracy over ``cids`` (each evaluated on its
+    latent cluster's held-out set per ``tc_of``); None when no cid has a
+    known latent cluster. The §5 recovery metric for both newcomers and
+    incumbents."""
+    fn = state.ctx.eval_fn
+    accs = [float(fn(routed_model(state, c), test_sets[tc_of[c]]))
+            for c in cids if tc_of.get(c) is not None and tc_of[c] in test_sets]
+    return float(np.mean(accs)) if accs else None
+
+
+def _resolve_leave(state, ev: Leave, rng) -> Optional[int]:
+    live = [i for i in range(state.n_clients) if i not in state.left]
+    if ev.cid is not None:
+        return int(ev.cid) if int(ev.cid) in live else None
+    if len(live) <= 1:          # never empty the federation
+        return None
+    return int(rng.choice(live))
+
+
+def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
+             client_factory: Optional[Callable] = None,
+             drift_fn: Optional[Callable] = None, seed: int = 0,
+             cohort_quantum: int = 0, eval_every: int = 0,
+             test_sets: Optional[dict] = None,
+             true_cluster: Optional[Any] = None,
+             incumbent_sample: int = 64):
+    """Drive ``rounds`` engine rounds through a churn ``Timeline``.
+
+    Args:
+      state: a fresh or mid-run ``ServerState`` (any strategy).
+      timeline: the event schedule (``repro.sim.Timeline``).
+      rounds: how many rounds to run (default: ``timeline.horizon + 1``).
+      client_factory: ``(cluster, rng) -> batch`` building a joining
+        client's dataset (required for ``Join`` events without an
+        explicit ``batch``) — e.g. ``repro.data.rotated_factory(...)``.
+      drift_fn: ``(batch, rng, strength) -> batch`` data-drift hook
+        (default ``repro.data.drift_batch``).
+      seed: simulator rng (leave victims, stragglers, drift, factory
+        draws) — disjoint from the engine's cohort-sampling rng, so a
+        timeline replays identically over different strategies.
+        Full-participation strategies (CFL) train their whole partition
+        every round, so availability windows, stragglers, and
+        ``cohort_quantum`` do not apply to them (the round's log carries
+        an explicit marker instead of a fabricated cohort size).
+      cohort_quantum: truncate each sampled cohort to a multiple of this
+        (0 = off). Under churn the population — hence the sampled cohort
+        size — drifts every round, and every new cohort shape is a fresh
+        XLA compile; quantizing keeps the set of shapes (so compiles)
+        bounded while participation stays within one quantum of nominal.
+      eval_every: record the §5 joined-vs-incumbent routed accuracy every
+        this many rounds (0 = never; needs ``test_sets`` + an engine
+        ``eval_fn``).
+      test_sets: {latent cluster id: held-out batch}.
+      true_cluster: latent cluster per *initial* client (joined clients
+        carry theirs on the ``Join`` event).
+      incumbent_sample: cap on incumbents evaluated per eval point.
+
+    Returns:
+      (final ``ServerState``, ``SimLog``).
+    """
+    rng = np.random.default_rng(seed)
+    rounds = timeline.horizon + 1 if rounds is None else int(rounds)
+    log = SimLog()
+    tc_of: Dict[int, Optional[int]] = (
+        {i: int(c) for i, c in enumerate(true_cluster)}
+        if true_cluster is not None else {})
+    incumbents = list(range(state.n_clients))
+    if len(incumbents) > incumbent_sample:
+        incumbents = [int(i) for i in
+                      rng.choice(incumbents, incumbent_sample, replace=False)]
+    if drift_fn is None:
+        from repro.data.synthetic import drift_batch
+        drift_fn = drift_batch
+    strat = get_strategy(state.strategy)
+
+    for t in range(rounds):
+        evs = timeline.at(t)
+        labels, drop_rate = [], 0.0
+        t0 = time.time()
+        for ev in evs:
+            if isinstance(ev, Join):
+                batch = ev.batch
+                if batch is None:
+                    if client_factory is None:
+                        raise ValueError("Join without batch needs a "
+                                         "client_factory")
+                    batch = client_factory(ev.cluster, rng)
+                batch = jax.tree.map(jnp.asarray, batch)
+                state, cid = engine.join(state, batch)
+                tc_of[cid] = ev.cluster
+                log.joined[cid] = ev.cluster
+                labels.append(f"join:{cid}")
+            elif isinstance(ev, Leave):
+                cid = _resolve_leave(state, ev, rng)
+                if cid is None:
+                    labels.append("leave:skipped")
+                    continue
+                state = engine.leave(state, cid)
+                log.departed.append(cid)
+                labels.append(f"leave:{cid}")
+            elif isinstance(ev, Straggle):
+                drop_rate = max(drop_rate, float(ev.rate))
+                labels.append(f"straggle:{ev.rate}")
+            elif isinstance(ev, Drift):
+                cids = ev.cids if ev.cids is not None else tuple(
+                    i for i in range(state.n_clients) if i not in state.left)
+                for c in cids:
+                    nb = jax.tree.map(
+                        jnp.asarray,
+                        drift_fn(state.ctx.clients[c], rng, ev.strength))
+                    state.ctx.clients[c] = nb
+                    if state.ctx.arena is not None:
+                        state.ctx.arena = state.ctx.arena.update(c, nb)
+                labels.append(f"drift:{len(cids)}")
+            else:
+                raise TypeError(f"unknown event {ev!r}")
+
+        # ---- cohort: availability -> sampling -> stragglers -> quantum
+        busy = timeline.unavailable(t)
+        if strat.full_participation:
+            # full-participation strategies (CFL) train their whole
+            # partition regardless of the cohort argument — availability,
+            # stragglers, and quantization cannot apply, and pretending
+            # otherwise would log cohort sizes that never trained
+            ids = np.array([i for i in range(state.n_clients)
+                            if i not in state.left])
+            if busy or drop_rate > 0:
+                labels.append("full-participation:cohort-events-inapplicable")
+        else:
+            rng_state, ids = engine.sample_clients(state, unavailable=busy)
+            state = state.replace(rng_state=rng_state)
+            if drop_rate > 0 and len(ids):
+                ids = ids[rng.random(len(ids)) >= drop_rate]
+            if cohort_quantum > 1 and len(ids) > cohort_quantum:
+                ids = ids[: (len(ids) // cohort_quantum) * cohort_quantum]
+
+        rec: dict = {"t": t, "events": labels,
+                     "n_registered": state.n_clients,
+                     "n_live": state.n_clients - len(state.left),
+                     "cohort": int(len(ids)), "skipped": len(ids) == 0,
+                     "had_events": bool(labels)}
+        if len(ids) == 0:
+            rec["sec_round"] = round(time.time() - t0, 4)
+            log.records.append(rec)
+            continue
+        t1 = time.time()
+        state, metrics = engine.run_round(state, ids)
+        jax.block_until_ready(state.omega)
+        t2 = time.time()
+        rec["sec_train"] = round(t2 - t1, 4)     # run_round alone
+        rec["sec_round"] = round(t2 - t0, 4)     # + event application
+        if "n_clusters" in metrics:
+            rec["n_clusters"] = metrics["n_clusters"]
+
+        # ---- §5 joined-vs-incumbent routed-accuracy trajectory
+        if (eval_every and test_sets is not None
+                and state.ctx.eval_fn is not None
+                and (t % eval_every == 0 or t == rounds - 1)):
+            alive_inc = [c for c in incumbents if c not in state.left]
+            rec["incumbent_acc"] = routed_accuracy(state, alive_inc, tc_of,
+                                                   test_sets)
+            alive_join = [c for c in log.joined if c not in state.left]
+            rec["joined_acc"] = routed_accuracy(state, alive_join, tc_of,
+                                                test_sets)
+            if rec["incumbent_acc"] is not None and rec["joined_acc"] is not None:
+                rec["gap"] = round(rec["incumbent_acc"] - rec["joined_acc"], 5)
+        log.records.append(rec)
+    return state, log

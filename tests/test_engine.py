@@ -230,8 +230,11 @@ def test_server_state_is_pytree():
                         + len(jax.tree.leaves(st.models.stacked)))
     k = len(st.models)
     assert k >= 1
+    # rows are pow2-capacity padded (shape-stable under §5 churn): the
+    # leading axis is the capacity, with the K occupied rows first
+    assert st.models.capacity >= k
     for leaf in jax.tree.leaves(st.models.stacked):
-        assert leaf.shape[0] == k
+        assert leaf.shape[0] == st.models.capacity
     assert isinstance(host.models, engine.ClusterBank)
     assert host.models.keys() == st.models.keys()
 

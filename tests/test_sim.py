@@ -1,0 +1,387 @@
+"""Dynamic-federation simulator battery (repro.sim + churn-ready arena).
+
+Three promises under test: (1) timelines are deterministic, replayable,
+and serialize losslessly; (2) the simulator drives the engine's pure
+transitions without breaking any bookkeeping invariant, for every
+registered strategy, on both data paths (arena gather vs legacy restack
+— bitwise-identical trajectories through arbitrary churn); (3) the
+arena's amortized growth / tombstone / compaction machinery is invisible
+to gathers: ids stay stable, values stay bitwise, pad rows contribute
+nothing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.data import drift_batch, rotated, rotated_factory
+from repro.data.arena import ClientArena
+from repro.models import simple
+from repro.sim import (Availability, Drift, Join, Leave, Straggle, Timeline,
+                       simulate)
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+EVAL = jax.jit(lambda p, b: simple.accuracy(p, b, TASK))
+ALL = ["stocfl", "fedavg", "fedprox", "ditto", "ifca", "cfl"]
+
+
+def _fed(n_clients=8, n_per=16, seed=3):
+    clients, tc, tests = rotated(n_clusters=2, n_clients=n_clients,
+                                 n_per=n_per, seed=seed)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    tests = {k: jax.tree.map(jnp.asarray, v) for k, v in tests.items()}
+    return clients, tc, tests
+
+
+def _params(seed=0):
+    return simple.init(jax.random.PRNGKey(seed), TASK)
+
+
+def _cfg(**kw):
+    kw.setdefault("local_steps", 1)
+    kw.setdefault("sample_rate", 0.5)
+    kw.setdefault("seed", 0)
+    return engine.EngineConfig(**kw)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _states_bitwise_equal(a, b):
+    assert a.round == b.round
+    assert a.left == b.left
+    assert a.sizes == b.sizes
+    _leaves_equal(a.omega, b.omega)
+    assert a.models.keys() == b.models.keys()
+    for k in a.models:
+        _leaves_equal(a.models[k], b.models[k])
+    assert a.personal.keys() == b.personal.keys()
+    for k in a.personal:
+        _leaves_equal(a.personal[k], b.personal[k])
+    if a.clusters is not None:
+        assert a.clusters.assignment() == b.clusters.assignment()
+    assert a.members == b.members
+
+
+# ================================================================ timeline
+def test_poisson_timeline_deterministic():
+    a = Timeline.from_poisson(rounds=20, join_rate=1.0, leave_rate=0.5,
+                              straggle=0.1, drift_every=5, n_clusters=4,
+                              seed=7)
+    b = Timeline.from_poisson(rounds=20, join_rate=1.0, leave_rate=0.5,
+                              straggle=0.1, drift_every=5, n_clusters=4,
+                              seed=7)
+    assert a.events() == b.events()
+    c = Timeline.from_poisson(rounds=20, join_rate=1.0, leave_rate=0.5,
+                              seed=8)
+    assert a.events() != c.events()
+    counts = a.counts()
+    assert counts["straggle"] == 19          # every round from start=1
+    assert counts.get("join", 0) > 0 and counts.get("leave", 0) > 0
+    assert all(ev.t >= 1 for ev in a.events())   # start=1 spares round 0
+
+
+def test_trace_roundtrip(tmp_path):
+    tl = Timeline([Join(t=1, cluster=2), Leave(t=2, cid=5), Leave(t=2),
+                   Straggle(t=3, rate=0.25),
+                   Drift(t=4, cids=(0, 3), strength=0.1)],
+                  windows=[Availability(cid=1, start=0, end=3)])
+    p = str(tmp_path / "trace.json")
+    tl.to_trace(p)
+    back = Timeline.from_trace(p)
+    assert back.events() == tl.events()
+    assert back.windows == tl.windows
+
+
+def test_join_with_batch_payload_does_not_serialize(tmp_path):
+    tl = Timeline([Join(t=0, batch={"x": np.zeros((2, 4))})])
+    with pytest.raises(ValueError, match="batch"):
+        tl.to_trace(str(tmp_path / "t.json"))
+
+
+def test_from_spec_kv_and_trace(tmp_path):
+    tl = Timeline.from_spec("join=1.0,leave=0.5,straggle=0.2", rounds=10,
+                            seed=0, n_clusters=4)
+    want = Timeline.from_poisson(rounds=10, join_rate=1.0, leave_rate=0.5,
+                                 straggle=0.2, n_clusters=4, seed=0)
+    assert tl.events() == want.events()
+    p = str(tmp_path / "trace.json")
+    want.to_trace(p)
+    assert Timeline.from_spec(p, rounds=99).events() == want.events()
+    with pytest.raises(ValueError, match="churn"):
+        Timeline.from_spec("nonsense", rounds=5)
+
+
+def test_availability_windows():
+    tl = Timeline(windows=[Availability(cid=2, start=3, end=6),
+                           Availability(cid=2, start=8, end=9),
+                           Availability(cid=4, start=0, end=100)])
+    assert tl.unavailable(0) == {2}
+    assert tl.unavailable(3) == frozenset()
+    assert tl.unavailable(6) == {2}
+    assert tl.unavailable(8) == frozenset()       # second window
+    # cid 4's window covers everything; unwindowed clients never appear
+    assert 4 not in tl.unavailable(50)
+
+
+# ================================================================ sampling
+def test_sample_clients_respects_unavailable_and_live_count():
+    clients, _, _ = _fed(n_clients=10)
+    st = engine.init("fedavg", LOSS, _params(), clients,
+                     _cfg(sample_rate=0.5))
+    _, ids = engine.sample_clients(st, unavailable={0, 1, 2})
+    assert set(ids.tolist()).isdisjoint({0, 1, 2})
+    st = engine.leave(st, 9)
+    st = engine.leave(st, 8)
+    # cohort size follows the LIVE population (8), not the registered (10)
+    _, ids = engine.sample_clients(st)
+    assert len(ids) == 4
+    assert set(ids.tolist()).isdisjoint({8, 9})
+
+
+def test_simulate_cohort_quantum_bounds_shapes():
+    clients, _, _ = _fed(n_clients=12)
+    st = engine.init("fedavg", LOSS, _params(), clients,
+                     _cfg(sample_rate=0.75))
+    tl = Timeline([Straggle(t=t, rate=0.3) for t in range(6)])
+    st, log = simulate(st, tl, rounds=6, seed=0, cohort_quantum=4)
+    sizes = {r["cohort"] for r in log.records if not r["skipped"]}
+    assert all(c % 4 == 0 or c < 4 for c in sizes)
+
+
+# ================================================================ invariants
+def test_simulate_keeps_state_world_consistent():
+    clients, tc, tests = _fed(n_clients=10)
+    st = engine.init("stocfl", LOSS, _params(), clients,
+                     _cfg(sample_rate=1.0), eval_fn=EVAL, arena=True)
+    tl = Timeline.from_poisson(rounds=8, join_rate=0.8, leave_rate=0.5,
+                               straggle=0.2, drift_every=3, n_clusters=2,
+                               seed=5)
+    factory = rotated_factory(n_clusters=2, n_per=16, seed=3)
+    st, log = simulate(st, tl, rounds=8, client_factory=factory, seed=1,
+                       eval_every=4, test_sets=tests, true_cluster=tc)
+    # world and state agree about the population
+    assert st.n_clients == len(st.ctx.clients) == len(st.sizes)
+    assert st.ctx.arena.n_clients == st.n_clients
+    np.testing.assert_array_equal(np.asarray(st.ctx.arena.sizes),
+                                  np.asarray(st.sizes))
+    assert st.left == frozenset(log.departed)
+    assert set(log.joined) == set(range(10, st.n_clients))
+    # departed clients are out of the partition; live sampled ones are in
+    assign = st.clusters.assignment()
+    assert not set(assign) & st.left
+    for leaf in jax.tree.leaves(st.omega):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # the log's population trajectory is internally consistent
+    for r in log.records:
+        assert r["n_live"] == r["n_registered"] - len(
+            [c for c in log.departed
+             if any(x["t"] <= r["t"] for x in log.records
+                    if f"leave:{c}" in x["events"])])
+
+
+def test_leave_events_commute():
+    """Where the math promises order-invariance, the simulator delivers
+    it: two departures in one round yield the same state either way
+    (leave touches disjoint bookkeeping per cid)."""
+    clients, _, _ = _fed(n_clients=8)
+
+    def run(order):
+        st = engine.init("stocfl", LOSS, _params(), clients,
+                         _cfg(sample_rate=1.0), arena=True)
+        st, _ = engine.run_round(st, np.arange(8))
+        tl = Timeline([Leave(t=0, cid=order[0]), Leave(t=0, cid=order[1])])
+        st, _ = simulate(st, tl, rounds=1, seed=0)
+        return st
+
+    _states_bitwise_equal(run((2, 5)), run((5, 2)))
+
+
+def test_drift_rewrites_world_and_arena():
+    clients, _, _ = _fed(n_clients=6)
+    st = engine.init("fedavg", LOSS, _params(), clients,
+                     _cfg(sample_rate=1.0), arena=True)
+    before = np.asarray(st.ctx.clients[0]["x"]).copy()
+    tl = Timeline([Drift(t=0, cids=(0,), strength=0.5)])
+    st, _ = simulate(st, tl, rounds=1, seed=0)
+    after = np.asarray(st.ctx.clients[0]["x"])
+    assert not np.array_equal(before, after)
+    # arena row mirrors the world; labels and shapes are preserved
+    _leaves_equal(st.ctx.arena.client(0), st.ctx.clients[0])
+    assert after.shape == before.shape
+
+
+def test_drift_batch_preserves_labels_and_norms():
+    rng = np.random.default_rng(0)
+    b = {"x": rng.normal(size=(10, 8)).astype(np.float32),
+         "y": rng.integers(0, 3, size=10).astype(np.int32)}
+    d = drift_batch(b, np.random.default_rng(1), strength=0.1)
+    np.testing.assert_array_equal(d["y"], b["y"])
+    # orthogonal transform: row norms preserved
+    np.testing.assert_allclose(np.linalg.norm(d["x"], axis=1),
+                               np.linalg.norm(b["x"], axis=1), rtol=1e-4)
+
+
+def test_routed_model_ifca_uses_best_hypothesis():
+    """IFCA keeps no persistent assignment; routing must follow the
+    paper's argmin-local-loss rule, not fall back to the untrained ω."""
+    from repro.sim import routed_model
+    clients, _, _ = _fed(n_clients=6)
+    st = engine.init("ifca", LOSS, _params(), clients, _cfg(sample_rate=1.0))
+    st, _ = engine.run_round(st)
+    losses = [float(LOSS(st.models[m], st.ctx.clients[0]))
+              for m in range(st.ctx.cfg.n_models)]
+    _leaves_equal(routed_model(st, 0), st.models[int(np.argmin(losses))])
+
+
+def test_full_participation_ignores_cohort_events_honestly():
+    """CFL trains its whole partition regardless of the cohort argument:
+    stragglers/availability must not fabricate a reduced cohort in the
+    log — the round carries an explicit inapplicability marker."""
+    clients, _, _ = _fed(n_clients=6)
+    st = engine.init("cfl", LOSS, _params(), clients, _cfg(sample_rate=1.0))
+    tl = Timeline([Straggle(t=0, rate=0.9)])
+    st, log = simulate(st, tl, rounds=1, seed=0)
+    r = log.records[0]
+    assert r["cohort"] == 6
+    assert "full-participation:cohort-events-inapplicable" in r["events"]
+
+
+# ===================================================== arena/legacy parity
+@pytest.mark.parametrize("name", ALL)
+def test_arena_matches_legacy_under_churn(name):
+    """The same churn timeline drives bitwise-identical ServerState
+    trajectories on the arena and the legacy restack path — joins,
+    departures, stragglers and all — for every registered strategy."""
+    clients, _, _ = _fed()
+    factory = rotated_factory(n_clusters=2, n_per=16, seed=3)
+    tl = Timeline([Join(t=1, cluster=1), Leave(t=2, cid=0),
+                   Straggle(t=3, rate=0.3), Join(t=3, cluster=0),
+                   Leave(t=4)])
+
+    def run(arena):
+        st = engine.init(name, LOSS, _params(), clients, _cfg(),
+                         eval_fn=EVAL, arena=arena)
+        st, log = simulate(st, tl, rounds=5, client_factory=factory, seed=9)
+        return st, log
+
+    (a, la), (b, lb) = run(False), run(True)
+    strip = lambda recs: [{k: v for k, v in r.items()
+                           if not k.startswith("sec_")} for r in recs]
+    assert strip(la.records) == strip(lb.records)
+    assert la.joined == lb.joined and la.departed == lb.departed
+    _states_bitwise_equal(a, b)
+
+
+def test_join_leave_join_arena_regression():
+    """§5 regression: join -> leave -> join under arena=True stays
+    bit-identical to the legacy path, and the departed client's padded
+    row contributes nothing afterwards (no stale rows in any loss)."""
+    clients, _, _ = _fed(n_clients=6)
+    extra, _, _ = _fed(n_clients=3, seed=11)
+
+    def run(arena):
+        st = engine.init("stocfl", LOSS, _params(), clients,
+                         _cfg(sample_rate=1.0), arena=arena)
+        st, _ = engine.run_round(st)
+        st, c1 = engine.join(st, extra[0])
+        st, _ = engine.run_round(st)
+        st = engine.leave(st, c1)
+        st, _ = engine.run_round(st)
+        st, c2 = engine.join(st, extra[1])
+        st, _ = engine.run_round(st)
+        return st, (c1, c2)
+
+    a, ids_a = run(False)
+    b, ids_b = run(True)
+    assert ids_a == ids_b == (6, 7)
+    _states_bitwise_equal(a, b)
+    # the arena still serves every live client's exact shard
+    for cid in [0, 3, 7]:
+        _leaves_equal(b.ctx.arena.client(cid), b.ctx.clients[cid])
+
+
+# ========================================================== arena mechanics
+def _mk(rng, n, d=4):
+    return {"x": rng.normal(size=(n, d)).astype(np.float32),
+            "y": rng.integers(0, 3, size=n).astype(np.int32)}
+
+
+def test_arena_grow_doubles_capacity():
+    rng = np.random.default_rng(0)
+    ar = ClientArena.from_clients([_mk(rng, 6) for _ in range(3)])
+    assert ar.capacity == 3
+    ar = ar.append(_mk(rng, 6))
+    assert ar.capacity == 6 and ar.n_rows == 4       # doubled, not +1
+    ar = ar.append(_mk(rng, 6))
+    assert ar.capacity == 6 and ar.n_rows == 5       # spare row reused
+    assert ar.grow(6) is ar                          # no-op under capacity
+    assert ar.grow(7).capacity == 12
+
+
+def test_arena_from_clients_with_capacity():
+    rng = np.random.default_rng(0)
+    ar = ClientArena.from_clients([_mk(rng, 6) for _ in range(3)],
+                                  capacity=10)
+    assert ar.capacity == 10 and ar.n_rows == 3 and ar.n_clients == 3
+    got = ar.gather([0, 2])
+    assert jax.tree.leaves(got)[0].shape[0] == 2
+
+
+def test_arena_tombstone_and_autocompact():
+    rng = np.random.default_rng(1)
+    shards = [_mk(rng, 5) for _ in range(4)]
+    ar = ClientArena.from_clients(shards)
+    ar = ar.tombstone(1)
+    assert ar.n_live == 3 and ar.n_clients == 4
+    # data still resident: forked pre-departure states can gather it
+    _leaves_equal(ar.client(1), shards[1])
+    ar = ar.tombstone(2)
+    assert ar.n_rows == 4                    # 2/4 dead: not yet EXCEEDING half
+    # third death exceeds 50% -> auto-compaction reclaims the rows
+    ar = ar.tombstone(3)
+    assert ar.n_rows == 1 and ar.capacity == 1
+    with pytest.raises(KeyError):
+        ar.gather([1])
+    # the survivor keeps its id and its exact bytes
+    _leaves_equal(ar.client(0), shards[0])
+    # append after compaction regrows and keeps id stability
+    new = _mk(rng, 5)
+    ar = ar.append(new)
+    assert ar.n_clients == 5
+    _leaves_equal(ar.client(4), new)
+
+
+def test_arena_compact_explicit_preserves_gather_values():
+    rng = np.random.default_rng(2)
+    shards = [_mk(rng, n) for n in (4, 7, 5, 7)]
+    ar = ClientArena.from_clients(shards)
+    ar = ar.tombstone(0, compact_frac=0)             # no auto-compact
+    before = ar.gather([1, 3, 2])
+    ar2 = ar.compact()
+    after = ar2.gather([1, 3, 2])
+    for x, y in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert ar2.n_rows == 3 and ar2.capacity == 3
+
+
+def test_arena_update_rewrites_row_in_place():
+    rng = np.random.default_rng(3)
+    ar = ClientArena.from_clients([_mk(rng, 6) for _ in range(3)])
+    nb = _mk(rng, 6)
+    ar2 = ar.update(1, nb)
+    _leaves_equal(ar2.client(1), nb)
+    _leaves_equal(ar2.client(0), ar.client(0))
+    # shorter rewrite goes ragged; the mask hides the tail
+    short = _mk(rng, 4)
+    ar3 = ar2.update(1, short)
+    assert ar3.ragged
+    got = ar3.gather([1])
+    assert float(np.asarray(got["mask"]).sum()) == 4.0
+    with pytest.raises(ValueError):
+        ar2.update(1, _mk(rng, 99))                  # longer than n_max
