@@ -1,0 +1,134 @@
+"""Clustering-core scale bench: host ``ClusterState`` vs the device
+union-find (``core.device_clustering``). Writes ``BENCH_cluster.json``.
+
+Sweeps K̃ ∈ {64, 512, 4096} singleton clients drawn from ``--groups``
+latent Non-IID distributions (the paper's 4-cluster settings scaled up)
+and times the clustering step in its two regimes:
+
+  merge   round-1 onboarding: all K̃ singletons observed, one
+          ``merge_round`` collapses them to the latent groups. The host
+          pays the O(#qualifying-pairs) Python union scan here — at
+          K̃=4096 over 4 groups that is ~2M find/union iterations — while
+          the device path is one jitted program (fused masked-cosine-τ
+          candidates + O(log K̃) min-label propagation). This is the
+          metric the ≥3×@4096 acceptance bar reads.
+  scan    steady state: the partition has settled, a pass finds nothing
+          to merge. Both paths are K̃-compact (the host slices its padded
+          matrix, the device compacts live roots with a static-size
+          nonzero), so this measures the floor, not the win.
+
+``first_s`` is the first warm-up call (device: XLA compile; host: BLAS/
+jit warm-up) — steady numbers exclude it; EXPERIMENTS.md explains how to
+read the two apart. Timings are medians over ``--iters`` fresh
+``copy()`` forks, so every merge iteration starts from the same
+all-singleton state.
+
+  PYTHONPATH=src python -m benchmarks.cluster_scale             # full sweep
+  PYTHONPATH=src python -m benchmarks.cluster_scale --smoke     # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import ClusterState
+from repro.core.device_clustering import DeviceClusters
+
+
+def _reps(k: int, dim: int, groups: int, noise: float, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    anchors = rng.normal(size=(groups, dim))
+    anchors /= np.linalg.norm(anchors, axis=1, keepdims=True)
+    reps = anchors[np.arange(k) % groups] + rng.normal(size=(k, dim)) * noise
+    return (reps / np.linalg.norm(reps, axis=1, keepdims=True)
+            ).astype(np.float32)
+
+
+def bench_point(k: int, dim: int, groups: int, tau: float, noise: float,
+                iters: int) -> dict:
+    """One K̃ point, both backends, both regimes."""
+    reps = _reps(k, dim, groups, noise)
+    point: dict = {"k": k}
+    for name, make in (("host", lambda: ClusterState(tau=tau)),
+                       ("device", lambda: DeviceClusters(tau=tau,
+                                                         capacity=k))):
+        base = make()
+        base.observe(range(k),
+                     jnp.asarray(reps) if name == "device" else reps)
+        t0 = time.time()
+        warm = base.copy()
+        warm.merge_round()
+        first = time.time() - t0
+
+        merge_ts = []
+        for _ in range(iters):
+            fork = base.copy()
+            t0 = time.time()
+            fork.merge_round()
+            merge_ts.append(time.time() - t0)
+        settled = fork
+        scan_ts = []
+        for _ in range(iters):
+            t0 = time.time()
+            merges = settled.merge_round()
+            scan_ts.append(time.time() - t0)
+            assert merges == [], "settled state merged again"
+        point[name] = {"first_s": round(first, 4),
+                       "merge_s": round(float(np.median(merge_ts)), 5),
+                       "scan_s": round(float(np.median(scan_ts)), 5),
+                       "k_after": settled.n_clusters()}
+    assert point["host"]["k_after"] == point["device"]["k_after"] == groups
+    point["merge_speedup"] = round(
+        point["host"]["merge_s"] / max(point["device"]["merge_s"], 1e-9), 2)
+    point["scan_speedup"] = round(
+        point["host"]["scan_s"] / max(point["device"]["scan_s"], 1e-9), 2)
+    return point
+
+
+def main() -> None:
+    """CLI entry: run the sweep and write the JSON artifact."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (small K̃, fewer iters)")
+    ap.add_argument("--out", default="BENCH_cluster.json")
+    ap.add_argument("--dim", type=int, default=256,
+                    help="Ψ representation dimension")
+    ap.add_argument("--groups", type=int, default=4,
+                    help="latent Non-IID distributions the singletons "
+                         "collapse into")
+    ap.add_argument("--tau", type=float, default=0.5)
+    ap.add_argument("--noise", type=float, default=0.05)
+    ap.add_argument("--iters", type=int, default=0,
+                    help="timed repetitions per point (0 = auto)")
+    args = ap.parse_args()
+
+    ks = [16, 64, 128] if args.smoke else [64, 512, 4096]
+    iters = args.iters or (3 if args.smoke else 5)
+    out = {"meta": {"backend": jax.default_backend(),
+                    "machine": platform.machine(),
+                    "dim": args.dim, "groups": args.groups,
+                    "tau": args.tau, "noise": args.noise,
+                    "iters": iters, "smoke": bool(args.smoke)},
+           "points": []}
+    for k in ks:
+        point = bench_point(k, args.dim, args.groups, args.tau,
+                            args.noise, iters)
+        out["points"].append(point)
+        print(f"K={k:5d}  host merge {point['host']['merge_s']:.4f}s  "
+              f"device merge {point['device']['merge_s']:.4f}s  "
+              f"({point['merge_speedup']}x)  scan "
+              f"{point['host']['scan_s']:.4f}s vs "
+              f"{point['device']['scan_s']:.4f}s")
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

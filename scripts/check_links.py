@@ -14,8 +14,8 @@ import os
 import re
 import sys
 
-DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "EXPERIMENTS.md",
-                 "ROADMAP.md", "CHANGES.md"]
+DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/CLUSTERING.md",
+                 "EXPERIMENTS.md", "ROADMAP.md", "CHANGES.md"]
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 

@@ -61,12 +61,20 @@ def load_pytree(path: str, template=None):
 # and resumes bit-exactly — including the client-sampling rng.
 # ---------------------------------------------------------------------------
 def save_server_state(dirpath: str, state) -> None:
-    """Checkpoint an ``engine.ServerState`` (any strategy) to a directory."""
+    """Checkpoint an ``engine.ServerState`` (any strategy) to a directory.
+
+    Both clustering backends round-trip: the numpy ``ClusterState`` as a
+    parent dict + per-client reps npz, the ``DeviceClusters`` pytree as
+    its three stacked arrays (``clusters_device.npz``) — bit-exact
+    either way."""
+    from repro.core.device_clustering import DeviceClusters
+
     os.makedirs(dirpath, exist_ok=True)
     arrays = {"omega": state.omega,
               "models": {str(k): v for k, v in state.models.items()},
               "personal": {str(k): v for k, v in state.personal.items()}}
     save_pytree(os.path.join(dirpath, "arrays.npz"), arrays)
+    device_clusters = isinstance(state.clusters, DeviceClusters)
     manifest = {
         "strategy": state.strategy,
         "round": state.round,
@@ -80,13 +88,19 @@ def save_server_state(dirpath: str, state) -> None:
         "personal_keys": sorted(int(k) for k in state.personal),
         "clusters": None if state.clusters is None else {
             "tau": state.clusters.tau,
-            "parent": {str(k): int(v) for k, v in state.clusters.uf.parent.items()},
+            "backend": "device" if device_clusters else "numpy",
+            "parent": (None if device_clusters else
+                       {str(k): int(v)
+                        for k, v in state.clusters.uf.parent.items()}),
             "seen": sorted(int(c) for c in state.clusters.seen),
         },
     }
     with open(os.path.join(dirpath, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-    if state.clusters is not None:
+    if device_clusters:
+        np.savez(os.path.join(dirpath, "clusters_device.npz"),
+                 **state.clusters.arrays())
+    elif state.clusters is not None:
         np.savez(os.path.join(dirpath, "reps.npz"),
                  **{str(k): v for k, v in state.clusters.reps.items()})
 
@@ -98,6 +112,7 @@ def load_server_state(dirpath: str, state):
     updates) and the parameter-shape templates; the returned state carries
     the checkpointed arrays, partition, history, and rng position."""
     from repro.core.clustering import ClusterState
+    from repro.core.device_clustering import DeviceClusters
 
     from repro.engine.bank import ClusterBank
 
@@ -110,14 +125,20 @@ def load_server_state(dirpath: str, state):
     arrays = load_pytree(os.path.join(dirpath, "arrays.npz"), template)
     clusters = None
     if man["clusters"] is not None:
-        clusters = ClusterState(man["clusters"]["tau"])
-        clusters.uf.parent = {int(k): int(v)
-                              for k, v in man["clusters"]["parent"].items()}
-        clusters.seen = set(man["clusters"]["seen"])
-        reps_path = os.path.join(dirpath, "reps.npz")
-        if os.path.exists(reps_path):
-            reps = np.load(reps_path)
-            clusters.reps = {int(k): reps[k] for k in reps.files}
+        if man["clusters"].get("backend", "numpy") == "device":
+            dev = np.load(os.path.join(dirpath, "clusters_device.npz"))
+            clusters = DeviceClusters.from_arrays(
+                man["clusters"]["tau"], dev["parent"], dev["live"],
+                dev["rep"])
+        else:
+            clusters = ClusterState(man["clusters"]["tau"])
+            clusters.uf.parent = {int(k): int(v)
+                                  for k, v in man["clusters"]["parent"].items()}
+            clusters.seen = set(man["clusters"]["seen"])
+            reps_path = os.path.join(dirpath, "reps.npz")
+            if os.path.exists(reps_path):
+                reps = np.load(reps_path)
+                clusters.reps = {int(k): reps[k] for k in reps.files}
     return state.replace(
         strategy=man["strategy"], round=man["round"],
         rng_state=man["rng_state"],

@@ -1,5 +1,24 @@
-"""StoCFL — the paper's primary contribution as a composable JAX module."""
-from repro.core.clustering import ClusterState, adjusted_rand_index  # noqa: F401
+"""repro.core — the paper's math as composable JAX modules.
+
+Ψ distribution extractor (§3.1), stochastic client clustering (§3.2:
+host ``ClusterState`` and its device-resident twin ``DeviceClusters``),
+the bi-level cohort update (§3.3, ``repro.core.bilevel``), robust
+aggregators, and the deprecated class shims (``StoCFL`` + baselines)
+over ``repro.engine``.
+"""
+from repro.core.clustering import (ClusterState, UnionFind,  # noqa: F401
+                                   adjusted_rand_index)
+from repro.core.device_clustering import (DeviceClusters,  # noqa: F401
+                                          DeviceClusterState,
+                                          make_cluster_state)
 from repro.core.extractor import make_extractor, representation  # noqa: F401
 from repro.core.stocfl import StoCFL, StoCFLConfig  # noqa: F401
 from repro.core.baselines import CFLSattler, Ditto, FLConfig, FedAvg, FedProx, IFCA  # noqa: F401
+
+__all__ = [
+    "ClusterState", "UnionFind", "adjusted_rand_index",
+    "DeviceClusters", "DeviceClusterState", "make_cluster_state",
+    "make_extractor", "representation",
+    "StoCFL", "StoCFLConfig",
+    "CFLSattler", "Ditto", "FLConfig", "FedAvg", "FedProx", "IFCA",
+]

@@ -92,10 +92,12 @@ class _EngineShim:
 
 
 class FedAvg(_EngineShim):
+    """Single-global-model FedAvg (the λ=0 ∧ τ=−1 degeneration)."""
     strategy = "fedavg"
 
     @property
     def global_params(self):
+        """The global model ω."""
         return self._st.omega
 
     @global_params.setter
@@ -104,6 +106,7 @@ class FedAvg(_EngineShim):
 
 
 class FedProx(FedAvg):
+    """FedAvg with a prox term to the broadcast global (μ = cfg.mu)."""
     strategy = "fedprox"
 
 
@@ -113,6 +116,7 @@ class Ditto(FedAvg):
 
     @property
     def personal(self):
+        """{client id: personal model} (prox-to-global, τ=1 regime)."""
         return self._st.personal
 
 
@@ -128,6 +132,7 @@ class IFCA(_EngineShim):
 
     @property
     def models(self):
+        """The M̃ hypothesis models, index-ordered."""
         return [self._st.models[m] for m in range(self.n_models)]
 
 
@@ -143,12 +148,15 @@ class CFLSattler(_EngineShim):
 
     @property
     def clusters(self):
+        """Member client-id lists, one per current cluster."""
         return [list(m) for m in self._st.members]
 
     @property
     def models(self):
+        """Per-cluster models, index-aligned with ``clusters``."""
         return [self._st.models[k] for k in range(len(self._st.members))]
 
     def cluster_of(self, cid: int) -> int:
+        """Index of the cluster client ``cid`` belongs to."""
         from repro.engine.registry import get_strategy
         return get_strategy("cfl").cluster_of(self._st, cid)

@@ -12,7 +12,11 @@ Server-side state over client distribution representations Ψ(D_i):
     a fresh cluster seeded from the nearest cluster's model.
 
 This is plain host-side logic (numpy); only the similarity matrix is a
-device computation.
+device computation. It is the reference implementation and the shimmed
+FALLBACK: ``core.device_clustering`` runs the same partition semantics
+as jitted device transitions (``EngineConfig.cluster_backend="device"``),
+and the parity battery in ``tests/test_device_clustering.py`` holds the
+two to the same answers.
 """
 from __future__ import annotations
 
@@ -24,13 +28,19 @@ from repro.kernels import ops
 
 
 class UnionFind:
+    """Host union-find over client ids (path-halving find, smaller-root-
+    wins union — the semantics the device pointer-halving kernel
+    mirrors, see ``kernels.ops.resolve_roots``)."""
+
     def __init__(self):
         self.parent: Dict[int, int] = {}
 
     def add(self, i: int):
+        """Register ``i`` as a singleton (no-op when already present)."""
         self.parent.setdefault(i, i)
 
     def find(self, i: int) -> int:
+        """Root of ``i``'s cluster, compressing the path as it walks."""
         p = self.parent
         while p[i] != i:
             p[i] = p[p[i]]
@@ -38,6 +48,10 @@ class UnionFind:
         return i
 
     def union(self, a: int, b: int) -> bool:
+        """Merge a's and b's clusters; returns True when they were
+        distinct. The smaller root id always wins, so every root is its
+        cluster's minimum member id (an invariant ``remove`` and the
+        device backend both rely on)."""
         ra, rb = self.find(a), self.find(b)
         if ra == rb:
             return False
@@ -102,9 +116,11 @@ class ClusterState:
         return [int(r) for r in roots], mat
 
     def assignment(self) -> Dict[int, int]:
+        """{client id: cluster root} over observed clients."""
         return {cid: self.uf.find(cid) for cid in self.reps}
 
     def n_clusters(self) -> int:
+        """Current cluster count K̃."""
         return len(self.clusters())
 
     # ------------------------------------------------------------- merging
@@ -123,7 +139,18 @@ class ClusterState:
             kp = -(-k // pad_to) * pad_to
             means = np.concatenate(
                 [means, np.zeros((kp - k, means.shape[1]), means.dtype)])
-        M = np.asarray(ops.pairwise_cosine(means))[:k, :k]
+        M = np.asarray(ops.pairwise_cosine(means))
+        if M.shape[0] > k and (M[k:, :].any() or M[:k, k:].any()):
+            # pad rows are zero-Ψ ghosts whose similarities must be
+            # exact 0 — the kernels' norm guard makes them so, the
+            # cos(0,0) diagonal included. Should a kernel/guard change
+            # ever leak nonzero similarity into the pad block, scrub it
+            # here so no scan (this class's or a caller keeping the
+            # padded matrix) can turn a ghost into an off-by-pad merge.
+            M = M.copy()                     # device output is read-only
+            M[k:, :] = 0.0
+            M[:, k:] = 0.0
+        M = M[:k, :k]
         return roots, M
 
     def merge_round(self) -> List[Tuple[int, int]]:

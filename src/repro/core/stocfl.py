@@ -63,6 +63,7 @@ class StoCFL:
 
     @property
     def omega(self):
+        """The global model ω."""
         return self._st.omega
 
     @omega.setter
@@ -71,6 +72,7 @@ class StoCFL:
 
     @property
     def models(self):
+        """Cluster models (``ClusterBank``, Mapping-compatible)."""
         return self._st.models
 
     @models.setter
@@ -80,10 +82,12 @@ class StoCFL:
 
     @property
     def state(self):
+        """The Ψ-clustering bookkeeping (``ClusterState``-shaped)."""
         return self._st.clusters
 
     @property
     def history(self):
+        """Per-round metric records."""
         return list(self._st.history)
 
     @history.setter
@@ -92,46 +96,57 @@ class StoCFL:
 
     @property
     def clients(self):
+        """The registered client datasets (the context's world)."""
         return self._st.ctx.clients
 
     @property
     def n(self) -> int:
+        """Registered client count (departed included)."""
         return self._st.n_clients
 
     @property
     def sizes(self) -> np.ndarray:
+        """Per-client sample counts (aggregation weights)."""
         return np.asarray(self._st.sizes)
 
     @property
     def init_params(self):
+        """ω₀ — initialization and lazy cluster-model default."""
         return self._st.ctx.init_params
 
     @property
     def anchor(self):
-        return self._st.ctx.init_params          # ψ = ω₀ (paper §4.2)
+        """The frozen Ψ anchor ψ = ω₀ (paper §4.2)."""
+        return self._st.ctx.init_params
 
     @property
     def loss_fn(self):
+        """The local objective f_i(params, batch) -> scalar."""
         return self._st.ctx.loss_fn
 
     @property
     def eval_fn(self):
+        """Optional accuracy fn used by ``evaluate``."""
         return self._st.ctx.eval_fn
 
     @property
     def extractor(self):
+        """The Ψ distribution extractor (§3.1)."""
         return self._st.ctx.extractor
 
     # ------------------------------------------------------------- models
     def cluster_model(self, root: int):
+        """θ_k for a cluster root (ω₀ until first aggregate)."""
         return self._st.cluster_model(root)
 
     # ------------------------------------------------------------- rounds
     def round(self, client_ids: Optional[Sequence[int]] = None) -> dict:
+        """One server round (sampled cohort unless ``client_ids``)."""
         self._st, rec = engine.run_round(self._st, client_ids)
         return rec
 
     def fit(self, rounds: int, log_every: int = 0):
+        """Run ``rounds`` rounds with optional progress printing."""
         for t in range(rounds):
             rec = self.round()
             if log_every and t % log_every == 0:
@@ -140,20 +155,25 @@ class StoCFL:
 
     # ------------------------------------------------------------- eval
     def client_root(self, cid: int) -> int:
+        """Union-find root (= cluster id) of an observed client."""
         return self._st.client_root(cid)
 
     def evaluate(self, test_sets, true_cluster):
+        """Paper §4.2 held-out evaluation via the learned partition."""
         return engine.evaluate(self._st, test_sets, true_cluster)
 
     # ------------------------------------------------------------- §4.4 / §5
     def join_client(self, batch) -> int:
+        """§5 dynamic join (Ψ-inference placement); returns the new id."""
         self._st, cid = engine.join(self._st, batch)
         return cid
 
     def leave_client(self, cid: int) -> None:
+        """§5 departure: stop sampling ``cid``, repair the partition."""
         self._st = engine.leave(self._st, cid)
 
     def sample_clients(self) -> np.ndarray:
+        """Draw one round's cohort (advances the stored rng)."""
         rng_state, ids = engine.sample_clients(self._st)
         self._st = self._st.replace(rng_state=rng_state)
         return ids

@@ -40,6 +40,9 @@ def init(strategy: str, loss_fn, init_params, clients,
       clients: list of client datasets (pytrees with a shared leading
         example axis).
       cfg: ``EngineConfig`` hyperparameters (strategy-specific subset).
+        ``cfg.cluster_backend="device"`` keeps StoCFL's partition as a
+        jitted device union-find (``core.device_clustering``) — the
+        clustering step then runs with no per-round host round-trip.
       eval_fn: optional ``(params, batch) -> accuracy`` used by
         ``evaluate`` and the simulator's §5 recovery tracking.
       leaf_filter: optional Ψ restriction to a parameter subset (LLM

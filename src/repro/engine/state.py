@@ -36,6 +36,11 @@ class EngineConfig:
     participation. ``cohort_chunk`` bounds how many clients execute in
     one vmapped step — larger cohorts run in lax.map chunks with flat
     memory (see ``bilevel.chunk_map``); 0 = unchunked.
+    ``cluster_backend`` picks where StoCFL's partition lives: ``"device"``
+    runs the jitted union-find + fused merge kernels of
+    ``core.device_clustering`` (no per-round Ψ host sync, no Python pair
+    scan); ``"numpy"`` is the host ``ClusterState`` fallback the parity
+    battery checks the device path against.
     """
     tau: float = 0.5
     lam: float = 0.05
@@ -51,6 +56,7 @@ class EngineConfig:
     eps_rel: float = 0.35             # CFL split thresholds
     eps2: float = 0.01
     cohort_chunk: int = 0             # max clients per vmapped step (0=off)
+    cluster_backend: str = "numpy"    # StoCFL partition: numpy | device
 
 
 @dataclasses.dataclass

@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.core import bilevel
 from repro.core.aggregators import AGGREGATORS
-from repro.core.clustering import ClusterState
+from repro.core.device_clustering import make_cluster_state
 from repro.engine.bank import ClusterBank, _pow2 as bank_pow2
 from repro.engine.registry import register
 from repro.engine.state import EngineContext, ServerState, fresh_rng_state
@@ -179,7 +179,13 @@ class StoCFLStrategy(Strategy):
     needs_extractor = True
 
     def init_state(self, ctx):
-        return super().init_state(ctx).replace(clusters=ClusterState(ctx.cfg.tau))
+        """Adds the Ψ-clustering bookkeeping: the host ``ClusterState``
+        or, with ``cfg.cluster_backend="device"``, the jitted
+        ``DeviceClusters`` union-find (same partition semantics, no
+        per-round host round-trip — see ``core.device_clustering``)."""
+        clusters = make_cluster_state(ctx.cfg.tau, ctx.cfg.cluster_backend,
+                                      capacity=len(ctx.clients))
+        return super().init_state(ctx).replace(clusters=clusters)
 
     def _cohort(self, ctx):
         cfg = ctx.cfg
@@ -196,7 +202,10 @@ class StoCFLStrategy(Strategy):
         # --- stochastic client clustering (Algorithm 1 lines 5-13)
         new_ids = [int(c) for c in client_ids if c not in clusters.seen]
         if new_ids:
-            reps = [np.asarray(ctx.extractor(ctx.clients[c])) for c in new_ids]
+            # extractor outputs stay device arrays: the numpy backend
+            # converts internally (the old host sync); the device backend
+            # scatters them straight into its Ψ bank with no round-trip
+            reps = [ctx.extractor(ctx.clients[c]) for c in new_ids]
             clusters.observe(new_ids, reps)
         counts = {r: len(m) for r, m in clusters.clusters().items()}
         merges = clusters.merge_round()
@@ -258,7 +267,7 @@ class StoCFLStrategy(Strategy):
         state, cid = super().join(ctx, state, batch)
         clusters = state.clusters.copy()
         models = state.models
-        rep = np.asarray(ctx.extractor(batch))
+        rep = ctx.extractor(batch)      # device array; backends convert
         root, near, _sim = clusters.nearest(rep)
         clusters.observe([cid], [rep])
         if root is not None:
@@ -281,7 +290,7 @@ class StoCFLStrategy(Strategy):
 
     def infer(self, ctx, state, batch):
         """Cluster inference for an unseen client (§4.4), without joining."""
-        rep = np.asarray(ctx.extractor(batch))
+        rep = ctx.extractor(batch)
         root, near, sim = state.clusters.nearest(rep)
         src = root if root is not None else near
         model = state.cluster_model(src) if src is not None else state.omega

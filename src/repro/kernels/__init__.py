@@ -1,3 +1,22 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""repro.kernels — Pallas TPU kernels with pure-jnp oracles.
+
+OPTIONAL layer: custom kernels exist only for the paper's compute
+hot-spots. Call sites go through the backend-selecting wrappers in
+``repro.kernels.ops`` (Pallas/Mosaic on TPU, interpret mode or the jnp
+oracle elsewhere); ``repro.kernels.ref`` holds the allclose ground
+truths the kernel tests compare against.
+
+Kernels: ``pairwise_cosine`` (Ψ similarity matrix, Algorithm 1 l.10),
+``merge_pairs`` (fused masked cosine + τ threshold emitting merge
+candidates — the device-clustering hot path), ``resolve_roots``
+(union-find root resolution by iterated pointer halving),
+``prox_update_tree`` (fused bi-level step, §3.3), ``ssm_scan``
+(selective-scan for the SSM model family).
+"""
+from repro.kernels.ops import (merge_pairs, pairwise_cosine,  # noqa: F401
+                               prox_update_tree, resolve_roots, ssm_scan)
+
+__all__ = [
+    "pairwise_cosine", "merge_pairs", "resolve_roots",
+    "prox_update_tree", "ssm_scan",
+]

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: pairwise cosine-similarity matrix.
+"""Pallas TPU kernels: pairwise cosine-similarity and merge-candidate
+matrices.
 
 StoCFL's clustering hot-spot: the server recomputes the K̃×K̃ (up to N×N,
 N=4800 cross-device) cosine matrix over distribution representations every
@@ -9,6 +10,13 @@ Tiling: grid (N/bn, N/bn, D/bk); operand tiles (bn, bk) live in VMEM, fp32
 accumulation in the output tile across the contraction grid axis (TPU grid
 iterates the trailing axis innermost, so out_ref accumulates correctly).
 MXU-aligned defaults bn=128, bk=512.
+
+``merge_candidates`` is the fused device-clustering variant: the same
+X·Xᵀ tiling, but the final contraction step also applies the live-row
+mask and the τ threshold in-register, emitting the 0/1 adjacency of
+mergeable cluster pairs directly — the K̃² cosine matrix never leaves
+VMEM, so the union-find merge pass (``core.device_clustering``) consumes
+candidate pairs without materializing similarities in HBM.
 """
 from __future__ import annotations
 
@@ -65,4 +73,70 @@ def cosine_sim(x, *, bn: int = 128, bk: int = 512, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
         interpret=interpret,
     )(xp, xp, inv, inv)
+    return out[:n, :n]
+
+
+def _candidates_kernel(tau, bn, x_ref, y_ref, inv_i_ref, inv_j_ref,
+                       live_i_ref, live_j_ref, out_ref):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32).T,
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _threshold():
+        cos = out_ref[...] * inv_i_ref[...][:, None] * inv_j_ref[...][None, :]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 0) + i * bn
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1) + j * bn
+        ok = ((cos >= tau)
+              & (live_i_ref[...][:, None] > 0)
+              & (live_j_ref[...][None, :] > 0)
+              & (rows != cols))
+        out_ref[...] = ok.astype(jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tau", "bn", "bk", "interpret"))
+def merge_candidates(x, live, *, tau: float, bn: int = 128, bk: int = 512,
+                     interpret: bool = False):
+    """(K, D) cluster means + (K,) live mask -> (K, K) fp32 0/1 adjacency.
+
+    ``adj[i, j] = 1`` iff rows i ≠ j are both live and cos(x_i, x_j) ≥ τ
+    — the candidate merge pairs of Algorithm 1 line 10, fused so the
+    cosine tile is thresholded in VMEM instead of round-tripping a K̃²
+    similarity matrix through HBM. Zero rows are norm-guarded to cosine
+    0 (and are masked out by ``live`` anyway); the diagonal is always 0,
+    so a τ ≤ cos(x, x) can never self-merge a cluster.
+    """
+    n, d = x.shape
+    n_pad = -(-n // bn) * bn
+    d_pad = -(-d // bk) * bk
+    xp = jnp.zeros((n_pad, d_pad), x.dtype).at[:n, :d].set(x)
+    lv = jnp.zeros((n_pad,), jnp.float32).at[:n].set(
+        live.astype(jnp.float32))
+    norms = jnp.sqrt(jnp.sum(xp.astype(jnp.float32) ** 2, axis=1))
+    inv = jnp.where(norms > 0, 1.0 / norms, 0.0)
+
+    out = pl.pallas_call(
+        functools.partial(_candidates_kernel, float(tau), bn),
+        grid=(n_pad // bn, n_pad // bn, d_pad // bk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(xp, xp, inv, inv, lv, lv)
     return out[:n, :n]

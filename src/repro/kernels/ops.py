@@ -7,11 +7,15 @@ interpret-mode would be slow.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 from repro.kernels import ref
 from repro.kernels.cosine_sim import cosine_sim as _cosine_pallas
+from repro.kernels.cosine_sim import merge_candidates as _candidates_pallas
 from repro.kernels.prox_update import prox_update_flat as _prox_pallas
 from repro.kernels.ssm_scan import ssm_scan as _ssm_pallas
 from repro.utils import trees
@@ -26,6 +30,48 @@ def pairwise_cosine(x, backend: str = "auto"):
     if backend == "jnp" or (backend == "auto" and not _on_tpu()):
         return ref.cosine_sim_ref(x)
     return _cosine_pallas(x, interpret=not _on_tpu())
+
+
+def merge_pairs(means, live, tau: float, backend: str = "auto"):
+    """(K, D) cluster means + (K,) live mask -> (K, K) fp32 0/1 adjacency
+    of mergeable pairs (cos ≥ τ, both live, diagonal off) — Algorithm 1
+    line 10 as one fused device op (``cosine_sim.merge_candidates``)."""
+    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+        return ref.merge_candidates_ref(means, live, tau)
+    return _candidates_pallas(means, live, tau=float(tau),
+                              interpret=not _on_tpu())
+
+
+# --------------------------------------------------------------- union-find
+def _halving_kernel(steps, parent_ref, out_ref):
+    out_ref[...] = jax.lax.fori_loop(
+        0, steps, lambda _, p: jnp.take(p, p), parent_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _resolve_pallas(parent, interpret: bool = False):
+    n = parent.shape[0]
+    steps = max(int(n).bit_length(), 1)
+    return pl.pallas_call(
+        functools.partial(_halving_kernel, steps),
+        out_shape=jax.ShapeDtypeStruct((n,), parent.dtype),
+        interpret=interpret,
+    )(parent)
+
+
+def resolve_roots(parent, backend: str = "auto"):
+    """(N,) union-find parent array (``parent[i] == i`` at roots) ->
+    (N,) fully-resolved roots.
+
+    Iterated pointer halving ``p <- p[p]``: every find-path halves per
+    step, so ⌈log2 N⌉+1 in-VMEM gathers resolve ANY forest — the device
+    replacement for the numpy ``UnionFind.find`` Python loop. The whole
+    array resolves as one vectorized op per step, and the step count
+    depends only on the (static, pow2-padded) capacity, so the op jits
+    into the clustering round with no data-dependent control flow."""
+    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+        return ref.resolve_roots_ref(parent)
+    return _resolve_pallas(parent, interpret=not _on_tpu())
 
 
 def prox_update_tree(theta, omega, g_theta, g_omega, eta, lam, backend: str = "auto"):

@@ -13,6 +13,23 @@ def cosine_sim_ref(x):
     return xn @ xn.T
 
 
+def merge_candidates_ref(x, live, tau):
+    """(K, D) means + (K,) live -> (K, K) fp32 0/1 merge-pair adjacency
+    (cos ≥ τ, both rows live, diagonal off)."""
+    M = cosine_sim_ref(x)
+    lv = live.astype(bool)
+    ids = jnp.arange(x.shape[0])
+    ok = (M >= tau) & lv[:, None] & lv[None, :] & (ids[:, None] != ids[None, :])
+    return ok.astype(jnp.float32)
+
+
+def resolve_roots_ref(parent):
+    """(N,) union-find parent pointers -> (N,) roots by iterated pointer
+    halving ``p <- p[p]`` (⌈log2 N⌉+1 steps: each halves every path)."""
+    steps = max(int(parent.shape[0]).bit_length(), 1)
+    return jax.lax.fori_loop(0, steps, lambda _, p: jnp.take(p, p), parent)
+
+
 def prox_update_ref(theta, omega, g_theta, g_omega, eta, lam):
     th = theta.astype(jnp.float32)
     om = omega.astype(jnp.float32)

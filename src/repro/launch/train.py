@@ -48,7 +48,8 @@ def _engine_cfg(args) -> engine.EngineConfig:
     return engine.EngineConfig(
         tau=args.tau, lam=args.lam, lr=args.lr, local_steps=args.local_steps,
         sample_rate=1.0 if args.algo == "cfl" else args.sample_rate,
-        seed=args.seed, mu=args.lam, cohort_chunk=args.cohort_chunk)
+        seed=args.seed, mu=args.lam, cohort_chunk=args.cohort_chunk,
+        cluster_backend=args.cluster_backend)
 
 
 def _churn_timeline(args, n_clusters: int):
@@ -142,7 +143,8 @@ def run_llm(args) -> dict:
     ecfg = engine.EngineConfig(tau=args.tau, lam=args.lam, lr=args.lr,
                                local_steps=args.local_steps,
                                sample_rate=args.sample_rate, seed=args.seed,
-                               project_dim=8192, cohort_chunk=args.cohort_chunk)
+                               project_dim=8192, cohort_chunk=args.cohort_chunk,
+                               cluster_backend=args.cluster_backend)
     mesh = make_cohort_mesh() if args.mesh else None
     st = engine.init("stocfl", model.loss_fn, params, clients, ecfg,
                      leaf_filter=llm_leaf_filter, mesh=mesh, arena=args.arena)
@@ -176,6 +178,11 @@ def main():
     ap.add_argument("--arena", action="store_true",
                     help="pack client shards into a device-resident arena "
                          "(cohort = one gather instead of a per-round restack)")
+    ap.add_argument("--cluster-backend", default="numpy",
+                    choices=["numpy", "device"],
+                    help="StoCFL partition backend: host ClusterState "
+                         "(fallback) or the jitted device union-find "
+                         "(core.device_clustering)")
     ap.add_argument("--cohort-chunk", type=int, default=0,
                     help="max clients per vmapped step; larger cohorts run "
                          "in lax.map chunks with flat memory (0 = unchunked)")

@@ -7,7 +7,10 @@ through ``engine.leave`` (partition + arena stay consistent), drift
 rewrites client shards in place, and availability windows / stragglers
 constrain each round's cohort *before* it trains. Every transition is
 the engine's own pure API — the simulator adds no second code path, it
-only drives the one that exists.
+only drives the one that exists. Both clustering backends churn the
+same way: with ``cluster_backend="device"`` a join grows the union-find
+capacity pow2-amortized and a leave tombstones the departed row's
+``live`` bit exactly like an arena row (``core.device_clustering``).
 
 The loop records a per-round log (population, cohort, wall time, event
 markers, cluster count) plus the §5 joined-client accuracy trajectory:

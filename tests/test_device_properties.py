@@ -1,0 +1,74 @@
+"""Hypothesis properties for the device clustering core (CI runs these
+with the ``[test]`` extra; ``tests/test_device_clustering.py`` carries
+deterministic seeded slices of the same invariants for extra-less
+environments).
+
+  * device union-find root resolution ≡ numpy ``UnionFind`` under ANY
+    union sequence (the satellite's random-union property);
+  * observe → merge_round partition ≡ the numpy scan for any group
+    layout, in any observation order.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the test extra
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.clustering import ClusterState, UnionFind
+from repro.core import device_clustering as dc
+from repro.core.device_clustering import DeviceClusters
+
+
+def _unit_reps(labels, seed=0, d=12, noise=0.02):
+    rng = np.random.default_rng(seed)
+    anchors = rng.normal(size=(max(labels) + 1, d))
+    anchors /= np.linalg.norm(anchors, axis=1, keepdims=True)
+    out = []
+    for g in labels:
+        v = anchors[g] + rng.normal(size=d) * noise
+        out.append((v / np.linalg.norm(v)).astype(np.float32))
+    return out
+
+
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(st.lists(st.tuples(st.integers(0, 15), st.integers(0, 15)),
+                max_size=40))
+def test_device_unionfind_matches_numpy(edges):
+    """After ANY union sequence, pointer-halving resolution of the
+    device parent array equals ``UnionFind.find`` for every id."""
+    uf = UnionFind()
+    for i in range(16):
+        uf.add(i)
+    state = dc.init_state(16, 2)
+    state = dc.observe(state, jnp.arange(16, dtype=jnp.int32),
+                       jnp.zeros((16, 2), jnp.float32))
+    for a, b in edges:
+        uf.union(a, b)
+        state = dc._jit_union()(state, jnp.int32(a), jnp.int32(b))
+    from repro.kernels import ops
+    roots = np.asarray(ops.resolve_roots(state.parent))
+    for i in range(16):
+        assert int(roots[i]) == uf.find(i)
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(st.lists(st.integers(0, 3), min_size=2, max_size=24),
+       st.integers(0, 50), st.integers(0, 10_000))
+def test_merge_partition_matches_numpy_any_order(labels, seed,
+                                                 shuffle_seed):
+    """Observing the same clients in any order: the device partition
+    equals the numpy partition (both are the τ-graph's transitive
+    closure, so only the rep SET matters)."""
+    reps = _unit_reps(labels, seed)
+    perm = list(range(len(labels)))
+    np.random.default_rng(shuffle_seed).shuffle(perm)
+    a = ClusterState(tau=0.8)
+    b = DeviceClusters(tau=0.8, capacity=len(labels))
+    a.observe(range(len(labels)), reps)
+    b.observe(perm, [reps[i] for i in perm])
+    a.merge_round()
+    b.merge_round()
+    assert frozenset(frozenset(m) for m in a.clusters().values()) == \
+        frozenset(frozenset(m) for m in b.clusters().values())

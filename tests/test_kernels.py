@@ -186,3 +186,61 @@ def test_prox_update_tree_matches_flat():
                                      gt[kk].ravel(), go[kk].ravel(), 0.1, 0.5)
         np.testing.assert_allclose(np.asarray(th2[kk]).ravel(), np.asarray(wt), atol=1e-6)
         np.testing.assert_allclose(np.asarray(om2[kk]).ravel(), np.asarray(wo), atol=1e-6)
+
+
+# ------------------------------------------------- merge_candidates (fused)
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(3, 70), d=st.integers(2, 160),
+       tau=st.floats(-1.0, 1.0), seed=st.integers(0, 100))
+def test_merge_candidates_sweep(n, d, tau, seed):
+    """Fused masked-cosine+τ kernel ≡ jnp oracle over shapes, τ, and
+    random live masks (interpret mode; Mosaic on real TPU)."""
+    from repro.kernels.cosine_sim import merge_candidates
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d))
+    live = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.7, (n,))
+    got = merge_candidates(x, live, tau=float(tau), bn=16, bk=64,
+                           interpret=True)
+    want = ref.merge_candidates_ref(x, live, float(tau))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_merge_candidates_diagonal_and_dead_rows():
+    """τ=-1 admits every pair EXCEPT the diagonal and dead rows."""
+    from repro.kernels.cosine_sim import merge_candidates
+    x = jax.random.normal(KEY, (9, 12))
+    live = jnp.array([1, 1, 0, 1, 1, 1, 0, 1, 1], bool)
+    adj = np.asarray(merge_candidates(x, live, tau=-1.0, bn=8, bk=16,
+                                      interpret=True))
+    assert (np.diag(adj) == 0).all()
+    assert (adj[2] == 0).all() and (adj[:, 6] == 0).all()
+    lv = np.asarray(live)
+    expect = np.outer(lv, lv) * (1 - np.eye(9))
+    np.testing.assert_array_equal(adj, expect)
+
+
+# --------------------------------------------- resolve_roots (pointer halving)
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 200), seed=st.integers(0, 1000))
+def test_resolve_roots_pallas_sweep(n, seed):
+    """Pointer-halving kernel resolves ANY random forest to the same
+    roots as the jnp oracle (interpret mode)."""
+    rng = np.random.default_rng(seed)
+    parent = np.arange(n, dtype=np.int32)
+    for i in rng.permutation(n)[: n // 2]:      # random valid forest:
+        parent[i] = rng.integers(0, i + 1)      # parent id <= own id
+    got = np.asarray(ops._resolve_pallas(jnp.asarray(parent),
+                                         interpret=True))
+    want = np.asarray(ref.resolve_roots_ref(jnp.asarray(parent)))
+    np.testing.assert_array_equal(got, want)
+    # and the oracle itself is a fixed point: every root self-parents
+    np.testing.assert_array_equal(want, np.asarray(want)[want])
+
+
+def test_resolve_roots_worst_case_chain():
+    """A maximal-depth chain still resolves in the kernel's static
+    ⌈log2 N⌉+1 steps."""
+    n = 129
+    parent = jnp.asarray(np.maximum(np.arange(n, dtype=np.int32) - 1, 0))
+    got = np.asarray(ops._resolve_pallas(parent, interpret=True))
+    np.testing.assert_array_equal(got, np.zeros(n, np.int32))
