@@ -1,0 +1,150 @@
+"""Round-loop bench: one fused ``lax.scan`` vs the eager per-round loop.
+Writes ``BENCH_rounds.json``.
+
+Sweeps clients ∈ {40, 400, 4000} of the StoCFL round (the paper's
+synthetic MLP task, device arena + device partition + device sampling in
+BOTH modes — the operands are identical, so the ratio isolates exactly
+what ``engine.run_rounds`` removes: the per-round host dispatch,
+trace-cache lookup and numpy cohort draw):
+
+  eager   rounds × ``engine.run_round`` (device rng backend), timed per
+          round after warm-up — the pre-scan steady state.
+  scan    ``engine.run_rounds(state, R)`` — the whole span is one XLA
+          program. The first call compiles; the compiled program is
+          cached on the engine context (keyed by carry/operand shapes),
+          so the steady-state number is a SECOND call through the same
+          cache, and ``first_compile_s`` is reported separately (the
+          honest one-time cost of fusing R rounds).
+
+Both modes run the same key chain, so they execute the same cohorts on
+the same data — the parity battery (tests/test_round_scan.py) asserts
+the trajectories are bitwise equal; this bench only asks which one is
+faster.
+
+  PYTHONPATH=src python -m benchmarks.round_scan              # full sweep
+  PYTHONPATH=src python -m benchmarks.round_scan --smoke      # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine
+from repro.data import rotated
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+
+
+def _federation(n_clients: int, n_per: int, seed: int = 0):
+    clients, _, _ = rotated(n_clusters=4, n_clients=n_clients, n_per=n_per,
+                            seed=seed)
+    return [jax.tree.map(jnp.asarray, c) for c in clients]
+
+
+def _cfg(sample_rate: float, chunk: int) -> engine.EngineConfig:
+    return engine.EngineConfig(
+        tau=0.5, lam=0.05, lr=0.1, local_steps=1, sample_rate=sample_rate,
+        seed=0, project_dim=1024, cohort_chunk=chunk,
+        cluster_backend="device", rng_backend="device")
+
+
+def _init(clients, cfg):
+    return engine.init("stocfl", LOSS, simple.init(jax.random.PRNGKey(0), TASK),
+                       clients, cfg, arena=True)
+
+
+def _onboard(state, n_clients: int):
+    """One full-participation round (observe every client, settle the
+    partition) + a few sampled rounds so both modes start from the same
+    settled federation."""
+    state, _ = engine.run_round(state, np.arange(n_clients))
+    for _ in range(3):
+        state, _ = engine.run_round(state)
+    return state
+
+
+def run_point(n_clients: int, rounds: int, sample_rate: float,
+              chunk: int, n_per: int) -> dict:
+    clients = _federation(n_clients, n_per)
+    cfg = _cfg(sample_rate, chunk)
+
+    # ---- eager reference
+    st = _onboard(_init(clients, cfg), n_clients)
+    for _ in range(2):                       # steady-shape warm-up
+        st, _ = engine.run_round(st)
+    t0 = time.time()
+    se = st
+    for _ in range(rounds):
+        se, _ = engine.run_round(se)
+    jax.block_until_ready(se.omega)
+    eager_s = time.time() - t0
+
+    # ---- fused scan: first call compiles, second call is steady state
+    st = _onboard(_init(clients, cfg), n_clients)
+    t0 = time.time()
+    s1 = engine.run_rounds(st, rounds)
+    jax.block_until_ready(s1.omega)
+    first_s = time.time() - t0
+    t0 = time.time()
+    s2 = engine.run_rounds(s1, rounds)
+    jax.block_until_ready(s2.omega)
+    scan_s = time.time() - t0
+
+    return {
+        "clients": n_clients, "rounds": rounds, "sample_rate": sample_rate,
+        "cohort": int(np.ceil(sample_rate * n_clients)),
+        "cohort_chunk": chunk, "n_per": n_per,
+        "eager_s": round(eager_s, 4),
+        "eager_rounds_per_s": round(rounds / eager_s, 2),
+        "scan_s": round(scan_s, 4),
+        "scan_rounds_per_s": round(rounds / scan_s, 2),
+        "first_compile_s": round(first_s - scan_s, 4),
+        "speedup": round(eager_s / scan_s, 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (small populations, few rounds)")
+    ap.add_argument("--out", default="BENCH_rounds.json")
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="rounds per timed span (0 = per-size default)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        points = [(24, 10, 0.5, 0, 16), (48, 10, 0.25, 0, 16)]
+    else:
+        points = [(40, 20, 0.25, 0, 64),
+                  (400, 20, 0.1, 0, 64),
+                  (4000, 10, 0.05, 64, 32)]
+    results = []
+    for n, rounds, rate, chunk, n_per in points:
+        rounds = args.rounds or rounds
+        r = run_point(n, rounds, rate, chunk, n_per)
+        print(json.dumps(r))
+        results.append(r)
+
+    doc = {"bench": "round_scan",
+           "task": "stocfl round loop, scan (run_rounds) vs eager "
+                   "(run_round), device arena+partition+rng in both",
+           "platform": {"machine": platform.machine(),
+                        "python": platform.python_version(),
+                        "jax": jax.__version__,
+                        "backend": jax.default_backend()},
+           "results": results}
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

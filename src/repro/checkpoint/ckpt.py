@@ -79,6 +79,12 @@ def save_server_state(dirpath: str, state) -> None:
         "strategy": state.strategy,
         "round": state.round,
         "rng_state": state.rng_state,
+        # device sampling key (rng_backend="device"): raw uint32 words,
+        # restored bit-exactly so a resumed run_rounds scan draws the
+        # same cohorts as the uninterrupted one
+        "rng_key": (None if state.rng_key is None else
+                    [int(x) for x in
+                     np.asarray(state.rng_key).ravel().tolist()]),
         "sizes": [int(s) for s in state.sizes],
         "left": sorted(int(c) for c in state.left),
         "members": ([list(map(int, m)) for m in state.members]
@@ -139,9 +145,14 @@ def load_server_state(dirpath: str, state):
             if os.path.exists(reps_path):
                 reps = np.load(reps_path)
                 clusters.reps = {int(k): reps[k] for k in reps.files}
+    import jax.numpy as jnp
+
+    rng_key = state.rng_key
+    if man.get("rng_key") is not None:
+        rng_key = jnp.asarray(np.asarray(man["rng_key"], np.uint32))
     return state.replace(
         strategy=man["strategy"], round=man["round"],
-        rng_state=man["rng_state"],
+        rng_state=man["rng_state"], rng_key=rng_key,
         sizes=tuple(man["sizes"]), left=frozenset(man["left"]),
         omega=arrays["omega"],
         models=ClusterBank.from_dict(

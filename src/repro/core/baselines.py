@@ -74,8 +74,8 @@ class _EngineShim:
 
     # ------------------------------------------------------------- driving
     def sample(self) -> np.ndarray:
-        rng_state, ids = engine.sample_clients(self._st)
-        self._st = self._st.replace(rng_state=rng_state)
+        adv, ids = engine.sample_clients(self._st)
+        self._st = engine.advance_rng(self._st, adv)
         return ids
 
     def round(self, ids: Optional[Sequence[int]] = None):

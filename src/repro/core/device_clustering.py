@@ -170,10 +170,10 @@ def _jit_observe():
     return jax.jit(run)
 
 
-@functools.lru_cache(maxsize=None)
-def _jit_merge_round(tau: float, k_max: int):
-    """(state,) -> (state', roots (k_max,), new_roots (k_max,),
-    counts (k_max,)).
+def merge_round_impl(state: DeviceClusterState, tau: float, k_max: int):
+    """Traceable body of one fused merge pass:
+    ``(state, tau, static k_max) -> (state', roots (k_max,), new_roots
+    (k_max,), counts (k_max,))``.
 
     One device program for Algorithm 1 lines 10-13: means → live-root
     compaction → fused masked-cosine-τ candidates → components →
@@ -186,40 +186,49 @@ def _jit_merge_round(tau: float, k_max: int):
     arrays (pre-merge live roots ascending, their post-merge roots,
     their member counts; pads = capacity / 0) are ALL the host needs to
     re-key the host-indexed ``ClusterBank`` and refresh its mirror —
-    O(K̃) ints, never a capacity-length array, never the Ψ matrix."""
+    O(K̃) ints, never a capacity-length array, never the Ψ matrix.
 
-    def run(state):
-        cap = state.parent.shape[0]
-        ids = jnp.arange(cap, dtype=jnp.int32)
-        root, means, counts = _cluster_means(state)
-        # live-root rows, ascending (so compact row order = root-id
-        # order and a min row index IS the min root id); pads → cap
-        (rows,) = jnp.nonzero(counts > 0, size=k_max, fill_value=cap)
-        rows = rows.astype(jnp.int32)
-        means_ext = jnp.concatenate(
-            [means, jnp.zeros((1, means.shape[1]), means.dtype)])
-        counts_c = jnp.take(jnp.concatenate([counts, jnp.zeros(1)]), rows)
-        adj = ops.merge_pairs(jnp.take(means_ext, rows, axis=0),
-                              counts_c > 0, tau)
-        # steady-state rounds have no candidate pair at all — skip the
-        # O(log K̃) propagation entirely instead of running it on an
-        # empty graph (the common case once the partition settles)
-        label = jax.lax.cond(jnp.any(adj > 0), component_labels,
-                             lambda a: jnp.arange(a.shape[0],
-                                                  dtype=jnp.int32), adj)
-        # back to root-id space: compact row i's cluster re-roots at the
-        # root id of its component's min row; scatter builds the
-        # {old root: new root} map over all capacity rows
-        new_root_c = jnp.where(rows < cap, jnp.take(rows, label),
-                               jnp.int32(cap))
-        mapped = ids.at[rows].set(new_root_c, mode="drop")
-        new_root = jnp.take(mapped, root, mode="clip")
-        parent = jnp.where(state.live, new_root, ids)
-        return (DeviceClusterState(parent=parent, live=state.live,
-                                   rep=state.rep),
-                rows, new_root_c, counts_c)
+    The resulting partition is identical for ANY sufficient ``k_max``
+    (pads are masked out of the candidate kernel and isolated in the
+    component graph) — which is why the ``run_rounds`` scan can inline
+    this with the static ``k_max = capacity`` while the eager wrapper
+    compacts to the live-cluster count, and still land bitwise-equal
+    parents."""
+    cap = state.parent.shape[0]
+    ids = jnp.arange(cap, dtype=jnp.int32)
+    root, means, counts = _cluster_means(state)
+    # live-root rows, ascending (so compact row order = root-id
+    # order and a min row index IS the min root id); pads → cap
+    (rows,) = jnp.nonzero(counts > 0, size=k_max, fill_value=cap)
+    rows = rows.astype(jnp.int32)
+    means_ext = jnp.concatenate(
+        [means, jnp.zeros((1, means.shape[1]), means.dtype)])
+    counts_c = jnp.take(jnp.concatenate([counts, jnp.zeros(1)]), rows)
+    adj = ops.merge_pairs(jnp.take(means_ext, rows, axis=0),
+                          counts_c > 0, tau)
+    # steady-state rounds have no candidate pair at all — skip the
+    # O(log K̃) propagation entirely instead of running it on an
+    # empty graph (the common case once the partition settles)
+    label = jax.lax.cond(jnp.any(adj > 0), component_labels,
+                         lambda a: jnp.arange(a.shape[0],
+                                              dtype=jnp.int32), adj)
+    # back to root-id space: compact row i's cluster re-roots at the
+    # root id of its component's min row; scatter builds the
+    # {old root: new root} map over all capacity rows
+    new_root_c = jnp.where(rows < cap, jnp.take(rows, label),
+                           jnp.int32(cap))
+    mapped = ids.at[rows].set(new_root_c, mode="drop")
+    new_root = jnp.take(mapped, root, mode="clip")
+    parent = jnp.where(state.live, new_root, ids)
+    return (DeviceClusterState(parent=parent, live=state.live,
+                               rep=state.rep),
+            rows, new_root_c, counts_c)
 
-    return jax.jit(run)
+
+@functools.lru_cache(maxsize=None)
+def _jit_merge_round(tau: float, k_max: int):
+    """Jitted ``merge_round_impl`` (one compile per (τ, k_max))."""
+    return jax.jit(functools.partial(merge_round_impl, tau=tau, k_max=k_max))
 
 
 @functools.lru_cache(maxsize=None)
@@ -276,31 +285,62 @@ def _jit_nearest():
     return jax.jit(run)
 
 
-@functools.lru_cache(maxsize=None)
-def _jit_objective(k_max: int):
-    """(state,) -> Eq. 2 objective Σ_{i<j} cos(Ψ̃_i, Ψ̃_j) over live
+def objective_impl(state: DeviceClusterState, k_max: int):
+    """Traceable Eq. 2 objective Σ_{i<j} cos(Ψ̃_i, Ψ̃_j) over live
     clusters (0 with fewer than two). ``k_max`` (static live-cluster
     bound) compacts the pairwise work to O(k_max²), same as the merge
     pass — a settled big-capacity federation pays a K̃′² matrix, not a
-    capacity² one."""
+    capacity² one. The ``run_rounds`` scan inlines this with
+    ``k_max = capacity``."""
+    cap = state.parent.shape[0]
+    _, means, counts = _cluster_means(state)
+    (rows,) = jnp.nonzero(counts > 0, size=k_max, fill_value=cap)
+    means_ext = jnp.concatenate(
+        [means, jnp.zeros((1, means.shape[1]), means.dtype)])
+    mc = jnp.take(means_ext, rows, axis=0).astype(jnp.float32)
+    live_c = jnp.take(jnp.concatenate([counts, jnp.zeros(1)]), rows) > 0
+    norms = jnp.linalg.norm(mc, axis=1, keepdims=True)
+    mn = jnp.where(norms > 0, mc / norms, 0.0)
+    M = mn @ mn.T
+    k_ids = jnp.arange(k_max)
+    pairs = (live_c[:, None] & live_c[None, :]
+             & (k_ids[:, None] < k_ids[None, :]))
+    return jnp.sum(jnp.where(pairs, M, 0.0))
 
-    def run(state):
-        cap = state.parent.shape[0]
-        _, means, counts = _cluster_means(state)
-        (rows,) = jnp.nonzero(counts > 0, size=k_max, fill_value=cap)
-        means_ext = jnp.concatenate(
-            [means, jnp.zeros((1, means.shape[1]), means.dtype)])
-        mc = jnp.take(means_ext, rows, axis=0).astype(jnp.float32)
-        live_c = jnp.take(jnp.concatenate([counts, jnp.zeros(1)]), rows) > 0
-        norms = jnp.linalg.norm(mc, axis=1, keepdims=True)
-        mn = jnp.where(norms > 0, mc / norms, 0.0)
-        M = mn @ mn.T
-        k_ids = jnp.arange(k_max)
-        pairs = (live_c[:, None] & live_c[None, :]
-                 & (k_ids[:, None] < k_ids[None, :]))
-        return jnp.sum(jnp.where(pairs, M, 0.0))
 
-    return jax.jit(run)
+@functools.lru_cache(maxsize=None)
+def _jit_objective(k_max: int):
+    """Jitted ``objective_impl`` (one compile per k_max)."""
+    return jax.jit(functools.partial(objective_impl, k_max=k_max))
+
+
+def objective_closed_impl(state: DeviceClusterState):
+    """Eq. 2 as the closed form ``(‖Σ m̂‖² − Σ ‖m̂‖²)/2`` over the live
+    clusters' normalized means — O(capacity·D), no pairwise matrix and
+    no live-cluster compaction, so the reduction SHAPE depends only on
+    the (pow2) capacity. That shape-stability is why the engine's
+    per-round objective metric uses this form on the device backend:
+    the eager loop and the ``run_rounds`` scan then record bitwise-equal
+    trajectories, while the cost stays linear in capacity instead of
+    the pairwise k_max². (Same quantity as ``objective_impl`` up to
+    float association; exact 0.0 with fewer than two clusters.)"""
+    _, means, counts = _cluster_means(state)
+    norms = jnp.linalg.norm(means, axis=1, keepdims=True)
+    mn = jnp.where((counts[:, None] > 0) & (norms > 0), means / norms, 0.0)
+    s = jnp.sum(mn, axis=0)
+    return (jnp.sum(s * s) - jnp.sum(mn * mn)) / 2.0
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_objective_closed():
+    """Jitted ``objective_closed_impl`` (one compile per capacity)."""
+    return jax.jit(objective_closed_impl)
+
+
+def objective_closed(state: DeviceClusterState) -> float:
+    """Host wrapper for ``objective_closed_impl`` (the engine's eager
+    device-backend metric call)."""
+    return float(_jit_objective_closed()(state))
 
 
 # public jitted-transition aliases (the DeviceClusterState-level API)
@@ -568,7 +608,11 @@ class DeviceClusters:
 
     # ------------------------------------------------------------- metrics
     def objective(self) -> float:
-        """Eq. 2: Σ_{i<j} cos(Ψ̃^{(i)}, Ψ̃^{(j)}) over live clusters."""
+        """Eq. 2: Σ_{i<j} cos(Ψ̃^{(i)}, Ψ̃^{(j)}) over live clusters
+        (pairwise form, compacted to the pow2 live-cluster count; the
+        engine's per-round metric instead uses the shape-stable
+        ``objective_closed`` so eager and scanned loops agree
+        bitwise)."""
         k = self.n_clusters()
         if k < 2:
             return 0.0

@@ -174,8 +174,8 @@ class StoCFL:
 
     def sample_clients(self) -> np.ndarray:
         """Draw one round's cohort (advances the stored rng)."""
-        rng_state, ids = engine.sample_clients(self._st)
-        self._st = self._st.replace(rng_state=rng_state)
+        adv, ids = engine.sample_clients(self._st)
+        self._st = engine.advance_rng(self._st, adv)
         return ids
 
     def infer_new_client(self, batch):

@@ -1,23 +1,31 @@
 """repro.engine — functional federated-learning engine.
 
 An explicit, pytree-serializable ``ServerState``, pure transitions
-(``init`` / ``run_round`` / ``join`` / ``leave`` / ``evaluate`` /
-``infer``), and a registry-based ``Strategy`` protocol implemented by
-``stocfl`` and the paper's baselines (``fedavg``, ``fedprox``, ``ditto``,
-``ifca``, ``cfl``). See ``repro.engine.api`` for the full contract.
+(``init`` / ``run_round`` / ``run_rounds`` / ``join`` / ``leave`` /
+``evaluate`` / ``infer``), and a registry-based ``Strategy`` protocol
+implemented by ``stocfl`` and the paper's baselines (``fedavg``,
+``fedprox``, ``ditto``, ``ifca``, ``cfl``). ``run_rounds`` fuses a whole
+multi-round span into one jitted ``lax.scan`` with on-device cohort
+sampling (``repro.engine.sampler``), bit-faithful to the eager
+``run_round`` loop. See ``repro.engine.api`` for the full contract.
 """
-from repro.engine.api import (evaluate, infer, init, join, leave,  # noqa: F401
-                              run, run_round, sample_clients)
+from repro.engine.api import (advance_rng, evaluate, infer, init,  # noqa: F401
+                              join, leave, run, run_round, run_rounds,
+                              sample_clients, scan_blockers, scan_history)
 from repro.engine.registry import (STRATEGIES, get_strategy,  # noqa: F401
                                    list_strategies, register)
 from repro.engine.state import (EngineConfig, EngineContext,  # noqa: F401
                                 ServerState)
 from repro.engine.bank import ClusterBank  # noqa: F401
+from repro.engine.sampler import (cohort_pool, cohort_size,  # noqa: F401
+                                  draw_cohort)
 from repro.engine import strategies  # noqa: F401  (installs the registry)
 from repro.engine.strategies import Strategy  # noqa: F401
 
 __all__ = [
-    "init", "run", "run_round", "sample_clients",
+    "init", "run", "run_round", "run_rounds", "sample_clients",
+    "advance_rng", "scan_blockers", "scan_history",
+    "cohort_pool", "cohort_size", "draw_cohort",
     "evaluate", "join", "leave", "infer",
     "EngineConfig", "EngineContext", "ServerState",
     "Strategy", "ClusterBank",

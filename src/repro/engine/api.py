@@ -11,9 +11,14 @@
 Every transition returns a NEW state; the input is never mutated (the one
 deliberate exception: ``join``/``leave`` update the context's client
 list/arena — the context is the world, not the state). Client sampling
-draws from the numpy bit-generator state stored IN the state, so a
-checkpointed run resumes bit-exactly. ``repro.sim.simulate`` drives these
-same transitions over a churn timeline — there is no second code path.
+draws from the rng stored IN the state — the numpy bit-generator under
+``rng_backend="numpy"`` (compatibility mode), a device threefry key
+under ``rng_backend="device"`` — so a checkpointed run resumes
+bit-exactly either way. ``run_rounds`` collapses a whole multi-round
+span into ONE jitted ``lax.scan`` (on-device sampling included) and is
+bit-faithful to the eager ``run_round`` loop; ``repro.sim.simulate``
+drives these same transitions over a churn timeline — there is no
+second code path.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.extractor import make_extractor
+from repro.engine import sampler
 from repro.engine.registry import get_strategy
 from repro.engine.state import EngineConfig, EngineContext, ServerState
 
@@ -77,15 +83,28 @@ def sample_clients(state: ServerState, unavailable=frozenset()):
     proportion of client participation").
 
     The cohort size is ``cfg.sample_rate`` × the LIVE population
-    (registered minus departed), drawn from the generator state stored in
-    ``state`` — pure and checkpoint-exact. ``unavailable`` removes
-    additional clients from the pool for this draw only (the simulator's
-    availability windows, §5).
+    (registered minus departed), drawn from the rng stored in ``state``
+    — pure and checkpoint-exact. ``unavailable`` removes additional
+    clients from the pool for this draw only (the simulator's
+    availability windows, §5). Under ``rng_backend="device"`` the draw
+    is the on-device threefry sampler (``engine.sampler.draw_cohort``,
+    size ⌈rate·live⌉) — the SAME traceable draw the ``run_rounds`` scan
+    inlines, so eager and scanned loops sample identical cohorts.
 
     Returns:
-      (advanced rng bit-generator state, sampled client id array).
+      (advanced rng: bit-generator state dict or device key, sampled
+      client id array) — thread the first element back with
+      ``advance_rng``.
     """
     cfg = state.ctx.cfg
+    if cfg.rng_backend == "device":
+        pool = sampler.cohort_pool(state.n_clients, state.left, unavailable)
+        live = state.n_clients - len(state.left)
+        m = sampler.cohort_size(cfg.sample_rate, live, int(pool.sum()))
+        if m == 0:
+            return state.rng_key, np.zeros(0, np.int64)
+        key, ids = sampler.draw_cohort(state.rng_key, pool, m)
+        return key, np.asarray(ids).astype(np.int64)
     rng = state.rng()
     pool = np.array([i for i in range(state.n_clients)
                      if i not in state.left and i not in unavailable])
@@ -93,6 +112,15 @@ def sample_clients(state: ServerState, unavailable=frozenset()):
     m = max(int(round(cfg.sample_rate * live)), 1)
     ids = rng.choice(pool, size=min(m, len(pool)), replace=False)
     return rng.bit_generator.state, ids
+
+
+def advance_rng(state: ServerState, rng) -> ServerState:
+    """Store an advanced sampling rng back into the state — the dict
+    bit-generator state (numpy backend) or the split device key (device
+    backend), i.e. whatever ``sample_clients`` returned first."""
+    if state.ctx.cfg.rng_backend == "device":
+        return state.replace(rng_key=rng)
+    return state.replace(rng_state=rng)
 
 
 def run_round(state: ServerState, client_ids: Optional[Sequence[int]] = None):
@@ -106,19 +134,25 @@ def run_round(state: ServerState, client_ids: Optional[Sequence[int]] = None):
     strategy's per-round record (appended to ``state.history``).
     """
     strat = get_strategy(state.strategy)
-    rng_state = state.rng_state
+    rng_state, rng_key = state.rng_state, state.rng_key
     if client_ids is None:
         if strat.full_participation:
             client_ids = np.array([i for i in range(state.n_clients)
                                    if i not in state.left])
+        elif state.ctx.cfg.rng_backend == "device":
+            rng_key, client_ids = sample_clients(state)
         else:
             rng_state, client_ids = sample_clients(state)
     client_ids = np.asarray(client_ids)
     if client_ids.size == 0:
         raise ValueError("run_round needs a non-empty cohort "
-                         "(no clients sampled — all departed?)")
+                         "(no clients sampled — all departed or "
+                         "unavailable?); the scanned loop handles this "
+                         "as a skipped no-op round instead "
+                         "(see run_rounds)")
     state, rec = strat.round(state.ctx, state, client_ids)
     state = state.replace(round=state.round + 1, rng_state=rng_state,
+                          rng_key=rng_key,
                           history=state.history + (dict(rec),))
     return state, rec
 
@@ -134,6 +168,134 @@ def run(state: ServerState, rounds: int, log_every: int = 0) -> ServerState:
                              for k, v in rec.items())
             print(f"round {t}:{extras}")
     return state
+
+
+def scan_blockers(state: ServerState) -> Optional[str]:
+    """Why this state cannot run through ``run_rounds`` — a readable
+    reason string, or None when it can. The single predicate behind
+    both ``run_rounds``' host-side precondition errors and the
+    simulator's silent eager fallback (``simulate(scan_spans=True)``):
+    the scan needs a device arena (cohort gathers must be traceable),
+    device rng for sampled strategies, the device clustering backend
+    for StoCFL, and every live client resident in the arena."""
+    from repro.engine.strategies import Strategy
+
+    strat = get_strategy(state.strategy)
+    ctx = state.ctx
+    if type(strat).scan_round is Strategy.scan_round:
+        return (f"strategy {state.strategy!r} has no scannable round "
+                "step (Strategy.scan_round not implemented) — use the "
+                "eager run_round loop")
+    if ctx.arena is None:
+        return ("run_rounds needs engine.init(..., arena=True): "
+                "the scanned round body gathers cohorts on device")
+    if not strat.full_participation and state.rng_key is None:
+        return ("run_rounds needs EngineConfig(rng_backend='device'): "
+                "the scan samples cohorts from the threefry key in "
+                "ServerState.rng_key (the numpy bit-generator cannot "
+                "be traced)")
+    if state.strategy == "stocfl" and ctx.cfg.cluster_backend != "device":
+        return ("run_rounds('stocfl') needs "
+                "EngineConfig(cluster_backend='device'): the host "
+                "ClusterState cannot ride a lax.scan carry")
+    bad = [c for c in range(state.n_clients) if c not in state.left
+           and ctx.arena.rows[c] < 0]
+    if bad:
+        return (f"live clients {bad} were compacted out of the arena — "
+                "rebuild it before scanning")
+    return None
+
+
+def run_rounds(state: ServerState, rounds: int,
+               unavailable=frozenset()) -> ServerState:
+    """The whole multi-round loop as ONE jitted ``lax.scan`` — the
+    fused counterpart of ``rounds`` × ``run_round``.
+
+    Each scanned round samples its cohort on device
+    (``engine.sampler.draw``), gathers client shards from the arena,
+    runs the strategy's round math, and aggregates — with NO host
+    round-trip between rounds. The carry is fixed-shape (model pytrees,
+    stacked banks, ``DeviceClusterState``, the PRNG key), per-round
+    metrics stack as scan outputs and land in ``state.history`` exactly
+    as the eager loop would have recorded them. The result is
+    bit-faithful to ``run_round``: the scan-vs-eager parity battery
+    (``tests/test_round_scan.py``) pins bitwise-equal final states for
+    every registered strategy, through churn boundaries and checkpoint
+    resume.
+
+    Requirements (checked eagerly, see the raised messages):
+    ``arena=True``, ``rng_backend="device"`` for sampled strategies, and
+    ``cluster_backend="device"`` for StoCFL. Population changes cannot
+    happen inside a scan — call ``join``/``leave`` between ``run_rounds``
+    calls (the simulator scans exactly the event-free spans).
+
+    ``unavailable`` holds a constant set of clients out of every scanned
+    draw. If it empties the pool entirely, the rounds become no-op
+    rounds recorded as ``{"skipped": True}`` metrics (the eager path
+    raises instead — a scan cannot). Availability does not apply to
+    full-participation strategies (CFL trains its whole partition —
+    same rule as the eager loop and the simulator).
+
+    Returns the state after ``rounds`` rounds.
+    """
+    import jax
+
+    strat = get_strategy(state.strategy)
+    ctx = state.ctx
+    rounds = int(rounds)
+    if rounds <= 0:
+        return state
+    blocker = scan_blockers(state)
+    if blocker is not None:
+        raise ValueError(blocker)
+    live = state.n_clients - len(state.left)
+    if strat.full_participation:
+        pool = sampler.cohort_pool(state.n_clients, state.left, ())
+        m = int(pool.sum())
+    else:
+        pool = sampler.cohort_pool(state.n_clients, state.left, unavailable)
+        m = sampler.cohort_size(ctx.cfg.sample_rate, live, int(pool.sum()))
+    if m == 0:
+        # all departed/unavailable: the eager path raises per round; the
+        # scanned path records the span as skipped no-op rounds
+        recs = tuple({"skipped": True, "sampled": 0} for _ in range(rounds))
+        return state.replace(round=state.round + rounds,
+                             history=state.history + recs)
+    carry0, consts, step, finalize, statics = strat.scan_round(
+        ctx, state, pool, m)
+    structure = jax.tree.structure((carry0, consts))
+    shapes = tuple((tuple(l.shape), str(l.dtype))
+                   for l in jax.tree.leaves((carry0, consts)))
+    # statics are the values the step BAKES INTO ITS TRACE beyond the
+    # carry/const shapes (arena raggedness, merge bounds, …) — they must
+    # key the cache, or a flipped static would silently reuse a stale
+    # compiled scan
+    cache_key = (f"scan:{state.strategy}:{rounds}:{m}:"
+                 f"{hash((str(structure), shapes, statics))}")
+
+    def build():
+        def scan_fn(c0, cs):
+            return jax.lax.scan(lambda c, _: step(c, cs), c0, None,
+                                length=rounds)
+        return jax.jit(scan_fn)
+
+    carry, ys = ctx.jit(cache_key, build)(carry0, consts)
+    return finalize(state, carry, ys, rounds)
+
+
+def scan_history(ys, rounds: int):
+    """Convert stacked per-round scan metrics (``{key: (rounds,) array}``)
+    into the eager loop's history records (one ``{key: int|float}`` dict
+    per round, same key set and value types as ``run_round``'s)."""
+    host = {k: np.asarray(v) for k, v in ys.items()}
+    recs = []
+    for t in range(rounds):
+        rec = {}
+        for k, v in host.items():
+            x = v[t]
+            rec[k] = int(x) if np.issubdtype(x.dtype, np.integer) else float(x)
+        recs.append(rec)
+    return tuple(recs)
 
 
 def evaluate(state: ServerState, test_sets, true_cluster=None) -> dict:

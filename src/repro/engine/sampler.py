@@ -1,0 +1,87 @@
+"""On-device cohort sampling (threefry, without replacement).
+
+The host sampler (``engine.sample_clients`` under
+``rng_backend="numpy"``) draws each round's cohort from a numpy
+bit-generator — a per-round host round-trip that the fully-jitted
+multi-round loop (``engine.run_rounds``) cannot afford. This module is
+the device replacement: the sampling state is a jax threefry PRNG key
+stored in ``ServerState.rng_key``, and one draw is
+
+    key' , sub = split(key)
+    u            = uniform(sub, (n_clients,))      masked to +inf off-pool
+    cohort       = argsort(u)[:m]                  (distinct by construction)
+
+which is an exact without-replacement draw of ``m`` clients from the
+pool (every pool subset of size m is equally likely; the cohort ORDER is
+the uniform-rank order). ``m = ⌈sample_rate · live⌉`` is sized by the
+LIVE population (registered minus departed) and clipped to the pool
+(live minus unavailable) — both host-static between churn events, which
+is what lets ``lax.scan`` carry a fixed cohort shape.
+
+The same traceable ``draw`` is used by BOTH paths: the eager
+``run_round`` calls the jitted wrapper once per round, the scanned
+``run_rounds`` inlines it into the round body — so an eager loop and a
+scanned loop starting from the same key sample identical cohorts in the
+same order, which is what the scan-vs-eager parity battery pins down.
+``rng_backend="numpy"`` remains the compatibility mode (bit-exact with
+all pre-scan checkpoints and the legacy-trainer parity tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["cohort_pool", "cohort_size", "draw", "draw_cohort"]
+
+
+def cohort_pool(n_clients: int, left: Iterable[int],
+                unavailable: Iterable[int] = ()) -> np.ndarray:
+    """Boolean draw-pool mask over client ids: registered, not departed,
+    not unavailable this round (the simulator's availability windows)."""
+    pool = np.ones(int(n_clients), bool)
+    for c in left:
+        if 0 <= int(c) < n_clients:
+            pool[int(c)] = False
+    for c in unavailable:
+        if 0 <= int(c) < n_clients:
+            pool[int(c)] = False
+    return pool
+
+
+def cohort_size(sample_rate: float, n_live: int, pool_size: int) -> int:
+    """Cohort size ``m = ⌈sample_rate · live⌉`` clipped to the pool
+    (0 when the pool is empty — the caller's skipped-round case)."""
+    if pool_size <= 0 or n_live <= 0:
+        return 0
+    m = int(np.ceil(float(sample_rate) * int(n_live)))
+    return min(max(m, 0), int(pool_size))
+
+
+def draw(key, pool_mask, m: int):
+    """One traceable without-replacement draw: ``(key, (n,) bool mask,
+    static m) -> (key', (m,) int32 cohort)``. Off-pool ids get +inf sort
+    keys, so they are drawn only if the pool is smaller than ``m`` —
+    callers clip ``m`` to the pool (``cohort_size``) so that never
+    happens. Inlined by the scanned round body; jitted standalone by
+    ``draw_cohort`` for the eager path."""
+    key, sub = jax.random.split(key)
+    u = jax.random.uniform(sub, pool_mask.shape)
+    u = jnp.where(pool_mask, u, jnp.inf)
+    return key, jnp.argsort(u)[:m].astype(jnp.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_draw(n: int, m: int):
+    """One compile per (population, cohort) shape pair."""
+    return jax.jit(functools.partial(draw, m=m))
+
+
+def draw_cohort(key, pool_mask, m: int):
+    """Jitted ``draw`` (the eager ``run_round`` entrypoint): returns
+    ``(advanced key, (m,) int32 cohort ids)``."""
+    pool_mask = jnp.asarray(pool_mask)
+    return _jit_draw(int(pool_mask.shape[0]), int(m))(key, pool_mask)

@@ -41,6 +41,12 @@ class EngineConfig:
     ``core.device_clustering`` (no per-round Ψ host sync, no Python pair
     scan); ``"numpy"`` is the host ``ClusterState`` fallback the parity
     battery checks the device path against.
+    ``rng_backend`` picks where cohort sampling lives: ``"device"`` draws
+    from a threefry key carried in ``ServerState.rng_key``
+    (``engine.sampler`` — required by the fully-jitted ``run_rounds``
+    scan, identical draws eager or scanned); ``"numpy"`` is the host
+    bit-generator compatibility mode (bit-exact with pre-scan
+    checkpoints and the legacy-trainer parity tests).
     """
     tau: float = 0.5
     lam: float = 0.05
@@ -57,6 +63,7 @@ class EngineConfig:
     eps2: float = 0.01
     cohort_chunk: int = 0             # max clients per vmapped step (0=off)
     cluster_backend: str = "numpy"    # StoCFL partition: numpy | device
+    rng_backend: str = "numpy"        # cohort sampling: numpy | device
 
 
 @dataclasses.dataclass
@@ -90,7 +97,10 @@ class ServerState:
     strategy name, round counter, numpy bit-generator state (so client
     sampling is checkpoint-exact), per-client sample counts, the departed
     set, the Ψ clustering bookkeeping, CFL membership, and the metric
-    history.
+    history. Under ``cfg.rng_backend="device"`` the sampling state is
+    instead the ``rng_key`` leaf — a device threefry key, so the whole
+    multi-round loop (sampling included) can run as one ``lax.scan``
+    (``engine.run_rounds``).
     """
     ctx: EngineContext
     strategy: str
@@ -104,6 +114,7 @@ class ServerState:
     clusters: Optional[ClusterState] = None
     members: Optional[Tuple[Tuple[int, ...], ...]] = None   # CFL partition
     history: Tuple[dict, ...] = ()
+    rng_key: Optional[Any] = None     # device sampling key (rng_backend="device")
 
     # ------------------------------------------------------------- helpers
     @property
@@ -138,20 +149,28 @@ def fresh_rng_state(seed: int) -> dict:
     return np.random.default_rng(seed).bit_generator.state
 
 
+def fresh_rng_key(seed: int):
+    """Device sampling key for ``rng_backend="device"`` (threefry; lives
+    in ``ServerState.rng_key``, advanced by splitting once per draw)."""
+    import jax.random
+    return jax.random.PRNGKey(int(seed))
+
+
 def _flatten_state(s: ServerState):
-    children = (s.omega, s.models, s.personal)
+    children = (s.omega, s.models, s.personal, s.rng_key)
     aux = (s.ctx, s.strategy, s.round, s.rng_state, s.sizes, s.left,
            s.clusters, s.members, s.history)
     return children, aux
 
 
 def _unflatten_state(aux, children):
-    omega, models, personal = children
+    omega, models, personal, rng_key = children
     ctx, strategy, rnd, rng_state, sizes, left, clusters, members, history = aux
     return ServerState(ctx=ctx, strategy=strategy, round=rnd,
                        rng_state=rng_state, sizes=sizes, left=left,
                        omega=omega, models=models, personal=personal,
-                       clusters=clusters, members=members, history=history)
+                       clusters=clusters, members=members, history=history,
+                       rng_key=rng_key)
 
 
 jax.tree_util.register_pytree_node(ServerState, _flatten_state, _unflatten_state)

@@ -33,11 +33,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bilevel
+from repro.core import device_clustering as devclust
 from repro.core.aggregators import AGGREGATORS
 from repro.core.device_clustering import make_cluster_state
+from repro.engine import sampler as cohort_sampler
 from repro.engine.bank import ClusterBank, _pow2 as bank_pow2
 from repro.engine.registry import register
-from repro.engine.state import EngineContext, ServerState, fresh_rng_state
+from repro.engine.state import (EngineContext, ServerState, fresh_rng_key,
+                                fresh_rng_state)
 from repro.sharding import specs
 from repro.utils import trees
 
@@ -81,6 +84,51 @@ def _retire_from_arena(ctx: EngineContext, cid: int) -> None:
 
 def _weights(state: ServerState, ids) -> np.ndarray:
     return np.asarray(state.sizes, np.float32)[np.asarray(ids)]
+
+
+# ------------------------------------------------------- scan scaffolding
+def _arena_consts(ctx: EngineContext) -> dict:
+    """The arena's device operands for a scanned round body. Passed as
+    scan ARGUMENTS (not closed over), so the compiled scan cached on the
+    context never embeds stale arrays — after churn rebuilds the arena,
+    the next ``run_rounds`` call feeds the fresh buffers through the
+    same compiled program."""
+    ar = ctx.arena
+    return {"packed": ar.packed, "amask": ar.mask,
+            "rowmap": jnp.asarray(ar.rows.astype(np.int32))}
+
+
+def _gather_scan(consts: dict, ids, ragged: bool):
+    """Traceable cohort gather from ``_arena_consts`` operands — the
+    same takes (and the same ragged ``"mask"`` leaf) as
+    ``ClientArena.gather``, so scanned batches are bitwise-identical to
+    the eager path's."""
+    idx = jnp.take(consts["rowmap"], ids)
+    batch = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
+                         consts["packed"])
+    if ragged:
+        batch = dict(batch)
+        batch["mask"] = jnp.take(consts["amask"], idx, axis=0)
+    return batch
+
+
+def _sizes_f32(state: ServerState):
+    """Per-client sample counts as a device f32 vector (the scanned
+    counterpart of ``_weights``)."""
+    return jnp.asarray(np.asarray(state.sizes, np.float32))
+
+
+def _row_mask(mask, leaf):
+    """Broadcast a (rows,) bool mask against a (rows, ...) leaf."""
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def _scan_history(ys, rounds: int) -> tuple:
+    """Stacked scan metrics -> eager-style history records (delegates to
+    ``engine.api.scan_history``; local alias avoids an import cycle at
+    module load)."""
+    from repro.engine.api import scan_history
+    return scan_history(ys, rounds)
 
 
 def _place(ctx: EngineContext, tree, replicated: bool = False):
@@ -130,17 +178,42 @@ class Strategy:
 
     # ------------------------------------------------------------ lifecycle
     def init_state(self, ctx: EngineContext) -> ServerState:
-        """Round-0 ``ServerState``: ω = ω₀, empty bank, fresh sampling rng."""
+        """Round-0 ``ServerState``: ω = ω₀, empty bank, fresh sampling
+        rng (the numpy bit-generator, plus a device threefry key under
+        ``rng_backend="device"``)."""
+        key = (fresh_rng_key(ctx.cfg.seed)
+               if ctx.cfg.rng_backend == "device" else None)
         return ServerState(ctx=ctx, strategy=self.name, round=0,
                            rng_state=fresh_rng_state(ctx.cfg.seed),
                            sizes=client_sizes(ctx.clients), left=frozenset(),
                            omega=ctx.init_params, models=ClusterBank.empty(),
-                           personal={})
+                           personal={}, rng_key=key)
 
     def round(self, ctx: EngineContext, state: ServerState, client_ids):
         """One pure server round over the sampled cohort:
         ``(ctx, state, client_ids) -> (state', metrics dict)``."""
         raise NotImplementedError
+
+    def scan_round(self, ctx: EngineContext, state: ServerState,
+                   pool: np.ndarray, m: int):
+        """The strategy's round as a scannable step for
+        ``engine.run_rounds``.
+
+        Returns ``(carry0, consts, step, finalize, statics)``:
+        ``carry0`` is the fixed-shape scan carry built from ``state``
+        (PRNG key, model pytrees, stacked banks, device partition),
+        ``consts`` the round-invariant device operands (arena buffers,
+        draw pool, sample counts) that are threaded as scan ARGUMENTS
+        so cached compilations never go stale, ``step(carry, consts) ->
+        (carry', metrics)`` one traceable round (bit-faithful to
+        ``round``), ``finalize(state, carry, ys, rounds)`` the host
+        conversion back to a ``ServerState``, and ``statics`` a
+        hashable tuple of every value the step bakes into its TRACE
+        beyond the carry/const shapes (arena raggedness, merge bounds) —
+        ``run_rounds`` keys its compiled-scan cache on it. ``pool`` is
+        the boolean draw-pool mask, ``m`` the static cohort size."""
+        raise NotImplementedError(
+            f"strategy {self.name!r} has no scannable round step")
 
     # ------------------------------------------------------------ serving
     def evaluate(self, ctx, state, test_sets, true_cluster=None) -> dict:
@@ -204,8 +277,17 @@ class StoCFLStrategy(Strategy):
         if new_ids:
             # extractor outputs stay device arrays: the numpy backend
             # converts internally (the old host sync); the device backend
-            # scatters them straight into its Ψ bank with no round-trip
-            reps = [ctx.extractor(ctx.clients[c]) for c in new_ids]
+            # scatters them straight into its Ψ bank with no round-trip.
+            # With an arena, Ψ reads the SAME padded+masked arena row
+            # the scanned loop extracts from (bitwise-identical to the
+            # raw shard for equal-size shards) — one consistent Ψ
+            # source, so ragged federations stay scan-vs-eager exact
+            if ctx.arena is not None:
+                reps = [ctx.extractor(jax.tree.map(
+                    lambda x: x[0], ctx.arena.gather([c])))
+                    for c in new_ids]
+            else:
+                reps = [ctx.extractor(ctx.clients[c]) for c in new_ids]
             clusters.observe(new_ids, reps)
         counts = {r: len(m) for r, m in clusters.clusters().items()}
         merges = clusters.merge_round()
@@ -237,10 +319,184 @@ class StoCFLStrategy(Strategy):
                                          bank_pow2(len(uroots)))
         models = models.put([int(r) for r in uroots], agg)
 
+        if isinstance(clusters, devclust.DeviceClusters):
+            # shape-stable closed form: the exact float the scanned loop
+            # records (see objective_closed_impl)
+            objective = devclust.objective_closed(clusters.state)
+        else:
+            objective = clusters.objective()
         rec = {"n_clusters": clusters.n_clusters(),
-               "objective": clusters.objective(),
+               "objective": objective,
                "sampled": len(client_ids)}
         return state.replace(omega=omega, models=models, clusters=clusters), rec
+
+    def scan_round(self, ctx, state, pool, m):
+        """StoCFL's whole round — Ψ-extraction, observe, fused merge,
+        count-weighted bank merge, bi-level cohort step, per-cluster
+        aggregation — as one traceable step (``cluster_backend="device"``
+        required; checked by ``run_rounds``).
+
+        The carry keeps the partition as a raw ``DeviceClusterState``
+        and the cluster models as a row-keyed bank: ``rows[r]`` is the
+        model of the cluster rooted at client id r, ``has[r]`` whether
+        one exists (lazy θ_k = ω₀ otherwise) — the fixed-shape twin of
+        ``ClusterBank``'s host-keyed rows, rebuilt into one by
+        ``finalize``. Merge-group and per-cluster aggregations are
+        segment-sums over ascending row order, matching
+        ``ClusterBank.merge``'s and the eager round's summation order
+        bitwise."""
+        cfg = ctx.cfg
+        tau = float(cfg.tau)
+        ragged = ctx.arena.ragged
+        clusters = state.clusters
+        if clusters.state is None:
+            dim = int(np.shape(np.asarray(ctx.extractor(ctx.clients[0])))[0])
+            dcs0 = devclust.init_state(
+                max(clusters._capacity_hint, state.n_clients), dim)
+        else:
+            dcs0 = devclust.grow(clusters.state, state.n_clients)
+        cap = int(dcs0.parent.shape[0])
+        rows0 = jax.tree.map(
+            lambda x: jnp.zeros((cap,) + tuple(jnp.shape(x)),
+                                jnp.asarray(x).dtype), ctx.init_params)
+        has0 = np.zeros(cap, bool)
+        roots0 = state.models.roots
+        if roots0:
+            idx0 = jnp.asarray(np.asarray(roots0, np.int32))
+            nr = len(roots0)
+            rows0 = jax.tree.map(
+                lambda Z, S: Z.at[idx0].set(S[:nr].astype(Z.dtype)),
+                rows0, state.models.stacked)
+            has0[list(roots0)] = True
+        consts = dict(_arena_consts(ctx), pool=jnp.asarray(pool),
+                      sizes=_sizes_f32(state), init=ctx.init_params)
+        carry0 = (state.rng_key, state.omega, dcs0, rows0,
+                  jnp.asarray(has0))
+        cohort = self._cohort(ctx)
+        psi = ctx.extractor
+        aggname = cfg.aggregator
+        # static live-cluster bound for the merge pass: current clusters
+        # plus every still-unseen live client (each could open a
+        # singleton); can only shrink during the scan, so it stays
+        # sufficient — and it keeps the pairwise candidate work K̃²-ish
+        # instead of capacity² (the merge partition is k_max-invariant)
+        n_live = state.n_clients - len(state.left)
+        k_now = (state.clusters.n_clusters()
+                 if state.clusters.state is not None else 0)
+        unseen = max(n_live - len(state.clusters.seen), 0)
+        k_bound = min(bank_pow2(max(k_now + unseen, 1)), cap)
+
+        def step(carry, cs):
+            key, omega, dcs, rows, has = carry
+            ids_arr = jnp.arange(cap, dtype=jnp.int32)
+            key, ids = cohort_sampler.draw(key, cs["pool"], m)
+            batches = _gather_scan(cs, ids, ragged)
+            new = ~jnp.take(dcs.live, ids)
+
+            def observe(d):
+                # Ψ per cohort member, one client at a time (lax.map
+                # keeps the per-client extractor program identical to
+                # the eager per-client calls — bitwise, not just
+                # allclose); skipped entirely once everyone is observed
+                reps = jax.lax.map(psi, batches)
+                idx = jnp.where(new, ids, cap).astype(jnp.int32)
+                return devclust.DeviceClusterState(
+                    parent=d.parent.at[idx].set(
+                        idx.astype(d.parent.dtype), mode="drop"),
+                    live=d.live.at[idx].set(True, mode="drop"),
+                    rep=d.rep.at[idx].set(reps.astype(d.rep.dtype),
+                                          mode="drop"))
+
+            dcs = jax.lax.cond(jnp.any(new), observe, lambda d: d, dcs)
+            dcs, rows_live, new_roots, counts_c = devclust.merge_round_impl(
+                dcs, tau, k_bound)
+            # --- count-weighted bank merge (ClusterBank.merge, row-keyed;
+            # the heavy θ segment-sums are cond-skipped on merge-free
+            # rounds, mirroring ClusterBank.merge's early return)
+            mapped = ids_arr.at[rows_live].set(new_roots, mode="drop")
+            w_full = jnp.zeros((cap,), jnp.float32).at[rows_live].set(
+                counts_c.astype(jnp.float32), mode="drop")
+            gsize = jax.ops.segment_sum((w_full > 0).astype(jnp.int32),
+                                        mapped, num_segments=cap)
+            merged = gsize > 1
+            absorbed = (w_full > 0) & (mapped != ids_arr)
+
+            def bank_merge(operand):
+                rows, has = operand
+                theta_full = jax.tree.map(
+                    lambda R, I: jnp.where(
+                        _row_mask(has, R), R,
+                        jnp.asarray(I)[None].astype(R.dtype)),
+                    rows, cs["init"])
+                denom = jax.ops.segment_sum(w_full, mapped,
+                                            num_segments=cap)
+                wn = jnp.where(denom[mapped] > 0,
+                               w_full / denom[mapped], 0.0)
+                agg = jax.tree.map(
+                    lambda x: jax.ops.segment_sum(
+                        x * _row_mask(wn, x), mapped,
+                        num_segments=cap).astype(x.dtype), theta_full)
+                rows = jax.tree.map(
+                    lambda R, A: jnp.where(_row_mask(merged, R),
+                                           A.astype(R.dtype), R),
+                    rows, agg)
+                return rows, (has & ~absorbed) | merged
+
+            rows, has = jax.lax.cond(jnp.any(merged), bank_merge,
+                                     lambda o: o, (rows, has))
+            # --- bi-level cohort step over post-merge cluster models
+            r_ids = jnp.take(dcs.parent, ids)      # fully compressed roots
+            has_r = jnp.take(has, r_ids)
+            thetas = jax.tree.map(
+                lambda R, I: jnp.where(_row_mask(has_r, R[:1]),
+                                       jnp.take(R, r_ids, axis=0),
+                                       jnp.asarray(I)[None].astype(R.dtype)),
+                rows, cs["init"])
+            thetas_i, omegas_i = cohort(thetas, omega, batches)
+            w = jnp.take(cs["sizes"], ids)
+            omega = AGGREGATORS[aggname](omegas_i, w)
+            # per-cluster FedAvg over COMPACT cohort slots (≤ m), then a
+            # scatter of just the touched root rows: same segment sums
+            # in the same cohort order as the eager unique-root path,
+            # but the per-round bank traffic is O(m·|θ|), not
+            # O(capacity·|θ|) — the scan's write-back stays cluster-
+            # sized no matter how big the federation's row space is
+            pos = jnp.arange(m, dtype=jnp.int32)
+            firsts = jnp.argmax(r_ids[:, None] == r_ids[None, :],
+                                axis=1).astype(jnp.int32)
+            is_first = firsts == pos
+            slot_of_pos = jnp.cumsum(is_first.astype(jnp.int32)) - 1
+            slot = jnp.take(slot_of_pos, firsts)
+            agg2 = bilevel.aggregate_segments(thetas_i, w, slot, m)
+            target = jnp.where(is_first, r_ids, cap).astype(jnp.int32)
+            rows = jax.tree.map(
+                lambda R, A: R.at[target].set(
+                    jnp.take(A, slot, axis=0).astype(R.dtype),
+                    mode="drop"),
+                rows, agg2)
+            has = has.at[target].set(True, mode="drop")
+            n_clusters = jnp.sum(dcs.live
+                                 & (dcs.parent == ids_arr)).astype(jnp.int32)
+            rec = {"n_clusters": n_clusters,
+                   "objective": devclust.objective_closed_impl(dcs),
+                   "sampled": jnp.int32(m)}
+            return (key, omega, dcs, rows, has), rec
+
+        def finalize(state, carry, ys, rounds):
+            key, omega, dcs, rows, has = carry
+            clusters = devclust.DeviceClusters.from_arrays(
+                tau, np.asarray(dcs.parent), np.asarray(dcs.live),
+                np.asarray(dcs.rep))
+            roots = [int(r) for r in np.nonzero(np.asarray(has))[0]]
+            models = ClusterBank.from_dict(
+                {r: jax.tree.map(lambda R, rr=r: R[rr], rows)
+                 for r in roots})
+            return state.replace(
+                omega=omega, rng_key=key, clusters=clusters, models=models,
+                round=state.round + rounds,
+                history=state.history + _scan_history(ys, rounds))
+
+        return carry0, consts, step, finalize, (ragged, cap, k_bound)
 
     def evaluate(self, ctx, state, test_sets, true_cluster=None):
         """Each true cluster is evaluated with the model of the learned
@@ -327,6 +583,32 @@ class FedAvgStrategy(Strategy):
         omega = bilevel.aggregate_stacked(outs, _weights(state, ids))
         return state.replace(omega=omega), {"sampled": len(ids)}
 
+    def scan_round(self, ctx, state, pool, m):
+        """Scannable FedAvg/FedProx round: draw → gather → local SGD →
+        weighted mean, carry ``(key, ω)`` — the same compiled cohort
+        update as the eager round, on the same shapes."""
+        ragged = ctx.arena.ragged
+        upd = self._upd(ctx)
+        consts = dict(_arena_consts(ctx), pool=jnp.asarray(pool),
+                      sizes=_sizes_f32(state))
+        carry0 = (state.rng_key, state.omega)
+
+        def step(carry, cs):
+            key, omega = carry
+            key, ids = cohort_sampler.draw(key, cs["pool"], m)
+            batches = _gather_scan(cs, ids, ragged)
+            outs = upd(omega, batches)
+            omega = bilevel.aggregate_stacked(outs, jnp.take(cs["sizes"], ids))
+            return (key, omega), {"sampled": jnp.int32(m)}
+
+        def finalize(state, carry, ys, rounds):
+            key, omega = carry
+            return state.replace(omega=omega, rng_key=key,
+                                 round=state.round + rounds,
+                                 history=state.history + _scan_history(ys, rounds))
+
+        return carry0, consts, step, finalize, (ragged,)
+
 
 @register("fedprox")
 class FedProxStrategy(FedAvgStrategy):
@@ -375,6 +657,44 @@ class DittoStrategy(Strategy):
         for j, c in enumerate(ids):
             personal[int(c)] = jax.tree.map(lambda x: x[j], v_outs)
         return state.replace(omega=omega, personal=personal), {"sampled": len(ids)}
+
+    def scan_round(self, ctx, state, pool, m):
+        """Scannable Ditto round. The per-client personal models ride
+        the carry as ONE stacked ``(n_clients, ...)`` pytree (cid ↔
+        row); a round gathers the cohort's rows, proxes them to the
+        broadcast ω, and scatters them back — ``finalize`` unstacks to
+        the eager path's per-cid dict."""
+        ragged = ctx.arena.ragged
+        gupd, pupd = self._upds(ctx)
+        n = state.n_clients
+        personal0 = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *[state.personal[i] for i in range(n)])
+        consts = dict(_arena_consts(ctx), pool=jnp.asarray(pool),
+                      sizes=_sizes_f32(state))
+        carry0 = (state.rng_key, state.omega, personal0)
+
+        def step(carry, cs):
+            key, omega, personal = carry
+            key, ids = cohort_sampler.draw(key, cs["pool"], m)
+            batches = _gather_scan(cs, ids, ragged)
+            g_outs = gupd(omega, batches)
+            v = jax.tree.map(lambda P: jnp.take(P, ids, axis=0), personal)
+            v_outs = pupd(v, omega, batches)
+            omega = bilevel.aggregate_stacked(g_outs,
+                                              jnp.take(cs["sizes"], ids))
+            personal = jax.tree.map(lambda P, V: P.at[ids].set(V),
+                                    personal, v_outs)
+            return (key, omega, personal), {"sampled": jnp.int32(m)}
+
+        def finalize(state, carry, ys, rounds):
+            key, omega, personal = carry
+            pd = {i: jax.tree.map(lambda P, ii=i: P[ii], personal)
+                  for i in range(n)}
+            return state.replace(omega=omega, rng_key=key, personal=pd,
+                                 round=state.round + rounds,
+                                 history=state.history + _scan_history(ys, rounds))
+
+        return carry0, consts, step, finalize, (ragged,)
 
     def evaluate(self, ctx, state, test_sets, true_cluster=None):
         """Per true cluster: average of its clients' personal models' acc."""
@@ -443,6 +763,49 @@ class IFCAStrategy(Strategy):
         models = state.models.put([int(m) for m in um], agg)
         return state.replace(models=models), {"sampled": len(ids)}
 
+    def scan_round(self, ctx, state, pool, m):
+        """Scannable IFCA round: the M̃ hypothesis models ride the carry
+        stacked; choice = batched argmin loss, update = local SGD from
+        the chosen hypothesis, write-back = a full-M̃ segment mean with
+        untouched hypotheses kept (the fixed-shape equivalent of the
+        eager path's unique-root scatter)."""
+        ragged = ctx.arena.ragged
+        M = int(ctx.cfg.n_models)
+        choice, upd = self._choice(ctx), self._upd(ctx)
+        rows0 = state.models.take(np.arange(M), ctx.init_params)
+        consts = dict(_arena_consts(ctx), pool=jnp.asarray(pool),
+                      sizes=_sizes_f32(state))
+        carry0 = (state.rng_key, rows0)
+
+        def step(carry, cs):
+            key, rows = carry
+            key, ids = cohort_sampler.draw(key, cs["pool"], m)
+            batches = _gather_scan(cs, ids, ragged)
+            losses = choice(rows, batches)
+            choices = jnp.argmin(losses, axis=1)
+            thetas = jax.tree.map(lambda R: jnp.take(R, choices, axis=0),
+                                  rows)
+            outs = upd(thetas, batches)
+            w = jnp.take(cs["sizes"], ids)
+            agg = bilevel.aggregate_segments(outs, w, choices, M)
+            present = jax.ops.segment_sum(jnp.ones_like(w), choices,
+                                          num_segments=M) > 0
+            rows = jax.tree.map(
+                lambda R, A: jnp.where(_row_mask(present, R),
+                                       A.astype(R.dtype), R), rows, agg)
+            return (key, rows), {"sampled": jnp.int32(m)}
+
+        def finalize(state, carry, ys, rounds):
+            key, rows = carry
+            models = ClusterBank.from_dict(
+                {i: jax.tree.map(lambda R, ii=i: R[ii], rows)
+                 for i in range(M)})
+            return state.replace(models=models, rng_key=key,
+                                 round=state.round + rounds,
+                                 history=state.history + _scan_history(ys, rounds))
+
+        return carry0, consts, step, finalize, (ragged, M)
+
     def evaluate(self, ctx, state, test_sets, true_cluster=None):
         out = {}
         for tc, batch in test_sets.items():
@@ -465,44 +828,186 @@ class CFLStrategy(Strategy):
         return state.replace(members=(tuple(range(len(ctx.clients))),),
                              models=ClusterBank.from_dict({0: ctx.init_params}))
 
-    def _upd(self, ctx):
+    def _core(self, ctx, L: int):
+        """The WHOLE CFL round as one jitted program over a fixed
+        ``L``-client layout: ``(assign (L,), k scalar, model rows
+        (L, ...), batches, sizes) -> (assign', k', rows')``.
+
+        Every client trains from its cluster's model (one gathered
+        vmap), per-cluster FedAvg and the Sattler split statistics are
+        masked reductions over the full client axis, and split emission
+        renumbers clusters by cumulative-split offset (split cluster j →
+        slots j+off and j+off+1, exactly the sequential emission order
+        of the original per-cluster loop). Both the eager ``round`` and
+        the ``run_rounds`` scan call THIS function — scan-vs-eager
+        parity is by construction, and the split decisions (host floats
+        before) are now device-deterministic."""
         cfg = ctx.cfg
-        return ctx.jit("cfl_upd", lambda: bilevel.chunk_map(
-            jax.jit(jax.vmap(
-                lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b, cfg.lr,
-                                               cfg.local_steps),
-                in_axes=(None, 0))), (None, 0), _chunk(ctx)))
+
+        def build():
+            upd = bilevel.chunk_map(
+                jax.jit(jax.vmap(
+                    lambda p, b: bilevel.local_sgd(ctx.loss_fn, p, b,
+                                                   cfg.lr, cfg.local_steps),
+                    in_axes=(0, 0))), (0, 0), _chunk(ctx), donate=())
+
+            def core(assign, k, rows, batches, sizes):
+                thetas = jax.tree.map(
+                    lambda R: jnp.take(R, assign, axis=0), rows)
+                outs = upd(thetas, batches)
+                deltas = jax.tree.map(lambda o, t: o - t, outs, thetas)
+                flat = jax.vmap(trees.tree_flatten_vector)(deltas)  # (L, d)
+                norms = jnp.linalg.norm(flat, axis=1)
+                ks = jnp.arange(L, dtype=jnp.int32)
+                # per-cluster stats as O(L·d) segment reductions (every
+                # client sits in exactly one cluster; within-segment
+                # order is ascending cid, the member-tuple order)
+                cnt = jax.ops.segment_sum(jnp.ones_like(assign), assign,
+                                          num_segments=L)
+                denom = jax.ops.segment_sum(sizes, assign, num_segments=L)
+                wn = sizes / jnp.take(denom, assign)
+                new_models = jax.tree.map(
+                    lambda O: jax.ops.segment_sum(
+                        O * wn.reshape((-1,) + (1,) * (O.ndim - 1)),
+                        assign, num_segments=L).astype(O.dtype), outs)
+                mean_g = jax.ops.segment_sum(flat, assign, num_segments=L
+                                             ) / jnp.maximum(cnt, 1)[:, None]
+                mean_norm = jnp.linalg.norm(mean_g, axis=1)
+                max_norm = jax.ops.segment_max(norms, assign,
+                                               num_segments=L)
+                candidate = ((ks < k) & (cnt > 2)
+                             & (max_norm > cfg.eps2)
+                             & (mean_norm < cfg.eps_rel * max_norm))
+
+                # split seeds: least-similar member pair, first-min in
+                # row-major member order (the np.unravel_index rule).
+                # The O(L²·d) similarity matrix and the per-cluster
+                # masked argmins are cond-gated: rounds (and clusters)
+                # with no split candidate skip them entirely — the
+                # steady-state CFL round stays O(L·d)
+                def seeds(_):
+                    sims = flat / (norms[:, None] + 1e-12)
+                    M = sims @ sims.T
+
+                    def one(j):
+                        def seed(j):
+                            mask = assign == j
+                            Mj = jnp.where(mask[:, None] & mask[None, :],
+                                           M, jnp.inf)
+                            amin = jnp.argmin(Mj)
+                            gi, gj = amin // L, amin % L
+                            c1 = mask & (M[:, gi] >= M[:, gj])
+                            c2 = mask & ~c1
+                            return c2, jnp.any(c1) & jnp.any(c2)
+
+                        return jax.lax.cond(
+                            candidate[j], seed,
+                            lambda _: (jnp.zeros((L,), bool),
+                                       jnp.bool_(False)), j)
+
+                    return jax.lax.map(one, ks)
+
+                c2, seed_ok = jax.lax.cond(
+                    jnp.any(candidate), seeds,
+                    lambda _: (jnp.zeros((L, L), bool),
+                               jnp.zeros((L,), bool)), 0)
+                split = candidate & seed_ok
+                s = split.astype(jnp.int32)
+                off = jnp.cumsum(s) - s
+                new_pos = ks + off
+                c2_p = c2[assign, jnp.arange(L)]
+                base = jnp.take(new_pos, assign)
+                assign2 = jnp.where(c2_p & jnp.take(split, assign),
+                                    base + 1, base).astype(jnp.int32)
+                idx1 = jnp.where(ks < k, new_pos, L)
+                idx2 = jnp.where(split, new_pos + 1, L)
+                rows2 = jax.tree.map(
+                    lambda R, NM: R.at[idx1].set(NM.astype(R.dtype),
+                                                 mode="drop")
+                                   .at[idx2].set(NM.astype(R.dtype),
+                                                 mode="drop"),
+                    rows, new_models)
+                k2 = (k + jnp.sum(jnp.where(ks < k, s, 0))).astype(jnp.int32)
+                return assign2, k2, rows2
+
+            return jax.jit(core)
+
+        return ctx.jit(f"cfl_core:{L}", build)
+
+    def _matrix(self, ctx, state):
+        """Host matrix form of the CFL state: ``(live cids asc, assign
+        per live position, k, (L, ...) model rows)`` — the fixed-shape
+        layout ``_core`` runs on; member tuples keep clients ascending,
+        so matrix ↔ tuples round-trips exactly."""
+        live = np.array([i for i in range(state.n_clients)
+                         if i not in state.left], np.int64)
+        pos = {int(c): p for p, c in enumerate(live)}
+        assign = np.zeros(len(live), np.int32)
+        for j, grp in enumerate(state.members):
+            for c in grp:
+                assign[pos[int(c)]] = j
+        k = len(state.members)
+        rows = jax.tree.map(
+            lambda x: jnp.zeros((len(live),) + tuple(jnp.shape(x)),
+                                jnp.asarray(x).dtype), ctx.init_params)
+        stacked = state.models.take(np.arange(k), ctx.init_params)
+        rows = jax.tree.map(lambda Z, S: Z.at[:k].set(S.astype(Z.dtype)),
+                            rows, stacked)
+        return live, assign, k, rows
+
+    @staticmethod
+    def _untangle(live, assign, k, rows):
+        """Matrix form back to the tuple partition + ``ClusterBank``."""
+        members = tuple(tuple(int(c) for c in live[assign == j])
+                        for j in range(k))
+        models = ClusterBank.from_dict(
+            {j: jax.tree.map(lambda R, jj=j: R[jj], rows)
+             for j in range(k)})
+        return members, models
 
     def round(self, ctx, state, client_ids):
-        cfg = ctx.cfg
-        upd = self._upd(ctx)
-        sizes = np.asarray(state.sizes, np.float32)
-        new_members, new_models = [], []
-        for k, members in enumerate(state.members):
-            members = list(members)
-            model = state.models[k]
-            outs = upd(model, _place(ctx, _batches(ctx, members)))
-            deltas = jax.tree.map(lambda o, m: o - m, outs, model)
-            flat = np.asarray(jax.vmap(trees.tree_flatten_vector)(deltas))
-            new_model = bilevel.aggregate_stacked(outs, sizes[np.array(members)])
-            mean_norm = float(np.linalg.norm(flat.mean(axis=0)))
-            max_norm = float(np.linalg.norm(flat, axis=1).max())
-            if len(members) > 2 and max_norm > cfg.eps2 and mean_norm < cfg.eps_rel * max_norm:
-                sims = flat / (np.linalg.norm(flat, axis=1, keepdims=True) + 1e-12)
-                M = sims @ sims.T
-                i, j = np.unravel_index(np.argmin(M), M.shape)
-                c1 = [m for idx, m in enumerate(members) if M[idx, i] >= M[idx, j]]
-                c2 = [m for m in members if m not in c1]
-                if c1 and c2:
-                    new_members += [tuple(c1), tuple(c2)]
-                    new_models += [new_model, new_model]
-                    continue
-            new_members.append(tuple(members))
-            new_models.append(new_model)
-        state = state.replace(members=tuple(new_members),
-                              models=ClusterBank.from_dict(dict(enumerate(new_models))))
-        return state, {"n_clusters": len(new_members),
-                       "sampled": sum(len(m) for m in new_members)}
+        live, assign, k, rows = self._matrix(ctx, state)
+        batches = _place(ctx, _batches(ctx, live))
+        sizes = jnp.asarray(np.asarray(state.sizes, np.float32)[live])
+        assign2, k2, rows2 = self._core(ctx, len(live))(
+            jnp.asarray(assign), jnp.int32(k), rows, batches, sizes)
+        members, models = self._untangle(live, np.asarray(assign2),
+                                         int(k2), rows2)
+        state = state.replace(members=members, models=models)
+        return state, {"n_clusters": len(members),
+                       "sampled": sum(len(m) for m in members)}
+
+    def scan_round(self, ctx, state, pool, m):
+        """Scannable CFL rounds: the carry is the matrix partition
+        (``assign``, ``k``, model rows) and each step is one ``_core``
+        call over the full live population (availability masks do not
+        apply to full participation, mirroring the eager path)."""
+        ragged = ctx.arena.ragged
+        live, assign, k, rows = self._matrix(ctx, state)
+        L = len(live)
+        core = self._core(ctx, L)
+        consts = dict(_arena_consts(ctx),
+                      live=jnp.asarray(live.astype(np.int32)),
+                      sizes=jnp.asarray(
+                          np.asarray(state.sizes, np.float32)[live]))
+        carry0 = (jnp.asarray(assign), jnp.int32(k), rows)
+
+        def step(carry, cs):
+            assign, k, rows = carry
+            batches = _gather_scan(cs, cs["live"], ragged)
+            assign, k, rows = core(assign, k, rows, batches, cs["sizes"])
+            return (assign, k, rows), {"n_clusters": k,
+                                       "sampled": jnp.int32(L)}
+
+        def finalize(state, carry, ys, rounds):
+            assign, k, rows = carry
+            members, models = self._untangle(live, np.asarray(assign),
+                                             int(k), rows)
+            return state.replace(members=members, models=models,
+                                 round=state.round + rounds,
+                                 history=state.history + _scan_history(ys, rounds))
+
+        return carry0, consts, step, finalize, (ragged, L)
 
     def cluster_of(self, state, cid: int) -> int:
         for k, c in enumerate(state.members):

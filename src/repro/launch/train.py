@@ -45,11 +45,20 @@ from repro.launch.mesh import make_cohort_mesh
 
 
 def _engine_cfg(args) -> engine.EngineConfig:
+    cluster_backend = args.cluster_backend
+    rng_backend = "numpy"
+    if getattr(args, "scan_rounds", False):
+        # the fused loop needs device sampling; StoCFL additionally
+        # needs the device partition (run_rounds preconditions)
+        rng_backend = "device"
+        if args.algo == "stocfl" and cluster_backend != "device":
+            print("--scan-rounds: forcing --cluster-backend device")
+            cluster_backend = "device"
     return engine.EngineConfig(
         tau=args.tau, lam=args.lam, lr=args.lr, local_steps=args.local_steps,
         sample_rate=1.0 if args.algo == "cfl" else args.sample_rate,
         seed=args.seed, mu=args.lam, cohort_chunk=args.cohort_chunk,
-        cluster_backend=args.cluster_backend)
+        cluster_backend=cluster_backend, rng_backend=rng_backend)
 
 
 def _churn_timeline(args, n_clusters: int):
@@ -85,8 +94,9 @@ def run_classification(args) -> dict:
 
     mesh = make_cohort_mesh() if args.mesh else None
     t0 = time.time()
+    arena = args.arena or args.scan_rounds   # scans gather from the arena
     st = engine.init(args.algo, loss, params, clients, _engine_cfg(args),
-                     eval_fn=evalf, mesh=mesh, arena=args.arena)
+                     eval_fn=evalf, mesh=mesh, arena=arena)
     out = {"algo": args.algo, "rounds": args.rounds}
     if args.churn:
         from repro.sim import simulate
@@ -95,7 +105,8 @@ def run_classification(args) -> dict:
                            client_factory=factory, seed=args.seed,
                            cohort_quantum=args.cohort_quantum,
                            eval_every=max(args.rounds // 10, 1),
-                           test_sets=test_sets, true_cluster=true_cluster)
+                           test_sets=test_sets, true_cluster=true_cluster,
+                           scan_spans=args.scan_rounds)
         out["churn"] = {"timeline": tl.counts(),
                         "joined": len(log.joined),
                         "departed": len(log.departed),
@@ -107,6 +118,11 @@ def run_classification(args) -> dict:
         if args.save_log:
             with open(args.save_log, "w") as f:
                 json.dump(log.to_json(), f, indent=1)
+    elif args.scan_rounds:
+        st = engine.run_rounds(st, args.rounds)   # ONE jitted lax.scan
+        for t, rec in enumerate(st.history):
+            if t % max(args.rounds // 10, 1) == 0:
+                print(f"round {t}: {rec}")
     else:
         st = engine.run(st, args.rounds, log_every=max(args.rounds // 10, 1))
     res = engine.evaluate(st, test_sets, true_cluster)
@@ -183,6 +199,13 @@ def main():
                     help="StoCFL partition backend: host ClusterState "
                          "(fallback) or the jitted device union-find "
                          "(core.device_clustering)")
+    ap.add_argument("--scan-rounds", action="store_true",
+                    help="run the whole round loop as ONE jitted lax.scan "
+                         "(engine.run_rounds): on-device cohort sampling, "
+                         "no per-round host dispatch; implies --arena and "
+                         "rng_backend=device (and cluster-backend device "
+                         "for stocfl). Under --churn, event-free spans "
+                         "are scanned (sim scan_spans)")
     ap.add_argument("--cohort-chunk", type=int, default=0,
                     help="max clients per vmapped step; larger cohorts run "
                          "in lax.map chunks with flat memory (0 = unchunked)")

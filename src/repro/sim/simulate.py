@@ -42,7 +42,8 @@ class SimLog:
     ``n_registered`` / ``n_live`` population, ``cohort`` size actually
     trained, ``sec_train`` (the ``run_round`` call alone) and
     ``sec_round`` (+ event application) wall times, ``skipped`` (no
-    available cohort),
+    available cohort), ``scanned`` (the round ran inside a fused
+    ``run_rounds`` span — per-round times are then the span average),
     plus ``n_clusters`` and — at eval points — ``joined_acc`` /
     ``incumbent_acc`` / ``gap``. ``joined``: cid -> latent cluster of
     every client that joined mid-run; ``departed``: cids that left.
@@ -107,13 +108,21 @@ def _resolve_leave(state, ev: Leave, rng) -> Optional[int]:
     return int(rng.choice(live))
 
 
+def _scannable(state) -> bool:
+    """Whether this state can run event-free spans through
+    ``engine.run_rounds`` — delegates to the engine's own precondition
+    predicate (``engine.scan_blockers``), so the silent eager fallback
+    can never drift from what ``run_rounds`` would actually reject."""
+    return engine.scan_blockers(state) is None
+
+
 def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
              client_factory: Optional[Callable] = None,
              drift_fn: Optional[Callable] = None, seed: int = 0,
              cohort_quantum: int = 0, eval_every: int = 0,
              test_sets: Optional[dict] = None,
              true_cluster: Optional[Any] = None,
-             incumbent_sample: int = 64):
+             incumbent_sample: int = 64, scan_spans: bool = False):
     """Drive ``rounds`` engine rounds through a churn ``Timeline``.
 
     Args:
@@ -144,6 +153,17 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
       true_cluster: latent cluster per *initial* client (joined clients
         carry theirs on the ``Join`` event).
       incumbent_sample: cap on incumbents evaluated per eval point.
+      scan_spans: compile event-free spans (no events, no availability
+        window, no eval point, no cohort quantum) into
+        ``engine.run_rounds`` scans, pow2-chunked so the set of
+        compiled scan lengths stays O(log span) under irregular event
+        gaps — the per-round host dispatch
+        disappears for exactly the rounds that don't need it, and the
+        trajectory stays bitwise identical to the eager loop (the
+        scan-vs-eager battery pins this under churn). Needs the
+        run_rounds preconditions (arena + device rng; device partition
+        for StoCFL); states that don't meet them fall back to eager
+        rounds silently.
 
     Returns:
       (final ``ServerState``, ``SimLog``).
@@ -162,8 +182,56 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
         from repro.data.synthetic import drift_batch
         drift_fn = drift_batch
     strat = get_strategy(state.strategy)
+    eval_on = bool(eval_every and test_sets is not None
+                   and state.ctx.eval_fn is not None)
 
-    for t in range(rounds):
+    def _plain(t2: int) -> bool:
+        """True when round ``t2`` has no event, no availability window
+        and no eval point — i.e. it can ride a scanned span."""
+        if timeline.at(t2) or timeline.unavailable(t2):
+            return False
+        return not (eval_on and (t2 % eval_every == 0 or t2 == rounds - 1))
+
+    t = 0
+    while t < rounds:
+        # ---- event-free span: one run_rounds scan instead of N eager
+        # dispatches (identical trajectory; see scan_spans docs)
+        if scan_spans and cohort_quantum <= 1:
+            span = 0
+            while t + span < rounds and _plain(t + span):
+                span += 1
+            # _scannable (an O(n_clients) precondition walk) only runs
+            # once an actual >=2-round span exists — event-heavy phases
+            # never pay it per round
+            if span >= 2 and _scannable(state):
+                t1 = time.time()
+                # pow2-chunked scans (largest chunk first): distinct
+                # compiled scan lengths stay O(log span) across the
+                # whole run instead of one compile per distinct gap
+                # between events — composition is exact
+                # (run_rounds(a); run_rounds(b) ≡ run_rounds(a+b), see
+                # the parity battery)
+                ran = 0
+                while ran < span:
+                    chunk = 1 << ((span - ran).bit_length() - 1)
+                    state = engine.run_rounds(state, chunk)
+                    ran += chunk
+                jax.block_until_ready(state.omega)
+                dt = round((time.time() - t1) / span, 4)
+                for i, met in enumerate(state.history[-span:]):
+                    rec = {"t": t + i, "events": [], "scanned": True,
+                           "n_registered": state.n_clients,
+                           "n_live": state.n_clients - len(state.left),
+                           "cohort": int(met.get("sampled", 0)),
+                           "skipped": bool(met.get("skipped", False)),
+                           "had_events": False,
+                           "sec_train": dt, "sec_round": dt}
+                    if "n_clusters" in met:
+                        rec["n_clusters"] = met["n_clusters"]
+                    log.records.append(rec)
+                t += span
+                continue
+
         evs = timeline.at(t)
         labels, drop_rate = [], 0.0
         t0 = time.time()
@@ -217,8 +285,8 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
             if busy or drop_rate > 0:
                 labels.append("full-participation:cohort-events-inapplicable")
         else:
-            rng_state, ids = engine.sample_clients(state, unavailable=busy)
-            state = state.replace(rng_state=rng_state)
+            adv, ids = engine.sample_clients(state, unavailable=busy)
+            state = engine.advance_rng(state, adv)
             if drop_rate > 0 and len(ids):
                 ids = ids[rng.random(len(ids)) >= drop_rate]
             if cohort_quantum > 1 and len(ids) > cohort_quantum:
@@ -232,6 +300,7 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
         if len(ids) == 0:
             rec["sec_round"] = round(time.time() - t0, 4)
             log.records.append(rec)
+            t += 1
             continue
         t1 = time.time()
         state, metrics = engine.run_round(state, ids)
@@ -255,4 +324,5 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
             if rec["incumbent_acc"] is not None and rec["joined_acc"] is not None:
                 rec["gap"] = round(rec["incumbent_acc"] - rec["joined_acc"], 5)
         log.records.append(rec)
+        t += 1
     return state, log

@@ -1,0 +1,354 @@
+"""Scan-vs-eager parity battery for the fully-jitted round loop.
+
+``engine.run_rounds`` collapses N rounds into one ``lax.scan`` with
+on-device cohort sampling; the eager ``run_round`` loop is the
+reference. These tests pin the strong claim: for every registered
+strategy the scanned loop is BITWISE equal to the eager one — final ω,
+every cluster-bank row, the partition, the per-round metric history and
+the advanced PRNG key — over multi-round runs, across churn boundaries
+(join/leave between scans), and through a checkpoint save/resume in the
+middle of a scanned run. Plus seeded sampler checks and the
+skipped-round semantics of an all-unavailable pool (the randomized
+hypothesis sweep of the sampler lives in
+``tests/test_sampler_properties.py``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.checkpoint import load_server_state, save_server_state
+from repro.data import rotated
+from repro.engine import sampler
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+EVAL = jax.jit(lambda p, b: simple.accuracy(p, b, TASK))
+
+ALL = ["stocfl", "fedavg", "fedprox", "ditto", "ifca", "cfl"]
+
+
+def _fed(n_clients=12, n_per=32, seed=3):
+    clients, tc, tests = rotated(n_clusters=2, n_clients=n_clients,
+                                 n_per=n_per, seed=seed)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    tests = {k: jax.tree.map(jnp.asarray, v) for k, v in tests.items()}
+    return clients, tc, tests
+
+
+def _params(seed=0):
+    return simple.init(jax.random.PRNGKey(seed), TASK)
+
+
+def _cfg(name, **kw):
+    kw.setdefault("local_steps", 2)
+    kw.setdefault("sample_rate", 0.5)
+    kw.setdefault("seed", 0)
+    kw.setdefault("rng_backend", "device")
+    if name == "stocfl":
+        kw.setdefault("cluster_backend", "device")
+    if name == "cfl":
+        kw["sample_rate"] = 1.0
+        # thresholds that actually exercise splits on the fixture
+        kw.setdefault("eps_rel", 0.9)
+        kw.setdefault("eps2", 1e-4)
+    return engine.EngineConfig(**kw)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def _assert_states_bitwise(a, b):
+    """The battery's definition of 'equal': params, bank rows,
+    partition, personal models, history (metrics incl.), round counter
+    and PRNG key — all exactly equal."""
+    assert _leaves_equal(a.omega, b.omega), "omega diverged"
+    assert set(a.models.keys()) == set(b.models.keys()), "bank keys diverged"
+    for k in a.models:
+        assert _leaves_equal(a.models[k], b.models[k]), f"bank row {k} diverged"
+    assert set(a.personal) == set(b.personal)
+    for k in a.personal:
+        assert _leaves_equal(a.personal[k], b.personal[k])
+    if a.clusters is not None:
+        assert a.clusters.assignment() == b.clusters.assignment(), \
+            "partition diverged"
+        assert sorted(a.clusters.seen) == sorted(b.clusters.seen)
+        for c in a.clusters.seen:
+            assert np.array_equal(np.asarray(a.clusters.reps[c]),
+                                  np.asarray(b.clusters.reps[c])), \
+                f"Ψ rep of client {c} diverged"
+    assert a.members == b.members
+    assert a.round == b.round
+    assert a.history == b.history, "metric history diverged"
+    assert a.left == b.left
+    if a.rng_key is not None or b.rng_key is not None:
+        assert np.array_equal(np.asarray(a.rng_key), np.asarray(b.rng_key)), \
+            "PRNG key diverged (draw sequences would fork)"
+
+
+def _init(name, clients, **kw):
+    return engine.init(name, LOSS, _params(), clients, _cfg(name, **kw),
+                       eval_fn=EVAL, arena=True)
+
+
+# ================================================== core parity battery
+@pytest.mark.parametrize("name", ALL)
+def test_scan_equals_eager_five_rounds(name):
+    """run_rounds(state, 5) ≡ 5 × run_round, bitwise, per strategy."""
+    clients, tc, tests = _fed()
+    a = _init(name, clients)
+    b = _init(name, clients)
+    for _ in range(5):
+        a, _ = engine.run_round(a)
+    b = engine.run_rounds(b, 5)
+    _assert_states_bitwise(a, b)
+    # and the evaluation protocol sees the same server
+    assert engine.evaluate(a, tests, tc) == engine.evaluate(b, tests, tc)
+
+
+def test_scan_equals_eager_ragged_arena_stocfl():
+    """RAGGED arena (one shard shorter than n_max): the eager StoCFL
+    round extracts Ψ from the same padded+masked arena row the scan
+    uses, so the rep bank, the partition, and everything downstream
+    stay bitwise equal between the two loops."""
+    clients, _, _ = _fed()
+    clients = list(clients)
+    clients[0] = jax.tree.map(lambda x: x[:17], clients[0])
+    a = _init("stocfl", clients)
+    assert a.ctx.arena.ragged
+    b = _init("stocfl", clients)
+    for _ in range(5):
+        a, _ = engine.run_round(a)
+    b = engine.run_rounds(b, 5)
+    _assert_states_bitwise(a, b)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_scan_splits_compose(name):
+    """run_rounds(2) then run_rounds(3) ≡ run_rounds(5): the carry
+    round-trips through ServerState without loss."""
+    clients, _, _ = _fed()
+    a = _init(name, clients)
+    b = _init(name, clients)
+    a = engine.run_rounds(a, 5)
+    b = engine.run_rounds(engine.run_rounds(b, 2), 3)
+    _assert_states_bitwise(a, b)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_scan_parity_across_churn_boundary(name):
+    """Scan 2 rounds, join one client + retire one, scan 3 more — vs the
+    same sequence run eagerly. Churn happens BETWEEN scans (the
+    simulator's event-free-span contract) and the trajectories must
+    stay bitwise equal through it."""
+    clients, _, _ = _fed()
+    extra, _, _ = _fed(n_clients=2, seed=11)
+
+    def drive(runner):
+        st = _init(name, clients)
+        st = runner(st, 2)
+        st, _cid = engine.join(st, extra[0])
+        st = engine.leave(st, 3)
+        return runner(st, 3)
+
+    def eager(st, n):
+        for _ in range(n):
+            st, _ = engine.run_round(st)
+        return st
+
+    def scanned(st, n):
+        return engine.run_rounds(st, n)
+
+    _assert_states_bitwise(drive(eager), drive(scanned))
+
+
+@pytest.mark.parametrize("name", ["stocfl", "ditto"])
+def test_scan_checkpoint_resume_mid_run(tmp_path, name):
+    """Scan 2 rounds, checkpoint, restore into a FRESH context, scan 3
+    more — bitwise equal to the uninterrupted 5-round scan AND to the
+    eager 5-round loop (device PRNG key round-trips through the
+    manifest)."""
+    clients, _, _ = _fed()
+    a = _init(name, clients)
+    a = engine.run_rounds(a, 2)
+    save_server_state(str(tmp_path / name), a)
+
+    b = _init(name, clients)
+    b = load_server_state(str(tmp_path / name), b)
+    assert np.array_equal(np.asarray(b.rng_key), np.asarray(a.rng_key))
+    b = engine.run_rounds(b, 3)
+
+    c = engine.run_rounds(_init(name, clients), 5)
+    d = _init(name, clients)
+    for _ in range(5):
+        d, _ = engine.run_round(d)
+    _assert_states_bitwise(b, c)
+    _assert_states_bitwise(b, d)
+
+
+def test_scan_spans_in_simulator_match_eager():
+    """simulate(scan_spans=True) ≡ simulate(scan_spans=False) bitwise:
+    event-free spans compile to scanned segments, churn rounds stay
+    eager, the trajectory (incl. history) is unchanged."""
+    from repro.sim import Timeline, simulate
+    from repro.sim.events import Join, Leave
+
+    clients, _, _ = _fed()
+    extra, _, _ = _fed(n_clients=2, seed=11)
+
+    def run(scan_spans):
+        tl = Timeline([Join(t=3, batch=extra[0], cluster=0),
+                       Leave(t=6, cid=2)])
+        st = _init("stocfl", clients)
+        st, log = simulate(st, tl, rounds=10, seed=0,
+                           scan_spans=scan_spans)
+        return st, log
+
+    a, log_a = run(False)
+    b, log_b = run(True)
+    _assert_states_bitwise(a, b)
+    assert any(r.get("scanned") for r in log_b.records), \
+        "scan_spans=True never actually scanned a span"
+    assert not any(r.get("scanned") for r in log_a.records)
+    # the per-round log agrees on everything but wall times / markers
+    for ra, rb in zip(log_a.records, log_b.records):
+        for key in ("t", "n_registered", "n_live", "cohort", "skipped"):
+            assert ra[key] == rb[key], (key, ra, rb)
+
+
+# ============================================== skipped-round semantics
+def test_all_unavailable_rounds_are_skipped_noops():
+    """Empty pool: eager run_round raises a readable ValueError; the
+    scanned loop (which cannot raise mid-trace) records skipped no-op
+    rounds instead — params untouched, history advanced."""
+    clients, _, _ = _fed()
+    st = _init("fedavg", clients)
+    everyone = frozenset(range(st.n_clients))
+    with pytest.raises(ValueError, match="non-empty cohort"):
+        ids = np.zeros(0, np.int64)
+        engine.run_round(st, ids)
+    out = engine.run_rounds(st, 3, unavailable=everyone)
+    assert out.round == st.round + 3
+    assert out.history[-3:] == ({"skipped": True, "sampled": 0},) * 3
+    assert _leaves_equal(out.omega, st.omega)
+
+
+def test_full_participation_ignores_unavailable():
+    """Availability does not apply to full participation (CFL trains
+    its whole partition — the simulator's rule): an 'everyone
+    unavailable' scan still trains every live client, bitwise equal to
+    the eager loop, instead of no-op'ing."""
+    clients, _, _ = _fed()
+    a = _init("cfl", clients)
+    b = _init("cfl", clients)
+    for _ in range(3):
+        a, _ = engine.run_round(a)
+    b = engine.run_rounds(b, 3, unavailable=frozenset(range(len(clients))))
+    _assert_states_bitwise(a, b)
+
+
+def test_scan_cache_respects_ragged_flip():
+    """An arena that turns ragged WITHOUT changing buffer shapes
+    (``arena.update`` with a shorter shard) must not reuse the maskless
+    compiled scan — the cache is keyed on trace-baked statics, so the
+    post-flip scan stays bitwise equal to the eager loop."""
+    clients, _, _ = _fed()
+    a = _init("fedavg", clients)
+    b = _init("fedavg", clients)
+    a = engine.run_rounds(a, 2)                     # compiles maskless
+    for _ in range(2):
+        b, _ = engine.run_round(b)
+    shorter = jax.tree.map(lambda x: x[:16], clients[0])
+    a.ctx.arena = a.ctx.arena.update(0, shorter)
+    b.ctx.arena = b.ctx.arena.update(0, shorter)
+    a.ctx.clients[0] = shorter
+    b.ctx.clients[0] = shorter
+    sizes = tuple(16 if i == 0 else s for i, s in enumerate(a.sizes))
+    a, b = a.replace(sizes=sizes), b.replace(sizes=sizes)
+    assert a.ctx.arena.ragged
+    a = engine.run_rounds(a, 3)
+    for _ in range(3):
+        b, _ = engine.run_round(b)
+    _assert_states_bitwise(a, b)
+
+
+def test_scan_preconditions_raise_eagerly():
+    """Missing arena / host rng / host partition fail with a host-side
+    ValueError naming the fix, not an opaque trace error."""
+    clients, _, _ = _fed()
+    no_arena = engine.init("fedavg", LOSS, _params(), clients,
+                           _cfg("fedavg"))
+    with pytest.raises(ValueError, match="arena"):
+        engine.run_rounds(no_arena, 2)
+    host_rng = engine.init("fedavg", LOSS, _params(), clients,
+                           _cfg("fedavg", rng_backend="numpy"), arena=True)
+    with pytest.raises(ValueError, match="rng_backend"):
+        engine.run_rounds(host_rng, 2)
+    host_part = engine.init(
+        "stocfl", LOSS, _params(), clients,
+        _cfg("stocfl", cluster_backend="numpy"), arena=True)
+    with pytest.raises(ValueError, match="cluster_backend"):
+        engine.run_rounds(host_part, 2)
+
+
+# =============================================== device sampler (seeded)
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_sampler_seeded_sweep(seed):
+    """Seeded sweep of the on-device draw: no duplicates, size =
+    ⌈rate·live⌉ (clipped to the pool), departed/unavailable never
+    drawn. (The randomized version hypothesis-sweeps the same claims in
+    test_sampler_properties.py.)"""
+    rng = np.random.default_rng(seed)
+    for _ in range(20):
+        n = int(rng.integers(2, 64))
+        rate = float(rng.uniform(0.05, 1.0))
+        left = set(rng.choice(n, rng.integers(0, n), replace=False).tolist())
+        avail = sorted(set(range(n)) - left)
+        busy = set(rng.choice(avail, rng.integers(0, len(avail)),
+                              replace=False).tolist()) if len(avail) > 1 else set()
+        pool = sampler.cohort_pool(n, left, busy)
+        live = n - len(left)
+        m = sampler.cohort_size(rate, live, int(pool.sum()))
+        assert m == min(int(np.ceil(rate * live)), int(pool.sum())) \
+            or (int(pool.sum()) == 0 and m == 0)
+        if m == 0:
+            continue
+        key = jax.random.PRNGKey(int(rng.integers(2**31)))
+        _, ids = sampler.draw_cohort(key, pool, m)
+        ids = set(np.asarray(ids).tolist())
+        assert len(ids) == m, "duplicate draw"
+        assert not (ids & left), "drew a departed client"
+        assert not (ids & busy), "drew an unavailable client"
+
+
+def test_sampler_deterministic_from_key():
+    """Identical key -> identical draw sequence (and the advanced keys
+    chain identically), on every call."""
+    pool = sampler.cohort_pool(16, {1, 5}, {2})
+    for seed in (0, 3, 99):
+        k1 = k2 = jax.random.PRNGKey(seed)
+        for _ in range(3):
+            k1, a = sampler.draw_cohort(k1, pool, 4)
+            k2, b = sampler.draw_cohort(k2, pool, 4)
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+            assert np.array_equal(np.asarray(k1), np.asarray(k2))
+
+
+def test_numpy_backend_unchanged_by_default():
+    """rng_backend defaults to the numpy compatibility mode: states
+    carry no device key and sampling still advances the bit-generator
+    (pre-scan checkpoints and the legacy parity tests depend on it)."""
+    clients, _, _ = _fed()
+    st = engine.init("fedavg", LOSS, _params(), clients,
+                     engine.EngineConfig(sample_rate=0.5, local_steps=1))
+    assert st.rng_key is None
+    before = dict(st.rng_state)
+    st2, _ = engine.run_round(st)
+    assert st2.rng_state != before and st2.rng_key is None

@@ -1,0 +1,53 @@
+"""Hypothesis properties for the on-device cohort sampler
+(``repro.engine.sampler``) — the randomized counterpart of the seeded
+sweep in ``tests/test_round_scan.py``: no duplicate draws, cohort size
+= ⌈rate·live⌉ clipped to the pool, departed/unavailable ids never
+drawn, and identical draw sequences from identical keys.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.engine import sampler
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=hst.integers(2, 64), rate=hst.floats(0.05, 1.0),
+       seed=hst.integers(0, 2**31 - 1), data=hst.data())
+def test_sampler_properties(n, rate, seed, data):
+    """No duplicates, size = ⌈rate·live⌉ (pool-clipped), masked ids
+    never drawn — over hypothesis-chosen populations and masks."""
+    left = set(data.draw(hst.sets(hst.integers(0, n - 1), max_size=n - 1)))
+    avail = sorted(set(range(n)) - left)
+    busy = set(data.draw(hst.sets(hst.sampled_from(avail),
+                                  max_size=len(avail) - 1))) \
+        if len(avail) > 1 else set()
+    pool = sampler.cohort_pool(n, left, busy)
+    live = n - len(left)
+    m = sampler.cohort_size(rate, live, int(pool.sum()))
+    assert m == min(int(np.ceil(rate * live)), int(pool.sum()))
+    if m == 0:
+        return
+    key = jax.random.PRNGKey(seed)
+    _, ids = sampler.draw_cohort(key, pool, m)
+    ids = set(np.asarray(ids).tolist())
+    assert len(ids) == m, "duplicate draw"
+    assert not (ids & left), "drew a departed client"
+    assert not (ids & busy), "drew an unavailable client"
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=hst.integers(0, 2**31 - 1))
+def test_sampler_deterministic_from_key(seed):
+    """Identical key -> identical draw sequence and identically-chained
+    advanced keys."""
+    pool = sampler.cohort_pool(16, {1, 5}, {2})
+    k1 = k2 = jax.random.PRNGKey(seed)
+    for _ in range(3):
+        k1, a = sampler.draw_cohort(k1, pool, 4)
+        k2, b = sampler.draw_cohort(k2, pool, 4)
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert np.array_equal(np.asarray(k1), np.asarray(k2))
