@@ -21,8 +21,22 @@ the same data — the parity battery (tests/test_round_scan.py) asserts
 the trajectories are bitwise equal; this bench only asks which one is
 faster.
 
+Besides the timing sweep, ``--compile-sets`` measures the OTHER cost
+the fused scan is designed to bound: the number of distinct XLA
+programs compiled per strategy across a population-churn timeline
+(cold start, then repeated join → train → leave → train cycles),
+counted with ``repro.analysis.sanitize.compile_budget``.  The pow2
+shape quantization (cohort pool / sizes / arena row map / Ditto
+personal carry) pins the warm-cycle count to 0 for every strategy
+except stocfl's host bank rebuild (data-dependent merge shapes — see
+docs/ANALYSIS.md); the regression battery in
+``tests/test_compile_budget.py`` gates exactly these numbers.
+
   PYTHONPATH=src python -m benchmarks.round_scan              # full sweep
   PYTHONPATH=src python -m benchmarks.round_scan --smoke      # CI-sized
+  PYTHONPATH=src python -m benchmarks.round_scan --compile-sets
+                         # churn compile-count sweep only; merges the
+                         # ``compile_sets`` section into an existing out file
 """
 from __future__ import annotations
 
@@ -111,6 +125,46 @@ def run_point(n_clients: int, rounds: int, sample_rate: float,
     }
 
 
+def compile_sets(n_clients: int = 12, cycles: int = 3) -> dict:
+    """Distinct-XLA-program counts per strategy over a churn timeline:
+    ``cold`` is the full first-contact compile (init + first scanned
+    span), ``cycle_i`` the programs added by the i-th join → train →
+    leave → train cycle. Shape quantization makes the warm cycles 0
+    for every strategy except stocfl's host bank rebuild."""
+    from repro.analysis import sanitize
+    from repro.models import simple as _simple
+
+    eval_fn = jax.jit(lambda p, b: _simple.accuracy(p, b, TASK))
+    extra = _federation(4, 32, seed=11)
+    out = {}
+    for name in ("stocfl", "fedavg", "fedprox", "ditto", "ifca", "cfl"):
+        kw = dict(tau=0.5, lam=0.05, lr=0.1, local_steps=2, sample_rate=0.5,
+                  seed=0, rng_backend="device")
+        if name == "stocfl":
+            kw["cluster_backend"] = "device"
+        if name == "cfl":
+            kw.update(sample_rate=1.0, eps_rel=0.9, eps2=1e-4)
+        cfg = engine.EngineConfig(**kw)
+        clients = _federation(n_clients, 32)
+        counts = {}
+        with sanitize.compile_budget() as log:
+            st = engine.init(name, LOSS,
+                             _simple.init(jax.random.PRNGKey(0), TASK),
+                             clients, cfg, eval_fn=eval_fn, arena=True)
+            st = engine.run_rounds(st, 2)
+        counts["cold"] = log.count
+        for i in range(cycles):
+            with sanitize.compile_budget() as log:
+                st, cid = engine.join(st, extra[i])
+                st = engine.run_rounds(st, 2)
+                st = engine.leave(st, cid)
+                st = engine.run_rounds(st, 2)
+            counts[f"cycle_{i + 1}"] = log.count
+        out[name] = counts
+        print(json.dumps({name: counts}))
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -118,7 +172,31 @@ def main():
     ap.add_argument("--out", default="BENCH_rounds.json")
     ap.add_argument("--rounds", type=int, default=0,
                     help="rounds per timed span (0 = per-size default)")
+    ap.add_argument("--compile-sets", action="store_true",
+                    help="measure per-strategy compile counts under churn "
+                         "and merge them into --out (skips the timing sweep)")
     args = ap.parse_args()
+
+    if args.compile_sets:
+        try:
+            with open(args.out) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            doc = {"bench": "round_scan"}
+        doc["compile_sets"] = {
+            "task": "distinct XLA programs per strategy: cold start, then "
+                    "join/train/leave/train churn cycles (12 clients, "
+                    "2-round spans; counted by analysis.sanitize."
+                    "compile_budget). Strategies run in-order in ONE "
+                    "process, so programs shared across strategies (local "
+                    "SGD, eval) are attributed to the first one measured "
+                    "(stocfl); warm-cycle counts are the regression-gated "
+                    "signal (tests/test_compile_budget.py)",
+            "results": compile_sets()}
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {args.out}")
+        return
 
     if args.smoke:
         points = [(24, 10, 0.5, 0, 16), (48, 10, 0.25, 0, 16)]

@@ -1,0 +1,26 @@
+"""Correctness tooling for the reproduction: a static JAX hazard
+linter and runtime sanitizers, both CI gates.
+
+``repro.analysis.jaxlint`` is an AST pass over ``src/repro`` with five
+rules (R1 PRNG key reuse, R2 host sync in traced/hot code, R3 Python
+control flow on traced values, R4 module-scope jnp computation, R5
+dtype-widening literals in kernels) and an inline waiver syntax that
+keeps intentional hazards annotated, not silenced. ``sanitize``
+provides composable runtime context managers — ``compile_budget`` (pin
+the XLA compile count), ``no_transfer`` (zero host↔device transfers),
+``nan_guard`` (fail on NaN/Inf) — used by the per-strategy compile-set
+pinning and zero-transfer batteries in ``tests/``.
+
+See ``docs/ANALYSIS.md`` for rules, examples, and the sanitizer API.
+"""
+from repro.analysis.jaxlint import (Finding, LintReport, RULES, Waiver,
+                                    lint_file, lint_paths, lint_source)
+from repro.analysis.sanitize import (CompileBudgetExceeded, CompileLog,
+                                     compile_budget, nan_guard, no_transfer)
+
+__all__ = [
+    "Finding", "Waiver", "LintReport", "RULES",
+    "lint_source", "lint_file", "lint_paths",
+    "compile_budget", "CompileBudgetExceeded", "CompileLog",
+    "no_transfer", "nan_guard",
+]

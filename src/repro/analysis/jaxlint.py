@@ -1,0 +1,762 @@
+"""AST-based JAX hazard linter for the repro codebase.
+
+The compiled-program set, device residency, and RNG discipline are
+*correctness surfaces* in this reproduction — a silent host sync inside
+the scanned round body or a reused PRNG key regresses exactly the
+properties the parity and churn batteries pin. This linter makes those
+properties checkable statically, so they gate CI instead of relying on
+per-PR spot checks.
+
+Rules
+-----
+R1  PRNG key reuse: a key (``jax.random.PRNGKey`` / ``split`` /
+    ``fold_in`` result, or a ``key``-named parameter) consumed by more
+    than one ``jax.random.*`` call without an intervening
+    ``split``/``fold_in`` reassignment. Same-key draws are correlated —
+    the ``sampler.py``/``models`` split idiom, now enforced.
+R2  Host sync in traced/hot code: ``.item()``, ``.tolist()``,
+    ``float()``/``int()``/``bool()`` on a device value, ``np.*``
+    coercions (``asarray``/``array``/...), or ``jax.device_get`` inside
+    a function reachable from a jitted entry point (scan step bodies,
+    ``*_impl`` transitions, kernels) or marked ``# jaxlint: hot-path``.
+    Each is a device→host round-trip (or a trace error) on the path the
+    scan-vs-eager and zero-transfer batteries protect.
+R3  Python control flow on a traced value: ``if``/``while``/``for``
+    over a device value inside traced code — a trace-time
+    ``TracerBoolConversionError`` at best, a silently baked-in branch at
+    worst. Use ``lax.cond``/``lax.select``/``jnp.where``.
+R4  Module-scope ``jnp.``/``jax.random.`` computation: initializes the
+    backend (and compiles) at import time, before ``JAX_PLATFORMS`` /
+    flags / test harnesses can intervene.
+R5  Bare float literal in kernel arithmetic: in ``kernels/`` files, a
+    Python float literal as a direct arithmetic operand promotes the
+    expression through weak-f32 — silent upcasts in Pallas tiles. Cast
+    through the operand dtype instead (``jnp.float32(0.5)``,
+    ``x.dtype``-typed constants), or waive where fp32 accumulate is the
+    point.
+
+Waivers
+-------
+An intentional hazard is *annotated, not silenced*::
+
+    w = np.asarray(x)  # jaxlint: disable=R2 — host merge path by design
+
+The waiver comment sits on the offending line (or the line above, or
+the ``def`` line to cover a whole function) and MUST carry a
+justification after the rule list (``—``, ``--`` or ``:`` separated);
+``--strict`` fails on reason-less waivers. ``# jaxlint: hot-path`` on a
+``def`` line opts that function (and everything it calls) into the R2
+host-sync scope even when it is not reachable from a jitted entry point
+— used for per-round host-side code like ``ClusterBank`` scatters.
+
+Entry points: functions passed to ``jax.jit``/``vmap``/``pmap``/
+``lax.scan``/``lax.map``/``lax.cond``/``pl.pallas_call`` (or decorated
+with jit), functions whose name matches ``step``/``scan_fn``/``core``/
+``*_impl``/``*_kernel``, and — transitively — every same-module
+function they call, nested defs included.
+
+API: ``lint_paths(paths)`` returns a ``LintReport``; the CLI wrapper is
+``scripts/lint_jax.py`` (``--strict`` gates CI).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import io
+import os
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["Finding", "Waiver", "LintReport", "RULES",
+           "lint_source", "lint_file", "lint_paths"]
+
+RULES: Dict[str, str] = {
+    "R1": "PRNG key reused without split/fold_in",
+    "R2": "host sync inside traced/hot-path code",
+    "R3": "Python control flow on a traced value",
+    "R4": "module-scope jnp/jax.random computation at import time",
+    "R5": "bare float literal in kernel arithmetic (dtype widening)",
+}
+
+# function names that mark a def as a traced entry point even when it is
+# only called through a first-class reference (scan bodies are returned,
+# not decorated)
+_ENTRY_NAME_PATTERNS = ("step", "scan_fn", "core", "*_impl", "*_kernel",
+                        "kernel")
+# jax transforms whose callable argument executes under trace
+_TRANSFORM_CALLS = {
+    ("jax", "jit"), ("jax", "vmap"), ("jax", "pmap"), ("jax", "grad"),
+    ("jax", "value_and_grad"), ("jax", "checkpoint"), ("jax", "remat"),
+    ("lax", "scan"), ("lax", "map"), ("lax", "cond"), ("lax", "switch"),
+    ("lax", "while_loop"), ("lax", "fori_loop"), ("lax", "associative_scan"),
+    ("pl", "pallas_call"), ("pallas", "pallas_call"),
+}
+_TRANSFORM_BARE = {"jit", "pallas_call", "pjit", "shard_map"}
+# jax.random consumers for R1 (first positional argument is the key)
+_KEY_CONSUMERS = {
+    "normal", "uniform", "bernoulli", "randint", "choice", "permutation",
+    "categorical", "gumbel", "truncated_normal", "laplace", "exponential",
+    "beta", "gamma", "poisson", "dirichlet", "split", "fold_in", "bits",
+}
+_KEY_REFRESHERS = {"split", "fold_in", "PRNGKey", "key", "wrap_key_data"}
+# numpy-side coercions that force a device→host copy when fed a jax array
+_NP_SYNC_FUNCS = {
+    "asarray", "array", "copy", "fromiter", "atleast_1d", "atleast_2d",
+    "unique", "nonzero", "asanyarray", "ascontiguousarray", "save", "savez",
+}
+_METHOD_SYNCS = {"item", "tolist", "to_py"}
+
+_WAIVER_RE = re.compile(
+    r"#\s*jaxlint:\s*disable=([A-Z0-9,\s]+?)"
+    r"(?:\s*(?:—|--|–|:)\s*(.*))?$")
+_HOT_RE = re.compile(r"#\s*jaxlint:\s*hot-path\b")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One lint hit: rule id, location, message, and — when an inline
+    waiver covers it — the recorded justification."""
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    waived: bool = False
+    waiver_reason: Optional[str] = None
+
+    def format(self) -> str:
+        """``path:line:col: RULE message`` (``[waived: reason]`` suffix
+        when an inline waiver covers the finding)."""
+        tag = f" [waived: {self.waiver_reason}]" if self.waived else ""
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"{self.message}{tag}")
+
+
+@dataclasses.dataclass
+class Waiver:
+    """One inline ``# jaxlint: disable=...`` annotation (rule set,
+    justification, and whether any finding actually matched it)."""
+    path: str
+    line: int
+    rules: Tuple[str, ...]
+    reason: str
+    used: bool = False
+
+
+@dataclasses.dataclass
+class LintReport:
+    """Aggregated lint result over a path set.
+
+    ``findings`` carries every hit (waived ones included, flagged);
+    ``waivers`` is the full waiver inventory — the CI artifact that
+    keeps intentional hazards auditable.
+    """
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    waivers: List[Waiver] = dataclasses.field(default_factory=list)
+
+    @property
+    def errors(self) -> List[Finding]:
+        """Unwaived findings — the set ``--strict`` gates on."""
+        return [f for f in self.findings if not f.waived]
+
+    def reasonless_waivers(self) -> List[Waiver]:
+        """Waivers with no justification text (strict mode rejects
+        them: an unexplained waiver is a silenced finding)."""
+        return [w for w in self.waivers if not w.reason.strip()]
+
+    def unused_waivers(self) -> List[Waiver]:
+        """Waivers no finding matched — stale annotations worth pruning
+        (reported, not gated: rules evolve)."""
+        return [w for w in self.waivers if not w.used]
+
+    def to_json(self) -> dict:
+        """JSON document (findings + waiver inventory) for the CI
+        artifact."""
+        return {
+            "findings": [dataclasses.asdict(f) for f in self.findings],
+            "waivers": [dataclasses.asdict(w) for w in self.waivers],
+            "summary": {
+                "files_with_findings":
+                    len({f.path for f in self.findings}),
+                "errors": len(self.errors),
+                "waived": sum(1 for f in self.findings if f.waived),
+                "waivers": len(self.waivers),
+                "unused_waivers": len(self.unused_waivers()),
+            },
+        }
+
+
+# ===================================================================== tokens
+def _scan_comments(source: str):
+    """(waivers by line, hot-path-marked lines) from the token stream —
+    comments are invisible to ``ast``, so waiver/hot markers are read
+    off ``tokenize``."""
+    waivers: Dict[int, Waiver] = {}
+    hot_lines: Set[int] = set()
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            line = tok.start[0]
+            m = _WAIVER_RE.search(tok.string)
+            if m:
+                rules = tuple(r.strip() for r in m.group(1).split(",")
+                              if r.strip())
+                waivers[line] = Waiver(path="", line=line, rules=rules,
+                                       reason=(m.group(2) or "").strip())
+            if _HOT_RE.search(tok.string):
+                hot_lines.add(line)
+    except tokenize.TokenError:
+        pass
+    return waivers, hot_lines
+
+
+# ============================================================= AST utilities
+def _dotted(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """``a.b.c`` attribute chains as a name tuple (None for anything
+    dynamic)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _is_transform_call(call: ast.Call) -> bool:
+    dn = _dotted(call.func)
+    if not dn:
+        return False
+    if len(dn) >= 2 and tuple(dn[-2:]) in _TRANSFORM_CALLS:
+        return True
+    return dn[-1] in _TRANSFORM_BARE
+
+
+_FN_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _own_nodes(fn_node: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function's body WITHOUT descending into nested function
+    definitions (each nested def is analyzed in its own scope)."""
+    stack = [fn_node]
+    first = True
+    while stack:
+        node = stack.pop()
+        if not first and isinstance(node, _FN_NODES):
+            continue
+        first = False
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _assigned_names(target: ast.AST) -> List[str]:
+    names = []
+    for sub in ast.walk(target):
+        if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Store):
+            names.append(sub.id)
+    return names
+
+
+# ================================================================ call graph
+class _FnInfo:
+    """One function/lambda definition: AST node, qualname, nesting, and
+    the simple names it calls (same-module resolution only)."""
+
+    def __init__(self, node, qualname: str, parent: Optional["_FnInfo"]):
+        self.node = node
+        self.qualname = qualname
+        self.parent = parent
+        self.calls: Set[str] = set()
+        self.refs: Set[str] = set()   # names referenced (incl. as args)
+        self.hot = False
+        self.entry = False
+
+
+class _Indexer(ast.NodeVisitor):
+    """Collect every function def with qualnames, per-function call and
+    reference sets, and entry-point marks (jit decorators, transform
+    callable arguments, entry name patterns, hot-path comments)."""
+
+    def __init__(self, hot_lines: Set[int]):
+        self.fns: Dict[ast.AST, _FnInfo] = {}
+        self.by_name: Dict[str, List[_FnInfo]] = {}
+        self.stack: List[_FnInfo] = []
+        self.hot_lines = hot_lines
+        self.pending_entry_nodes: Set[ast.AST] = set()
+        self.entry_names: Set[str] = set()
+
+    def _enter(self, node, name: str):
+        qual = (self.stack[-1].qualname + "." + name if self.stack else name)
+        info = _FnInfo(node, qual, self.stack[-1] if self.stack else None)
+        probe = {node.lineno, node.lineno - 1}
+        if isinstance(getattr(node, "body", None), list) and node.body:
+            probe.add(node.body[0].lineno - 1)
+        if probe & self.hot_lines:
+            info.hot = True
+        if any(fnmatch.fnmatch(name, pat) for pat in _ENTRY_NAME_PATTERNS):
+            info.entry = True
+        if node in self.pending_entry_nodes:
+            info.entry = True
+        for deco in getattr(node, "decorator_list", []):
+            target = deco.func if isinstance(deco, ast.Call) else deco
+            dn = _dotted(target)
+            sub_dns = [
+                _dotted(a) for a in getattr(deco, "args", [])]
+            if (dn and ("jit" in dn or "pallas_call" in dn)) or any(
+                    d and "jit" in d for d in sub_dns if d):
+                info.entry = True
+        self.fns[node] = info
+        self.by_name.setdefault(name, []).append(info)
+        self.stack.append(info)
+
+    def visit_FunctionDef(self, node):
+        self._enter(node, node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        self._enter(node, "<lambda>")
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def visit_Call(self, node):
+        if self.stack:
+            dn = _dotted(node.func)
+            if dn:
+                self.stack[-1].calls.add(dn[-1])
+        if _is_transform_call(node):
+            # the callable argument(s) execute under trace
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            for arg in args:
+                if isinstance(arg, _FN_NODES):
+                    self.pending_entry_nodes.add(arg)
+                else:
+                    dn = _dotted(arg)
+                    if dn:
+                        self.entry_names.add(dn[-1])
+        self.generic_visit(node)
+
+    def finish(self):
+        """Resolve by-name entry marks collected during the walk (a
+        transform may reference a function defined later)."""
+        for name in self.entry_names:
+            for info in self.by_name.get(name, []):
+                info.entry = True
+
+
+def _closure(idx: _Indexer, roots: List[_FnInfo]) -> Set[_FnInfo]:
+    """Transitive same-module call closure from ``roots`` (nested defs
+    reached through calls or first-class references)."""
+    seen: Set[_FnInfo] = set()
+    work = list(roots)
+    while work:
+        info = work.pop()
+        if info in seen:
+            continue
+        seen.add(info)
+        for name in info.calls | info.refs:
+            for callee in idx.by_name.get(name, []):
+                if callee not in seen:
+                    work.append(callee)
+    return seen
+
+
+# ============================================================ device tracking
+_DEVICE_ROOTS = {"jnp", "lax"}
+_DEVICE_JAX_SUBMODULES = {"random", "lax", "ops", "nn", "numpy", "scipy"}
+# attribute reads that yield static Python metadata, not array values
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "sharding"}
+# conventionally host-static parameter names (orchestrator/config
+# objects threaded through builders, never traced)
+_STATIC_PARAM_NAMES = {"self", "cls", "ctx", "cfg", "config"}
+# annotations marking a parameter as a static Python scalar/flag
+_STATIC_PARAM_ANNOTATIONS = {"bool", "int", "str"}
+
+
+def _device_call(call: ast.Call) -> bool:
+    dn = _dotted(call.func)
+    if not dn:
+        return False
+    if dn[0] in _DEVICE_ROOTS:
+        return True
+    return dn[0] == "jax" and len(dn) > 1 and \
+        dn[1] in _DEVICE_JAX_SUBMODULES
+
+
+def _expr_is_device(node: ast.AST, device_vars: Set[str]) -> bool:
+    """Conservatively: does this expression (syntactically) produce or
+    contain a traced/device value? ``x.shape``-style static metadata
+    reads are pruned — ``int(parent.shape[0])`` is not a sync."""
+    stack = [node]
+    while stack:
+        sub = stack.pop()
+        if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+            continue
+        if isinstance(sub, ast.Name) and sub.id in device_vars:
+            return True
+        if isinstance(sub, ast.Call) and _device_call(sub):
+            return True
+        stack.extend(ast.iter_child_nodes(sub))
+    return False
+
+
+def _is_identity_test(test: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` — identity checks never force
+    a tracer bool conversion; they are the idiomatic static-arg
+    dispatch inside jitted code."""
+    return isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+
+
+# ================================================================== rules
+class _Linter:
+    def __init__(self, path: str, source: str, tree: ast.Module,
+                 kernel_file: bool):
+        self.path = path
+        self.source = source
+        self.tree = tree
+        self.kernel_file = kernel_file
+        self.findings: List[Finding] = []
+        waivers, hot_lines = _scan_comments(source)
+        for w in waivers.values():
+            w.path = path
+        self.waivers = waivers
+        self.idx = _Indexer(hot_lines)
+        # record first-class references so `lax.cond(p, observe, ...)`
+        # and plain `f = step` link the call graph
+        self.idx.visit(tree)
+        self.idx.finish()
+        for info in self.idx.fns.values():
+            for sub in _own_nodes(info.node):
+                if isinstance(sub, ast.Name) and \
+                        isinstance(sub.ctx, ast.Load):
+                    if sub.id in self.idx.by_name:
+                        info.refs.add(sub.id)
+        self.traced = _closure(
+            self.idx, [i for i in self.idx.fns.values() if i.entry])
+        self.hot = _closure(
+            self.idx, [i for i in self.idx.fns.values() if i.hot])
+
+    # ------------------------------------------------------------- report
+    def add(self, rule: str, node: ast.AST, message: str):
+        self.findings.append(Finding(
+            rule=rule, path=self.path, line=node.lineno,
+            col=getattr(node, "col_offset", 0), message=message))
+
+    # ----------------------------------------------------------------- R1
+    def check_r1(self):
+        """Per-function source-order scan: key-typed names consumed
+        twice without a ``split``/``fold_in`` refresh between."""
+        for info in self.idx.fns.values():
+            node = info.node
+            key_vars: Set[str] = set()
+            args = getattr(node, "args", None)
+            if args is not None:
+                for a in list(args.args) + list(args.kwonlyargs):
+                    if a.arg == "key" or a.arg.endswith("_key") \
+                            or a.arg == "rng":
+                        key_vars.add(a.arg)
+            events = []     # (line, col, kind, payload)
+            for sub in _own_nodes(node):
+                if isinstance(sub, ast.Assign) and \
+                        isinstance(sub.value, ast.Call):
+                    dn = _dotted(sub.value.func)
+                    if dn and dn[-1] in _KEY_REFRESHERS:
+                        names = []
+                        for t in sub.targets:
+                            names += _assigned_names(t)
+                        events.append((sub.lineno, sub.col_offset,
+                                       "refresh", (names, sub.value)))
+                if isinstance(sub, ast.Call):
+                    dn = _dotted(sub.func)
+                    if (dn and dn[-1] in _KEY_CONSUMERS
+                            and ("random" in dn or len(dn) == 1)
+                            and sub.args
+                            and isinstance(sub.args[0], ast.Name)):
+                        events.append((sub.lineno, sub.args[0].col_offset,
+                                       "consume", (sub.args[0].id, sub,
+                                                   dn[-1])))
+            consumed: Dict[str, ast.AST] = {}
+            for line, col, kind, payload in sorted(
+                    events, key=lambda e: (e[0], e[1])):
+                if kind == "refresh":
+                    names, _call = payload
+                    key_vars.update(names)
+                    for n in names:
+                        consumed.pop(n, None)
+                else:
+                    kname, call, fn_name = payload
+                    if kname not in key_vars:
+                        continue
+                    if fn_name in _KEY_REFRESHERS:
+                        continue    # split(key) alone is not a draw
+                    if kname in consumed:
+                        self.add("R1", call,
+                                 f"key {kname!r} consumed again without "
+                                 f"split/fold_in (draws correlate; "
+                                 f"first use at line "
+                                 f"{consumed[kname].lineno})")
+                    else:
+                        consumed[kname] = call
+
+    # ------------------------------------------------------------- R2 + R3
+    def check_r2_r3(self):
+        for info in set(self.traced) | set(self.hot):
+            fn_node = info.node
+            traced_fn = info in self.traced
+            hot_fn = info in self.hot
+            device_vars: Set[str] = set()
+            if traced_fn:
+                args = getattr(fn_node, "args", None)
+                if args is not None:
+                    for a in list(args.args) + list(args.kwonlyargs):
+                        if a.arg in _STATIC_PARAM_NAMES:
+                            continue
+                        ann = getattr(a, "annotation", None)
+                        if isinstance(ann, ast.Name) and \
+                                ann.id in _STATIC_PARAM_ANNOTATIONS:
+                            continue
+                        device_vars.add(a.arg)
+            for stmt in sorted(
+                    (s for s in _own_nodes(fn_node)
+                     if isinstance(s, (ast.Assign, ast.For, ast.If,
+                                       ast.While, ast.Call))),
+                    key=lambda s: (s.lineno, s.col_offset)):
+                if isinstance(stmt, ast.Assign):
+                    if _expr_is_device(stmt.value, device_vars):
+                        for t in stmt.targets:
+                            device_vars.update(_assigned_names(t))
+                elif isinstance(stmt, ast.For):
+                    # only direct device iterables: `for i in idx` /
+                    # `for v in jnp.arange(n)`. Composites like
+                    # `zip(names, arrays)` iterate a static-length
+                    # container of tracers, which is fine.
+                    it = stmt.iter
+                    direct_device = (
+                        (isinstance(it, ast.Name) and
+                         it.id in device_vars)
+                        or (isinstance(it, ast.Call) and
+                            _device_call(it))
+                        or (isinstance(it, ast.Attribute) and
+                            it.attr not in _STATIC_ATTRS and
+                            _expr_is_device(it, device_vars)))
+                    if traced_fn and direct_device:
+                        self.add("R3", stmt,
+                                 "Python for-loop over a traced value "
+                                 "(unrolls at trace time or fails) — "
+                                 "use lax.scan/lax.map")
+                elif isinstance(stmt, (ast.If, ast.While)):
+                    if traced_fn and \
+                            not _is_identity_test(stmt.test) and \
+                            _expr_is_device(stmt.test, device_vars):
+                        self.add("R3", stmt,
+                                 "Python branch on a traced value "
+                                 "(TracerBoolConversionError or baked-"
+                                 "in branch) — use lax.cond/jnp.where")
+                else:
+                    self._check_sync_call(stmt, device_vars, traced_fn,
+                                          hot_fn, fn_node)
+
+    def _check_sync_call(self, call: ast.Call, device_vars: Set[str],
+                         traced_fn: bool, hot_fn: bool, fn_node):
+        where = ("inside traced code" if traced_fn
+                 else "on the hot path")
+        if isinstance(call.func, ast.Attribute) and \
+                call.func.attr in _METHOD_SYNCS:
+            if traced_fn or hot_fn or \
+                    _expr_is_device(call.func.value, device_vars):
+                self.add("R2", call,
+                         f".{call.func.attr}() forces a device→host "
+                         f"sync {where}")
+            return
+        dn = _dotted(call.func)
+        if not dn:
+            return
+        name = dn[-1]
+        # float()/int()/bool() host coercions
+        if dn == (name,) and name in ("float", "int", "bool") and call.args:
+            arg = call.args[0]
+            if isinstance(arg, ast.Constant):
+                return
+            if _expr_is_device(arg, device_vars):
+                self.add("R2", call,
+                         f"{name}() on a device value blocks and copies "
+                         f"to host {where} — keep it a jnp scalar or "
+                         "hoist out of the hot path")
+            elif hot_fn and not traced_fn and self._inside_loop(call,
+                                                                fn_node):
+                self.add("R2", call,
+                         f"{name}() in a per-element Python loop {where}"
+                         " — vectorize (np.fromiter / one asarray over "
+                         "the whole sequence)")
+            return
+        # np.* coercions
+        if dn[0] in ("np", "numpy") and name in _NP_SYNC_FUNCS:
+            if traced_fn:
+                self.add("R2", call,
+                         f"np.{name}() inside traced code — a traced "
+                         "operand raises TracerArrayConversionError; a "
+                         "device operand silently syncs to host")
+            elif hot_fn:
+                self.add("R2", call,
+                         f"np.{name}() on the hot path forces a "
+                         "device→host copy when fed a jax array")
+            return
+        # jax.device_get
+        if name == "device_get" and (traced_fn or hot_fn):
+            self.add("R2", call,
+                     f"jax.device_get is an explicit host transfer "
+                     f"{where} — move it off the per-round path")
+
+    def _inside_loop(self, node: ast.AST, fn_node) -> bool:
+        for parent in _own_nodes(fn_node):
+            if isinstance(parent, (ast.For, ast.While, ast.ListComp,
+                                   ast.GeneratorExp, ast.SetComp,
+                                   ast.DictComp)) and parent is not node:
+                if any(sub is node for sub in ast.walk(parent)):
+                    return True
+        return False
+
+    # ----------------------------------------------------------------- R4
+    def check_r4(self):
+        for stmt in self.tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef, ast.Import, ast.ImportFrom)):
+                continue
+            if isinstance(stmt, ast.If):
+                # `if __name__ == "__main__":` runs at script exec, not
+                # import — out of R4's scope
+                t = stmt.test
+                if isinstance(t, ast.Compare) and \
+                        isinstance(t.left, ast.Name) and \
+                        t.left.id == "__name__":
+                    continue
+            for sub in ast.walk(stmt):
+                if isinstance(sub, _FN_NODES):
+                    continue
+                if not isinstance(sub, ast.Call):
+                    continue
+                dn = _dotted(sub.func)
+                if not dn:
+                    continue
+                if dn[0] == "jnp" or (dn[0] == "jax" and len(dn) > 1
+                                      and dn[1] in ("numpy", "random")):
+                    self.add("R4", sub,
+                             f"module-scope {'.'.join(dn)}() runs at "
+                             "import: initializes the backend and "
+                             "compiles before flags/harnesses can "
+                             "intervene — build lazily")
+
+    # ----------------------------------------------------------------- R5
+    def check_r5(self):
+        if not self.kernel_file:
+            return
+        for info in self.traced:
+            for sub in _own_nodes(info.node):
+                if not isinstance(sub, ast.BinOp):
+                    continue
+                for side in (sub.left, sub.right):
+                    if isinstance(side, ast.Constant) and \
+                            isinstance(side.value, float):
+                        other = sub.right if side is sub.left else sub.left
+                        if isinstance(other, ast.Constant):
+                            continue
+                        self.add("R5", side,
+                                 f"bare float literal {side.value!r} in "
+                                 "kernel arithmetic promotes through "
+                                 "weak-f32 — cast via the operand dtype "
+                                 "(jnp.float32(...) / x.dtype)")
+
+    # ================================================================ driver
+    def run(self) -> Tuple[List[Finding], List[Waiver]]:
+        self.check_r1()
+        self.check_r2_r3()
+        self.check_r4()
+        self.check_r5()
+        # de-dup (a node can be reached through several scopes)
+        uniq = {}
+        for f in self.findings:
+            uniq.setdefault((f.rule, f.line, f.col, f.message), f)
+        self.findings = sorted(uniq.values(),
+                               key=lambda f: (f.line, f.col, f.rule))
+        self._apply_waivers()
+        return self.findings, list(self.waivers.values())
+
+    def _def_cover(self) -> Dict[int, ast.AST]:
+        """line -> innermost def whose def-line waiver covers it."""
+        cover: Dict[int, ast.AST] = {}
+        for fn_node in self.idx.fns:
+            if not hasattr(fn_node, "body"):
+                continue
+            end = getattr(fn_node, "end_lineno", fn_node.lineno)
+            for line in range(fn_node.lineno, end + 1):
+                prev = cover.get(line)
+                if prev is None or fn_node.lineno > prev.lineno:
+                    cover[line] = fn_node
+        return cover
+
+    def _apply_waivers(self):
+        cover = self._def_cover()
+        for f in self.findings:
+            for line in (f.line, f.line - 1):
+                w = self.waivers.get(line)
+                if w and f.rule in w.rules:
+                    f.waived, f.waiver_reason, w.used = True, w.reason, True
+                    break
+            if f.waived:
+                continue
+            fn = cover.get(f.line)
+            if fn is not None:
+                for line in (fn.lineno, fn.lineno - 1):
+                    w = self.waivers.get(line)
+                    if w and f.rule in w.rules:
+                        f.waived, f.waiver_reason, w.used = \
+                            True, w.reason, True
+                        break
+
+
+# ================================================================ public API
+def lint_source(source: str, path: str = "<string>") -> Tuple[
+        List[Finding], List[Waiver]]:
+    """Lint one source string; returns ``(findings, waivers)`` with
+    waivers already applied (waived findings stay in the list,
+    marked)."""
+    tree = ast.parse(source, filename=path)
+    kernel_file = ("kernels" in path.replace("\\", "/").split("/")
+                   or os.path.basename(path).endswith("_kernel.py"))
+    return _Linter(path, source, tree, kernel_file).run()
+
+
+def lint_file(path: str) -> Tuple[List[Finding], List[Waiver]]:
+    """Lint one file (see ``lint_source``)."""
+    with open(path) as f:
+        src = f.read()
+    return lint_source(src, path)
+
+
+def lint_paths(paths: Sequence[str]) -> LintReport:
+    """Lint every ``*.py`` under ``paths`` (files or directories) into
+    one ``LintReport``. Walks directories recursively, skipping
+    ``__pycache__``."""
+    report = LintReport()
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = [d for d in dirs if d != "__pycache__"]
+                files += [os.path.join(root, n) for n in sorted(names)
+                          if n.endswith(".py")]
+        else:
+            files.append(p)
+    for path in files:
+        findings, waivers = lint_file(path)
+        report.findings += findings
+        report.waivers += waivers
+    return report

@@ -71,6 +71,28 @@ class ClientArena:
                      if rows is None else np.asarray(rows, np.int64))
         self.n_rows = int(len(self.sizes) if n_rows is None else n_rows)
         self.dead = frozenset(int(c) for c in dead)
+        self._device_rows = None
+
+    @property
+    def device_rows(self):
+        """``rows`` (cid→physical row) as a device i32 vector, uploaded
+        once per arena version and cached. Arenas are functional — every
+        mutation builds a NEW ``ClientArena`` — so the cache can never
+        serve a stale map; this is what keeps per-round scan-consts
+        plumbing free of repeated host→device round-trips.
+
+        The vector is padded to the next power of two (pad slots map to
+        row 0 but belong to unregistered cids, which no cohort can ever
+        draw) so that compiled programs taking the cid→row map recompile
+        per population *bracket*, not per join — the same shape
+        quantization as ``sampler.pool_capacity``."""
+        if self._device_rows is None:
+            n = len(self.rows)
+            cap = 1 if n <= 1 else 1 << (n - 1).bit_length()
+            padded = np.zeros(cap, np.int32)
+            padded[:n] = self.rows.astype(np.int32)
+            self._device_rows = jnp.asarray(padded)
+        return self._device_rows
 
     # ------------------------------------------------------------- builders
     @classmethod

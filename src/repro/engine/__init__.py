@@ -11,21 +11,22 @@ sampling (``repro.engine.sampler``), bit-faithful to the eager
 """
 from repro.engine.api import (advance_rng, evaluate, infer, init,  # noqa: F401
                               join, leave, run, run_round, run_rounds,
-                              sample_clients, scan_blockers, scan_history)
+                              sample_clients, scan_blockers, scan_history,
+                              scan_program)
 from repro.engine.registry import (STRATEGIES, get_strategy,  # noqa: F401
                                    list_strategies, register)
 from repro.engine.state import (EngineConfig, EngineContext,  # noqa: F401
                                 ServerState)
 from repro.engine.bank import ClusterBank  # noqa: F401
 from repro.engine.sampler import (cohort_pool, cohort_size,  # noqa: F401
-                                  draw_cohort)
+                                  draw_cohort, pool_capacity)
 from repro.engine import strategies  # noqa: F401  (installs the registry)
 from repro.engine.strategies import Strategy  # noqa: F401
 
 __all__ = [
     "init", "run", "run_round", "run_rounds", "sample_clients",
-    "advance_rng", "scan_blockers", "scan_history",
-    "cohort_pool", "cohort_size", "draw_cohort",
+    "advance_rng", "scan_blockers", "scan_history", "scan_program",
+    "cohort_pool", "cohort_size", "draw_cohort", "pool_capacity",
     "evaluate", "join", "leave", "infer",
     "EngineConfig", "EngineContext", "ServerState",
     "Strategy", "ClusterBank",

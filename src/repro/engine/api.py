@@ -98,7 +98,9 @@ def sample_clients(state: ServerState, unavailable=frozenset()):
     """
     cfg = state.ctx.cfg
     if cfg.rng_backend == "device":
-        pool = sampler.cohort_pool(state.n_clients, state.left, unavailable)
+        pool = sampler.cohort_pool(state.n_clients, state.left, unavailable,
+                                   capacity=sampler.pool_capacity(
+                                       state.n_clients))
         live = state.n_clients - len(state.left)
         m = sampler.cohort_size(cfg.sample_rate, live, int(pool.sum()))
         if m == 0:
@@ -238,29 +240,62 @@ def run_rounds(state: ServerState, rounds: int,
 
     Returns the state after ``rounds`` rounds.
     """
-    import jax
-
-    strat = get_strategy(state.strategy)
-    ctx = state.ctx
     rounds = int(rounds)
     if rounds <= 0:
         return state
-    blocker = scan_blockers(state)
-    if blocker is not None:
-        raise ValueError(blocker)
-    live = state.n_clients - len(state.left)
-    if strat.full_participation:
-        pool = sampler.cohort_pool(state.n_clients, state.left, ())
-        m = int(pool.sum())
-    else:
-        pool = sampler.cohort_pool(state.n_clients, state.left, unavailable)
-        m = sampler.cohort_size(ctx.cfg.sample_rate, live, int(pool.sum()))
-    if m == 0:
+    program = scan_program(state, rounds, unavailable)
+    if program is None:
         # all departed/unavailable: the eager path raises per round; the
         # scanned path records the span as skipped no-op rounds
         recs = tuple({"skipped": True, "sampled": 0} for _ in range(rounds))
         return state.replace(round=state.round + rounds,
                              history=state.history + recs)
+    fn, carry0, consts, finalize = program
+    carry, ys = fn(carry0, consts)
+    return finalize(state, carry, ys, int(rounds))
+
+
+def scan_program(state: ServerState, rounds: int, unavailable=frozenset()):
+    """Prepare (but do not run) the jitted multi-round scan behind
+    ``run_rounds``: returns ``(fn, carry0, consts, finalize)``, or None
+    when the pool is empty (``run_rounds`` records those as skipped
+    rounds).
+
+    ``fn(carry0, consts) -> (carry, ys)`` is the cached jitted program
+    — all device-resident operands in, all device-resident results out;
+    ``finalize(state, carry, ys, rounds)`` is the only host hand-off
+    (history records, rebuilt banks). The split exists so the runtime
+    sanitizers can make claims about the scan itself: the zero-transfer
+    battery warms ``fn`` up, then re-invokes it under
+    ``analysis.sanitize.no_transfer()`` to prove the scanned span never
+    touches the host, and the compile-budget battery counts ``fn``'s
+    XLA compiles across a churn timeline. Raises ``ValueError`` (see
+    ``scan_blockers``) when the state cannot scan.
+    """
+    import jax
+
+    strat = get_strategy(state.strategy)
+    ctx = state.ctx
+    rounds = int(rounds)
+    blocker = scan_blockers(state)
+    if blocker is not None:
+        raise ValueError(blocker)
+    live = state.n_clients - len(state.left)
+    # the pool is pow2-padded EXACTLY like the eager sample_clients
+    # draw: both paths feed the same uniform shape, so scan-vs-eager
+    # cohorts stay bitwise identical while the compiled-program set
+    # stays O(log population) under churn
+    capw = sampler.pool_capacity(state.n_clients)
+    if strat.full_participation:
+        pool = sampler.cohort_pool(state.n_clients, state.left, (),
+                                   capacity=capw)
+        m = int(pool.sum())
+    else:
+        pool = sampler.cohort_pool(state.n_clients, state.left, unavailable,
+                                   capacity=capw)
+        m = sampler.cohort_size(ctx.cfg.sample_rate, live, int(pool.sum()))
+    if m == 0:
+        return None
     carry0, consts, step, finalize, statics = strat.scan_round(
         ctx, state, pool, m)
     structure = jax.tree.structure((carry0, consts))
@@ -279,8 +314,7 @@ def run_rounds(state: ServerState, rounds: int,
                                 length=rounds)
         return jax.jit(scan_fn)
 
-    carry, ys = ctx.jit(cache_key, build)(carry0, consts)
-    return finalize(state, carry, ys, rounds)
+    return ctx.jit(cache_key, build), carry0, consts, finalize
 
 
 def scan_history(ys, rounds: int):

@@ -136,14 +136,16 @@ class ClusterBank(Mapping):
         return f"ClusterBank(roots={self.roots})"
 
     # ------------------------------------------------------------ gathers
-    def take(self, roots, default):
+    def take(self, roots, default):  # jaxlint: hot-path
         """Batched model gather: row per requested root, ``default`` for
         roots with no model yet (lazy θ_k = ω₀). One jnp.take per leaf;
         the default row (when needed) is appended once at index
         ``capacity``, so the gather shape depends only on (capacity,
         len(roots)) — both quantized."""
+        # jaxlint: disable=R2 — roots are host ints by contract (union-find roots)
         roots = np.atleast_1d(np.asarray(roots)).astype(np.int64)
         cap = self.capacity
+        # jaxlint: disable=R2 — host root→row index build, no device operand
         idx = np.fromiter((self._index.get(int(r), cap) for r in roots),
                           np.int32, len(roots))
         if self.stacked is None:
@@ -160,7 +162,7 @@ class ClusterBank(Mapping):
         return jax.tree.map(lambda x: jnp.take(x, j, axis=0), ext)
 
     # ------------------------------------------------------------ scatters
-    def put(self, roots, updates) -> "ClusterBank":
+    def put(self, roots, updates) -> "ClusterBank":  # jaxlint: hot-path
         """Scatter stacked ``updates`` (leading axis ↔ ``roots``) into the
         bank; unknown roots grow new rows (capacity doubles when full).
         Rows not named stay untouched.
@@ -171,6 +173,7 @@ class ClusterBank(Mapping):
         ``aggregate_segments`` padded to a power-of-two segment count),
         so the scatter compiles once per (capacity, row-count) pair
         instead of once per distinct per-round cluster count."""
+        # jaxlint: disable=R2 — roots are host ints by contract (union-find roots)
         roots = [int(r) for r in np.atleast_1d(np.asarray(roots))]
         n = len(roots)
         assert len(set(roots)) == len(roots), "put() roots must be unique"
@@ -208,9 +211,10 @@ class ClusterBank(Mapping):
         nb = self.set(int(root), model)
         self.stacked, self.roots, self._index = nb.stacked, nb.roots, nb._index
 
-    def drop(self, roots) -> "ClusterBank":
+    def drop(self, roots) -> "ClusterBank":  # jaxlint: hot-path
         """Remove rows for ``roots`` (one keep-gather per leaf; the new
         bank is re-padded to a power-of-two capacity)."""
+        # jaxlint: disable=R2 — host root keys, no device operand
         rm = {int(r) for r in roots} & set(self.roots)
         if not rm:
             return self
@@ -235,7 +239,7 @@ class ClusterBank(Mapping):
                            [int(remap.get(r, r)) for r in self.roots])
 
     # ------------------------------------------------------------ merging
-    def merge(self, merges, counts, init_params) -> "ClusterBank":
+    def merge(self, merges, counts, init_params) -> "ClusterBank":  # jaxlint: hot-path
         """Batched Algorithm-1 model merge: θ of each merged group is the
         member-count-weighted mean of its pre-merge models — one gather +
         one weighted segment-sum per leaf, replacing the sequential
@@ -256,8 +260,10 @@ class ClusterBank(Mapping):
             return r
 
         for keep, absorb in merges:
+            # jaxlint: disable=R2 — host merge path by design (Alg.1 merge list)
             parent[find(int(absorb))] = find(int(keep))
         groups: Dict[int, list] = {}
+        # jaxlint: disable=R2 — host merge path by design (Alg.1 merge list)
         for r in sorted({int(x) for pair in merges for x in pair}):
             groups.setdefault(find(r), []).append(r)
 
@@ -265,9 +271,11 @@ class ClusterBank(Mapping):
 
         finals = sorted(groups)
         members = [r for f in finals for r in groups[f]]
-        seg = np.concatenate([np.full(len(groups[f]), g, np.int32)
-                              for g, f in enumerate(finals)])
-        w = np.array([float(counts.get(r, 1)) for r in members], np.float32)
+        seg = np.repeat(np.arange(len(finals), dtype=np.int32),
+                        [len(groups[f]) for f in finals])
+        # jaxlint: disable=R2 — weights come from the host member-count dict
+        w = np.fromiter((counts.get(r, 1) for r in members),
+                        np.float32, len(members))
         gathered = self.take(members, init_params)
         agg = aggregate_segments(gathered, w, seg, len(finals))
         absorbed = [r for r in members if r not in groups]

@@ -35,14 +35,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["cohort_pool", "cohort_size", "draw", "draw_cohort"]
+__all__ = ["cohort_pool", "cohort_size", "draw", "draw_cohort",
+           "pool_capacity"]
+
+
+def pool_capacity(n_clients: int) -> int:
+    """Power-of-two pool quantum for ``n_clients`` registered ids.
+
+    The draw uniform's shape — and with it every compiled program the
+    pool feeds (the eager ``draw_cohort`` jit, the whole ``run_rounds``
+    scan) — follows the pool length. Quantizing that length to the next
+    power of two means a churning federation crosses O(log population)
+    distinct pool shapes instead of recompiling on every join; the
+    compile-budget battery (``tests/test_compile_budget.py``) pins
+    exactly this."""
+    n = int(n_clients)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
 def cohort_pool(n_clients: int, left: Iterable[int],
-                unavailable: Iterable[int] = ()) -> np.ndarray:
+                unavailable: Iterable[int] = (),
+                capacity: int = None) -> np.ndarray:
     """Boolean draw-pool mask over client ids: registered, not departed,
-    not unavailable this round (the simulator's availability windows)."""
-    pool = np.ones(int(n_clients), bool)
+    not unavailable this round (the simulator's availability windows).
+
+    ``capacity`` (>= ``n_clients``) pads the mask with permanently-False
+    slots for unregistered ids — the engine passes
+    ``pool_capacity(n_clients)`` so pool-shaped programs compile per
+    power-of-two population bracket, not per join. Padding never changes
+    WHICH ids can be drawn, but it does change the uniform draw's shape,
+    so eager and scanned paths must pad identically (they both go
+    through the engine, which always pads)."""
+    cap = int(n_clients if capacity is None else capacity)
+    assert cap >= int(n_clients), "pool capacity below population"
+    pool = np.zeros(cap, bool)
+    pool[:int(n_clients)] = True
     for c in left:
         if 0 <= int(c) < n_clients:
             pool[int(c)] = False

@@ -26,6 +26,7 @@ mesh's client axis (``EngineContext.mesh``).
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Sequence
 
 import jax
@@ -82,20 +83,32 @@ def _retire_from_arena(ctx: EngineContext, cid: int) -> None:
         ctx.arena = ctx.arena.tombstone(int(cid))
 
 
-def _weights(state: ServerState, ids) -> np.ndarray:
-    return np.asarray(state.sizes, np.float32)[np.asarray(ids)]
+@functools.lru_cache(maxsize=512)
+def _sizes_np(sizes: tuple) -> np.ndarray:
+    """Per-client sample counts as a host f32 vector, one conversion per
+    distinct size tuple (the eager path calls per round; sizes only
+    change on membership events)."""
+    # jaxlint: disable=R2 — sizes is a host int tuple, converted once (cached)
+    return np.asarray(sizes, np.float32)
+
+
+def _weights(state: ServerState, ids) -> np.ndarray:  # jaxlint: hot-path
+    # jaxlint: disable=R2 — eager-path weights are host-side by design
+    return _sizes_np(state.sizes)[np.asarray(ids)]
 
 
 # ------------------------------------------------------- scan scaffolding
-def _arena_consts(ctx: EngineContext) -> dict:
+def _arena_consts(ctx: EngineContext) -> dict:  # jaxlint: hot-path
     """The arena's device operands for a scanned round body. Passed as
     scan ARGUMENTS (not closed over), so the compiled scan cached on the
     context never embeds stale arrays — after churn rebuilds the arena,
     the next ``run_rounds`` call feeds the fresh buffers through the
-    same compiled program."""
+    same compiled program. The cid→row map rides the arena's cached
+    device copy (``ClientArena.device_rows``) instead of a fresh upload
+    per span."""
     ar = ctx.arena
     return {"packed": ar.packed, "amask": ar.mask,
-            "rowmap": jnp.asarray(ar.rows.astype(np.int32))}
+            "rowmap": ar.device_rows}
 
 
 def _gather_scan(consts: dict, ids, ragged: bool):
@@ -112,10 +125,24 @@ def _gather_scan(consts: dict, ids, ragged: bool):
     return batch
 
 
-def _sizes_f32(state: ServerState):
+@functools.lru_cache(maxsize=512)
+def _sizes_f32_upload(sizes: tuple):
+    arr = np.zeros(cohort_sampler.pool_capacity(len(sizes)), np.float32)
+    # jaxlint: disable=R2 — one upload per distinct size tuple, cached
+    arr[: len(sizes)] = np.asarray(sizes, np.float32)
+    return jnp.asarray(arr)
+
+
+def _sizes_f32(state: ServerState):  # jaxlint: hot-path
     """Per-client sample counts as a device f32 vector (the scanned
-    counterpart of ``_weights``)."""
-    return jnp.asarray(np.asarray(state.sizes, np.float32))
+    counterpart of ``_weights``), uploaded once per distinct size tuple
+    — repeat rounds/spans over a stable federation reuse the cached
+    device array instead of re-uploading every consts build. Padded to
+    the pow2 population bracket (``sampler.pool_capacity``): scan
+    consts shapes, like the pool itself, must not recompile per join.
+    Padding rows are 0-weight and belong to unregistered ids — never
+    drawn, never taken."""
+    return _sizes_f32_upload(tuple(state.sizes))
 
 
 def _row_mask(mask, leaf):
@@ -667,8 +694,16 @@ class DittoStrategy(Strategy):
         ragged = ctx.arena.ragged
         gupd, pupd = self._upds(ctx)
         n = state.n_clients
-        personal0 = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                 *[state.personal[i] for i in range(n)])
+        # pow2 row capacity, like the pool/sizes consts: the stacked
+        # personal carry must not re-shape (= recompile the scan) on
+        # every join. Pad rows belong to unregistered cids — never
+        # drawn, never gathered, never scattered — so their content is
+        # irrelevant; duplicating row 0 keeps the stack a single eager
+        # op whose compile is keyed by capn (pow2), not by n.
+        capn = cohort_sampler.pool_capacity(n)
+        personal0 = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[state.personal[i if i < n else 0] for i in range(capn)])
         consts = dict(_arena_consts(ctx), pool=jnp.asarray(pool),
                       sizes=_sizes_f32(state))
         carry0 = (state.rng_key, state.omega, personal0)
@@ -688,8 +723,13 @@ class DittoStrategy(Strategy):
 
         def finalize(state, carry, ys, rounds):
             key, omega, personal = carry
-            pd = {i: jax.tree.map(lambda P, ii=i: P[ii], personal)
-                  for i in range(n)}
+            # unstack every capn row (not just n): the per-index gather
+            # compiles are then keyed by the pow2 bracket and fully warm
+            # after the first churn cycle — later joins inside the same
+            # bracket add zero compiles
+            rows = [jax.tree.map(lambda P, ii=i: P[ii], personal)
+                    for i in range(capn)]
+            pd = {i: rows[i] for i in range(n)}
             return state.replace(omega=omega, rng_key=key, personal=pd,
                                  round=state.round + rounds,
                                  history=state.history + _scan_history(ys, rounds))

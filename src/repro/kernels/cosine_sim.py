@@ -58,7 +58,7 @@ def cosine_sim(x, *, bn: int = 128, bk: int = 512, interpret: bool = False):
     d_pad = -(-d // bk) * bk
     xp = jnp.zeros((n_pad, d_pad), x.dtype).at[:n, :d].set(x)
     norms = jnp.sqrt(jnp.sum(xp.astype(jnp.float32) ** 2, axis=1))
-    inv = jnp.where(norms > 0, 1.0 / norms, 0.0)
+    inv = jnp.where(norms > 0, jnp.float32(1.0) / norms, jnp.float32(0.0))
 
     out = pl.pallas_call(
         _cosine_kernel,
@@ -122,9 +122,10 @@ def merge_candidates(x, live, *, tau: float, bn: int = 128, bk: int = 512,
     lv = jnp.zeros((n_pad,), jnp.float32).at[:n].set(
         live.astype(jnp.float32))
     norms = jnp.sqrt(jnp.sum(xp.astype(jnp.float32) ** 2, axis=1))
-    inv = jnp.where(norms > 0, 1.0 / norms, 0.0)
+    inv = jnp.where(norms > 0, jnp.float32(1.0) / norms, jnp.float32(0.0))
 
     out = pl.pallas_call(
+        # jaxlint: disable=R2 — tau is static (static_argnames), baked into the kernel
         functools.partial(_candidates_kernel, float(tau), bn),
         grid=(n_pad // bn, n_pad // bn, d_pad // bk),
         in_specs=[

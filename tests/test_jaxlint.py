@@ -1,0 +1,308 @@
+"""Self-test battery for the ``repro.analysis.jaxlint`` hazard linter.
+
+Per rule (R1–R5): a true positive the rule must flag, a true negative
+it must not flag, and a waived positive that stays visible but
+annotated.  Plus the waiver/hot-path comment machinery and the
+``scripts/lint_jax.py`` CLI contract: a seeded violation fails
+``--strict`` (exit 1), a reason-less waiver fails ``--strict``, and the
+real tree under ``src/repro`` passes it — the CI gate this repo ships.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis import jaxlint
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _lint(src, path="src/repro/engine/fake.py"):
+    findings, waivers = jaxlint.lint_source(textwrap.dedent(src), path)
+    return findings, waivers
+
+
+def _rules(src, **kw):
+    """Rule ids of UNWAIVED findings."""
+    findings, _ = _lint(src, **kw)
+    return {f.rule for f in findings if not f.waived}
+
+
+# ------------------------------------------------------------ R1: key reuse
+R1_TP = """
+    import jax
+
+    def resample(key, shape):
+        a = jax.random.normal(key, shape)
+        b = jax.random.uniform(key, shape)
+        return a + b
+"""
+
+R1_TN = """
+    import jax
+
+    def resample(key, shape):
+        key, sub = jax.random.split(key)
+        a = jax.random.normal(sub, shape)
+        key, sub = jax.random.split(key)
+        b = jax.random.uniform(sub, shape)
+        return a + b
+"""
+
+
+def test_r1_flags_key_reuse():
+    assert "R1" in _rules(R1_TP)
+
+
+def test_r1_accepts_split_discipline():
+    assert "R1" not in _rules(R1_TN)
+
+
+def test_r1_waiver_annotates_not_silences():
+    src = R1_TP.replace(
+        "b = jax.random.uniform(key, shape)",
+        "b = jax.random.uniform(key, shape)  "
+        "# jaxlint: disable=R1 — correlated draw is intentional here")
+    findings, waivers = _lint(src)
+    r1 = [f for f in findings if f.rule == "R1"]
+    assert r1 and all(f.waived for f in r1)
+    assert "intentional" in r1[0].waiver_reason
+    assert all(w.used for w in waivers)
+
+
+# ------------------------------------- R2: host sync reachable from a trace
+R2_TP = """
+    import jax.numpy as jnp
+
+    def step(carry, xs):
+        total = jnp.sum(carry)
+        return carry, float(total)
+"""
+
+R2_TN = """
+    import jax.numpy as jnp
+
+    def summarize(history):
+        total = jnp.sum(history)
+        return float(total)
+"""
+
+
+def test_r2_flags_sync_in_entry_point():
+    assert "R2" in _rules(R2_TP)
+
+
+def test_r2_ignores_cold_host_helpers():
+    assert "R2" not in _rules(R2_TN)
+
+
+def test_r2_hot_path_marker_opts_in():
+    src = """
+        import numpy as np
+
+        def assemble(rows):  # jaxlint: hot-path
+            return np.asarray(rows)
+    """
+    assert "R2" in _rules(src)
+
+
+def test_r2_transitive_reach_through_calls():
+    """A helper called from an entry point inherits its traced scope."""
+    src = """
+        import jax.numpy as jnp
+
+        def _peek(x):
+            return float(jnp.max(x))
+
+        def scan_fn(carry, xs):
+            return carry, _peek(carry)
+    """
+    findings, _ = _lint(src)
+    assert any(f.rule == "R2" and not f.waived for f in findings)
+
+
+# ------------------------------------------ R3: Python control flow on trace
+R3_TP = """
+    def step(carry, xs):
+        if carry > 0:
+            return carry, None
+        return -carry, None
+"""
+
+R3_TN = """
+    def step(carry, xs, *, debug: bool = False):
+        if debug:
+            return carry, None
+        if xs is None:
+            return carry, None
+        return -carry, None
+"""
+
+
+def test_r3_flags_branch_on_traced_value():
+    assert "R3" in _rules(R3_TP)
+
+
+def test_r3_accepts_static_predicates():
+    assert "R3" not in _rules(R3_TN)
+
+
+# --------------------------------------------- R4: module-scope jnp compute
+def test_r4_flags_module_scope_compute():
+    src = """
+        import jax.numpy as jnp
+
+        TABLE = jnp.arange(8) * 2
+    """
+    assert "R4" in _rules(src)
+
+
+def test_r4_ignores_main_guard_and_functions():
+    src = """
+        import jax.numpy as jnp
+
+        def table():
+            return jnp.arange(8) * 2
+
+        if __name__ == "__main__":
+            print(jnp.arange(8))
+    """
+    assert "R4" not in _rules(src)
+
+
+# --------------------------------- R5: dtype-widening literals in kernel code
+R5_TP = """
+    import jax.numpy as jnp
+
+    def scale_kernel(x_ref):
+        return x_ref[...] * 1.5
+"""
+
+R5_TN = """
+    import jax.numpy as jnp
+
+    def scale_kernel(x_ref):
+        return x_ref[...] * jnp.float32(1.5)
+"""
+
+
+def test_r5_flags_bare_float_in_kernel_file():
+    assert "R5" in _rules(R5_TP, path="src/repro/kernels/fake.py")
+
+
+def test_r5_accepts_typed_constants():
+    assert "R5" not in _rules(R5_TN, path="src/repro/kernels/fake.py")
+
+
+def test_r5_scoped_to_kernel_files():
+    """The same widening literal outside kernel code is not R5's
+    business (engine math is float32-dominated but not Pallas-lowered)."""
+    assert "R5" not in _rules(R5_TP, path="src/repro/engine/fake.py")
+
+
+# ------------------------------------------------------- waiver machinery
+def test_def_line_waiver_covers_whole_function():
+    src = """
+        import jax.numpy as jnp
+
+        def step(carry, xs):  # jaxlint: disable=R2 — sync here is test-only
+            return carry, float(jnp.sum(carry))
+    """
+    findings, _ = _lint(src)
+    r2 = [f for f in findings if f.rule == "R2"]
+    assert r2 and all(f.waived for f in r2)
+
+
+def test_unused_waivers_are_reported():
+    src = """
+        def plain():  # jaxlint: disable=R2 — nothing to waive
+            return 1
+    """
+    _, waivers = _lint(src)
+    assert len(waivers) == 1 and not waivers[0].used
+
+
+def test_reasonless_waiver_detected_by_report():
+    src = """
+        import jax.numpy as jnp
+
+        def step(carry, xs):  # jaxlint: disable=R2
+            return carry, float(jnp.sum(carry))
+    """
+    report = jaxlint.LintReport()
+    findings, waivers = _lint(src)
+    report.findings += findings
+    report.waivers += waivers
+    assert not report.errors                     # waived...
+    assert report.reasonless_waivers()           # ...but unjustified
+
+
+def test_report_json_summary():
+    findings, waivers = _lint(R2_TP)
+    report = jaxlint.LintReport(findings=findings, waivers=waivers)
+    doc = report.to_json()
+    assert doc["summary"]["errors"] == len(report.errors) > 0
+    assert {"findings", "waivers", "summary"} <= set(doc)
+
+
+def test_rules_registry_documents_all_emitted_rules():
+    assert set(jaxlint.RULES) == {"R1", "R2", "R3", "R4", "R5"}
+
+
+# ------------------------------------------------------------- CLI contract
+def _cli(*args, cwd=REPO):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "lint_jax.py"), *args],
+        capture_output=True, text=True, cwd=cwd, env=env)
+
+
+def test_cli_strict_fails_on_seeded_violation(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(R2_TP))
+    proc = _cli(str(bad), "--strict")
+    assert proc.returncode == 1
+    assert "R2" in proc.stdout
+
+
+def test_cli_strict_fails_on_reasonless_waiver(tmp_path):
+    bad = tmp_path / "waived.py"
+    bad.write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+
+        def step(carry, xs):  # jaxlint: disable=R2
+            return carry, float(jnp.sum(carry))
+    """))
+    proc = _cli(str(bad), "--strict")
+    assert proc.returncode == 1
+    assert "justification" in (proc.stdout + proc.stderr).lower()
+
+
+def test_cli_clean_file_passes_strict(tmp_path):
+    ok = tmp_path / "ok.py"
+    ok.write_text(textwrap.dedent(R1_TN))
+    proc = _cli(str(ok), "--strict")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_waiver_artifact(tmp_path):
+    src = tmp_path / "waived.py"
+    src.write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+
+        def step(carry, xs):  # jaxlint: disable=R2 — test fixture
+            return carry, float(jnp.sum(carry))
+    """))
+    out = tmp_path / "waivers.json"
+    proc = _cli(str(src), "--strict", "--waivers", str(out))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    doc = json.loads(out.read_text())
+    assert doc["summary"]["waived"] == 1 and doc["summary"]["errors"] == 0
+
+
+def test_repo_tree_passes_strict_lint():
+    """The shipped gate: ``src/repro`` is lint-clean under --strict,
+    every waiver justified."""
+    proc = _cli("--strict")
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,189 @@
+"""Runtime-sanitizer battery: the ``repro.analysis.sanitize`` context
+managers themselves, plus the zero-host-transfer proof for ALL six
+strategies' scanned round loop.
+
+The transfer proof generalizes the one-off ``transfer_guard`` test in
+``tests/test_device_clustering.py`` from the clustering step to the
+whole per-strategy scan: ``engine.scan_program`` exposes the compiled
+span as (fn, carry0, consts, finalize); after a warm-up call, re-running
+``fn`` under ``sanitize.no_transfer()`` proves the scanned rounds —
+cohort draw, arena gather, local SGD, clustering, aggregation — never
+fall back to host (arena + device cluster backend + device rng).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.analysis import sanitize
+from repro.data import rotated
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+EVAL = jax.jit(lambda p, b: simple.accuracy(p, b, TASK))
+
+ALL = ["stocfl", "fedavg", "fedprox", "ditto", "ifca", "cfl"]
+
+
+def _fed(n_clients=12, n_per=32, seed=3):
+    clients, tc, tests = rotated(n_clusters=2, n_clients=n_clients,
+                                 n_per=n_per, seed=seed)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    return clients, tc, tests
+
+
+def _cfg(name, **kw):
+    kw.setdefault("local_steps", 2)
+    kw.setdefault("sample_rate", 0.5)
+    kw.setdefault("seed", 0)
+    kw.setdefault("rng_backend", "device")
+    if name == "stocfl":
+        kw.setdefault("cluster_backend", "device")
+    if name == "cfl":
+        kw["sample_rate"] = 1.0
+        kw.setdefault("eps_rel", 0.9)
+        kw.setdefault("eps2", 1e-4)
+    return engine.EngineConfig(**kw)
+
+
+def _init(name, clients, **kw):
+    return engine.init(name, LOSS, simple.init(jax.random.PRNGKey(0), TASK),
+                       clients, _cfg(name, **kw), eval_fn=EVAL, arena=True)
+
+
+# ================================================= compile_budget unit tests
+def test_compile_budget_counts_fresh_compiles():
+    """A never-seen jit program compiles inside the block and is
+    counted; an immediate identical re-call hits the cache and adds
+    nothing."""
+    f = jax.jit(lambda x: x * 3 + 1)
+    x = jnp.ones((17, 3))     # shape unique to this test
+    with sanitize.compile_budget() as log:
+        f(x).block_until_ready()
+        first = log.count
+        f(x).block_until_ready()
+    assert first >= 1, "fresh jit compile was not observed"
+    assert log.count == first, "cache hit was miscounted as a compile"
+
+
+def test_compile_budget_overrun_raises():
+    with pytest.raises(sanitize.CompileBudgetExceeded):
+        with sanitize.compile_budget(0):
+            jax.jit(lambda x: x - 7)(jnp.ones((19, 2))).block_until_ready()
+
+
+def test_compile_budget_names_when_logging():
+    """``log_names=True`` captures jit(<name>) labels for diagnostics
+    (and restores the jax_log_compiles flag afterwards)."""
+    prev = jax.config.jax_log_compiles
+
+    def tagged_fn(x):
+        return x + 11
+
+    with sanitize.compile_budget(log_names=True) as log:
+        jax.jit(tagged_fn)(jnp.ones((23, 2))).block_until_ready()
+    assert jax.config.jax_log_compiles == prev
+    assert any("tagged_fn" in n for n in log.names), log.names
+
+
+def test_compile_budget_nests_without_double_counting():
+    """Stacked budgets each see the inner compile exactly once (the
+    listener unregisters cleanly)."""
+    with sanitize.compile_budget() as outer:
+        with sanitize.compile_budget() as inner:
+            jax.jit(lambda x: x / 5)(jnp.ones((29, 2))).block_until_ready()
+        n_in, n_out = inner.count, outer.count
+    assert n_in >= 1 and n_in == n_out
+    # after exit the listener is gone: new compiles don't mutate the log
+    jax.jit(lambda x: x / 6)(jnp.ones((31, 2))).block_until_ready()
+    assert outer.count == n_out
+
+
+# ==================================================== no_transfer unit tests
+def test_no_transfer_blocks_implicit_scalar_upload():
+    """An eager op with a bare Python scalar operand needs a
+    host→device upload every call — the exact hazard lint rule R5/R2
+    police — and the guard rejects it.  (On the CPU backend zero-copy
+    d2h views are not guarded; actual copies are.)"""
+    x = jnp.arange(8.0)
+    x.block_until_ready()
+    (x * 9876.5).block_until_ready()      # warmed: the compile is cached,
+    with pytest.raises(Exception, match="[Dd]isallowed.*transfer"):
+        with sanitize.no_transfer():      # ...the scalar upload is not
+            (x * 9876.5).block_until_ready()
+
+
+def test_no_transfer_blocks_numpy_args_to_jit():
+    f = jax.jit(lambda a: a * 2)
+    host = np.ones((13, 2), np.float32)
+    f(host).block_until_ready()           # warm compile
+    with pytest.raises(Exception, match="[Dd]isallowed.*transfer"):
+        with sanitize.no_transfer():
+            f(host)
+
+
+def test_no_transfer_allows_pure_device_compute():
+    f = jax.jit(lambda x: jnp.sum(x * 2))
+    x = jnp.arange(37.0)
+    f(x).block_until_ready()      # warm-up commits operands + program
+    with sanitize.no_transfer():
+        f(x).block_until_ready()
+
+
+# ====================================================== nan_guard unit tests
+def test_nan_guard_raises_on_nan_and_restores_flag():
+    prev = jax.config.jax_debug_nans
+    f = jax.jit(lambda x: jnp.log(x))
+    with pytest.raises(FloatingPointError):
+        with sanitize.nan_guard():
+            f(jnp.float32(-1.0)).block_until_ready()
+    assert jax.config.jax_debug_nans == prev
+    # outside the guard the same computation quietly produces nan again
+    assert np.isnan(np.asarray(f(jnp.float32(-1.0))))
+
+
+def test_nan_guard_clean_stocfl_round():
+    """A healthy StoCFL round under nan_guard: no false positives from
+    the engine's own math (the CI smoke runs this same guard)."""
+    clients, _, _ = _fed()
+    st = _init("stocfl", clients)
+    with sanitize.nan_guard():
+        st = engine.run_rounds(st, 1)
+    assert st.round == 1
+
+
+# ============================== zero-transfer battery over all strategies
+@pytest.mark.parametrize("name", ALL)
+def test_scanned_rounds_zero_host_transfers(name):
+    """The scanned round loop of EVERY strategy runs entirely on
+    device: after a warm-up call of the compiled span, re-invoking it
+    under ``no_transfer()`` (transfer_guard 'disallow') completes — no
+    implicit host→device upload, no device→host sync anywhere in draw /
+    gather / train / cluster / aggregate. ``finalize`` (history
+    records, bank rebuild) is the explicit host hand-off and stays
+    outside the guard by construction."""
+    clients, _, _ = _fed()
+    st = _init(name, clients)
+    rounds = 3
+    prog = engine.scan_program(st, rounds)
+    assert prog is not None
+    fn, carry0, consts, finalize = prog
+    fn(carry0, consts)                      # compile + commit operands
+    with sanitize.no_transfer():
+        carry, ys = fn(carry0, consts)
+        jax.block_until_ready((carry, ys))
+    st2 = finalize(st, carry, ys, rounds)
+    assert st2.round == st.round + rounds
+    assert len(st2.history) == len(st.history) + rounds
+
+
+def test_scan_program_skipped_pool_returns_none():
+    """An empty pool (everyone unavailable) has no program — run_rounds
+    records skipped rounds instead."""
+    clients, _, _ = _fed()
+    st = _init("fedavg", clients)
+    assert engine.scan_program(st, 2, unavailable=set(range(12))) is None
+    st2 = engine.run_rounds(st, 2, unavailable=set(range(12)))
+    assert [r.get("skipped") for r in st2.history[-2:]] == [True, True]
