@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Assert the persistent compilation cache actually kills the compile tax.
+
+Two-process protocol (the cache only matters ACROSS processes — inside
+one process jax's in-memory executable cache would mask it):
+
+  1. probe #1 in a fresh subprocess with an empty cache directory:
+     every XLA compile is cold and gets written to the directory.
+  2. probe #2 in a second fresh subprocess sharing the directory:
+     every compile request must now be SERVED from the cache
+     (``cache_hits == compiles`` — the compile event fires per request,
+     cached or not) and the first ``run_rounds`` call must get
+     dramatically cheaper.
+
+Each probe builds a small StoCFL federation (device arena + partition +
+rng, the run_rounds preconditions), runs one scanned span, and prints
+JSON ``{"first_s", "compiles", "cache_hits"}`` counted by
+``repro.analysis.sanitize.compile_budget``.
+
+CI runs this after the bench steps with the shared
+``JAX_COMPILATION_CACHE_DIR``; a cold==warm result fails the build.
+
+  PYTHONPATH=src python scripts/check_warm_cache.py           # full check
+  PYTHONPATH=src python scripts/check_warm_cache.py --probe   # one probe
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+
+
+def probe() -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import engine
+    from repro.analysis import sanitize
+    from repro.data import rotated
+    from repro.models import simple
+    from repro.utils.cache import enable_compilation_cache
+
+    enable_compilation_cache()   # honors JAX_COMPILATION_CACHE_DIR
+
+    task = simple.SYNTH_MLP
+    loss = lambda p, b: simple.loss_fn(p, b, task)
+    clients, _, _ = rotated(n_clusters=4, n_clients=12, n_per=16, seed=0)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    cfg = engine.EngineConfig(tau=0.5, lam=0.05, lr=0.1, local_steps=1,
+                              sample_rate=0.5, seed=0, project_dim=256,
+                              cluster_backend="device", rng_backend="device")
+    with sanitize.compile_budget() as log:
+        st = engine.init("stocfl", loss,
+                         simple.init(jax.random.PRNGKey(0), task),
+                         clients, cfg, arena=True)
+        t0 = time.time()
+        st = engine.run_rounds(st, 3)
+        jax.block_until_ready(st.omega)
+        first_s = time.time() - t0
+    return {"first_s": round(first_s, 4), "compiles": log.count,
+            "cache_hits": log.cache_hits}
+
+
+def run_probe(cache_dir: str) -> dict:
+    env = dict(os.environ, JAX_COMPILATION_CACHE_DIR=cache_dir,
+               JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--probe"],
+        env=env, capture_output=True, text=True, check=True)
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--probe", action="store_true",
+                    help="run one in-process probe and print its JSON")
+    ap.add_argument("--dir", default=None,
+                    help="cache directory (default: fresh temp dir, "
+                         "removed afterwards)")
+    args = ap.parse_args()
+    if args.probe:
+        print(json.dumps(probe()))
+        return 0
+
+    cache_dir = args.dir or tempfile.mkdtemp(prefix="warm-cache-")
+    made_temp = args.dir is None
+    try:
+        cold = run_probe(cache_dir)
+        warm = run_probe(cache_dir)
+        report = {"cache_dir": cache_dir, "cold": cold, "warm": warm}
+        print(json.dumps(report, indent=1))
+        ok = True
+        if warm["cache_hits"] < 1:
+            print("FAIL: warm probe had no persistent-cache hits")
+            ok = False
+        # the compile event fires per request even when served; warm
+        # means (almost) every request was a hit. Slack of 2 covers
+        # programs XLA refuses to cache (e.g. host callbacks)
+        if warm["cache_hits"] < warm["compiles"] - 2:
+            print(f"FAIL: only {warm['cache_hits']} of "
+                  f"{warm['compiles']} warm compile requests were "
+                  f"served from the cache")
+            ok = False
+        if warm["first_s"] > max(1.0, cold["first_s"] / 2):
+            print(f"FAIL: warm first-call {warm['first_s']}s not under "
+                  f"max(1.0, cold/2={cold['first_s'] / 2:.2f})s")
+            ok = False
+        if ok:
+            print(f"OK: warm start {cold['first_s']}s -> "
+                  f"{warm['first_s']}s, {warm['cache_hits']} cache hits")
+        return 0 if ok else 1
+    finally:
+        if made_temp:
+            shutil.rmtree(cache_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,6 +44,12 @@ __all__ = ["CompileLog", "CompileBudgetExceeded", "compile_budget",
 # fires once per XLA backend compilation (jax._src.dispatch wraps every
 # backend.compile in record_event_duration_secs with this key)
 _COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+# fires once per persistent-compilation-cache hit. NOTE the compile
+# event above wraps compile_or_get_cached, so it fires for EVERY
+# compile request, served-from-cache or not — ``count`` is "programs
+# requested", and ``cache_hits`` says how many of those skipped the
+# actual XLA compile (warm process: cache_hits == count)
+_CACHE_HIT_EVENT = "/jax/compilation_cache/cache_hits"
 _LOG_NAME_RE = re.compile(
     r"Finished XLA compilation of (\S+) in [\d.e+-]+ sec")
 
@@ -62,6 +68,7 @@ class CompileLog:
     different layers)."""
     budget: Optional[int] = None
     count: int = 0
+    cache_hits: int = 0     # persistent-compilation-cache serves (no XLA run)
     names: List[str] = dataclasses.field(default_factory=list)
 
     def describe(self) -> str:
@@ -103,20 +110,45 @@ def _unregister_duration_listener(cb) -> None:
         pass
 
 
+def _unregister_event_listener(cb) -> None:
+    # same story for the plain (no-duration) event listeners, which
+    # carry the persistent-cache hit counter
+    mon = jax.monitoring
+    try:
+        from jax._src import monitoring as _m
+        _m._unregister_event_listener_by_callback(cb)
+        return
+    except Exception:
+        pass
+    try:  # pragma: no cover - fallback for layout changes
+        mon._event_listeners.remove(cb)
+    except Exception:
+        pass
+
+
 @contextlib.contextmanager
 def compile_budget(budget: Optional[int] = None, *,
                    log_names: bool = False) -> Iterator[CompileLog]:
     """Count XLA compiles in the block; raise ``CompileBudgetExceeded``
     if they exceed ``budget`` (``None`` = just count). The yielded
     ``CompileLog`` updates live, so callers can also assert mid-block
-    or record counts into benchmarks."""
+    or record counts into benchmarks. ``log.cache_hits`` separately
+    tallies persistent-compilation-cache serves; a served request STILL
+    fires the compile event (the event wraps compile_or_get_cached), so
+    the warm-start assertion is ``cache_hits == count`` — every program
+    requested, none actually compiled."""
     log = CompileLog(budget=budget)
 
     def _on_event(event: str, duration: float, **kw) -> None:
         if event == _COMPILE_EVENT:
             log.count += 1
 
+    def _on_hit(event: str, **kw) -> None:
+        if event == _CACHE_HIT_EVENT:
+            log.cache_hits += 1
+
     jax.monitoring.register_event_duration_secs_listener(_on_event)
+    jax.monitoring.register_event_listener(_on_hit)
     handler = None
     prev_log_compiles = None
     logger = logging.getLogger("jax._src.dispatch")
@@ -129,6 +161,7 @@ def compile_budget(budget: Optional[int] = None, *,
         yield log
     finally:
         _unregister_duration_listener(_on_event)
+        _unregister_event_listener(_on_hit)
         if handler is not None:
             logger.removeHandler(handler)
             jax.config.update("jax_log_compiles", prev_log_compiles)

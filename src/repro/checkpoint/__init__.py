@@ -1,3 +1,4 @@
 from repro.checkpoint.ckpt import (load_pytree, load_server_state,  # noqa: F401
                                    load_stocfl, save_pytree,
-                                   save_server_state, save_stocfl)
+                                   save_server_state, save_stocfl,
+                                   wait_pending)

@@ -5,15 +5,64 @@ dict-ordering and easy to inspect with np.load. Shard-aware: arrays are
 pulled to host with jax.device_get (works for sharded global arrays on a
 real mesh — each process writes its addressable shards; single-process
 here, so full arrays).
+
+Async writes: every save accepts ``block=False``, which snapshots the
+arrays to host SYNCHRONOUSLY (so the checkpoint is a consistent cut no
+matter what the caller mutates next) and hands the file I/O to a
+single background writer thread — training rounds overlap the disk
+stall instead of serializing behind it. ``wait_pending()`` is the
+barrier; it re-raises the first writer error. Writes to the same
+directory are ordered (one writer thread), so an async manifest never
+lands before its arrays.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
+
+_WRITER: Optional[ThreadPoolExecutor] = None
+_WRITER_LOCK = threading.Lock()
+_PENDING: List[Future] = []
+
+
+def _writer() -> ThreadPoolExecutor:
+    global _WRITER
+    with _WRITER_LOCK:
+        if _WRITER is None:
+            _WRITER = ThreadPoolExecutor(max_workers=1,
+                                         thread_name_prefix="ckpt-writer")
+        return _WRITER
+
+
+def _submit(fn, *args) -> Future:
+    fut = _writer().submit(fn, *args)
+    _PENDING.append(fut)
+    return fut
+
+
+def wait_pending() -> None:
+    """Block until every async checkpoint write has landed; re-raises the
+    first writer failure. Call before reading a checkpoint back, and at
+    the end of a run."""
+    pending, _PENDING[:] = _PENDING[:], []
+    for fut in pending:
+        fut.result()
+
+
+def _np_safe(x):
+    """Host array in an npz-portable dtype (npy headers can't describe
+    ml_dtypes' bfloat16 — store as lossless f32; ``load_pytree`` casts
+    back to the template's dtype)."""
+    x = np.asarray(x)
+    if str(x.dtype) == "bfloat16":
+        return x.astype(np.float32)
+    return x
 
 
 def _flatten(tree, prefix="") -> Dict[str, Any]:
@@ -29,10 +78,15 @@ def _flatten(tree, prefix="") -> Dict[str, Any]:
     return out
 
 
-def save_pytree(path: str, tree) -> None:
+def save_pytree(path: str, tree, block: bool = True) -> Optional[Future]:
+    """``block=False`` snapshots to host now, writes the npz in the
+    background; returns the Future (``wait_pending()`` is the barrier)."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    flat = _flatten(jax.device_get(tree))
-    np.savez(path, **flat)
+    flat = {k: _np_safe(v) for k, v in _flatten(jax.device_get(tree)).items()}
+    if block:
+        np.savez(path, **flat)
+        return None
+    return _submit(lambda: np.savez(path, **flat))
 
 
 def load_pytree(path: str, template=None):
@@ -48,7 +102,13 @@ def load_pytree(path: str, template=None):
         if isinstance(tmpl, (list, tuple)):
             vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tmpl)]
             return type(tmpl)(vals)
-        return data[prefix[:-1]]
+        arr = data[prefix[:-1]]
+        # bf16 leaves were stored as lossless f32 (_np_safe): restore
+        # the template's dtype so round-trips are bit-exact
+        dt = getattr(tmpl, "dtype", None)
+        if dt is not None and arr.dtype != dt:
+            arr = arr.astype(dt)
+        return arr
 
     return rebuild(template)
 
@@ -60,20 +120,24 @@ def load_pytree(path: str, template=None):
 # engine.init'ed state (which supplies the context + parameter templates)
 # and resumes bit-exactly — including the client-sampling rng.
 # ---------------------------------------------------------------------------
-def save_server_state(dirpath: str, state) -> None:
+def save_server_state(dirpath: str, state,
+                      block: bool = True) -> Optional[Future]:
     """Checkpoint an ``engine.ServerState`` (any strategy) to a directory.
 
     Both clustering backends round-trip: the numpy ``ClusterState`` as a
     parent dict + per-client reps npz, the ``DeviceClusters`` pytree as
     its three stacked arrays (``clusters_device.npz``) — bit-exact
-    either way."""
+    either way. ``block=False`` snapshots everything to host now and
+    writes the three files from the background writer thread (returns
+    the Future; ``wait_pending()`` to barrier)."""
     from repro.core.device_clustering import DeviceClusters
 
     os.makedirs(dirpath, exist_ok=True)
     arrays = {"omega": state.omega,
               "models": {str(k): v for k, v in state.models.items()},
               "personal": {str(k): v for k, v in state.personal.items()}}
-    save_pytree(os.path.join(dirpath, "arrays.npz"), arrays)
+    flat_arrays = {k: _np_safe(v)
+                   for k, v in _flatten(jax.device_get(arrays)).items()}
     device_clusters = isinstance(state.clusters, DeviceClusters)
     manifest = {
         "strategy": state.strategy,
@@ -101,14 +165,26 @@ def save_server_state(dirpath: str, state) -> None:
             "seen": sorted(int(c) for c in state.clusters.seen),
         },
     }
-    with open(os.path.join(dirpath, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
     if device_clusters:
-        np.savez(os.path.join(dirpath, "clusters_device.npz"),
-                 **state.clusters.arrays())
+        cluster_file, cluster_arrays = "clusters_device.npz", {
+            k: np.asarray(v) for k, v in state.clusters.arrays().items()}
     elif state.clusters is not None:
-        np.savez(os.path.join(dirpath, "reps.npz"),
-                 **{str(k): v for k, v in state.clusters.reps.items()})
+        cluster_file, cluster_arrays = "reps.npz", {
+            str(k): np.asarray(v) for k, v in state.clusters.reps.items()}
+    else:
+        cluster_file, cluster_arrays = None, None
+
+    def write():
+        np.savez(os.path.join(dirpath, "arrays.npz"), **flat_arrays)
+        with open(os.path.join(dirpath, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if cluster_file is not None:
+            np.savez(os.path.join(dirpath, cluster_file), **cluster_arrays)
+
+    if block:
+        write()
+        return None
+    return _submit(write)
 
 
 def load_server_state(dirpath: str, state):

@@ -22,13 +22,66 @@ from repro.kernels import ops
 from repro.utils import trees
 
 
+def flat_spec(tree):
+    """Static unflatten recipe for ``flatten_tree``: (treedef, shapes,
+    dtypes, split points). Computed once per trace — under vmap the
+    per-client (unbatched) shapes are captured, so the adapter composes
+    with ``jax.vmap`` / ``chunk_map`` transparently."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(l.shape for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = [functools.reduce(lambda a, b: a * b, s, 1) for s in shapes]
+    splits = tuple(sum(sizes[:i + 1]) for i in range(len(sizes) - 1))
+    return treedef, shapes, dtypes, splits
+
+
+def flatten_tree(tree):
+    """Concatenate all leaves into one 1-D vector (the fused-kernel view)."""
+    return jnp.concatenate([jnp.ravel(l) for l in jax.tree.leaves(tree)])
+
+
+def unflatten_tree(vec, spec):
+    treedef, shapes, dtypes, splits = spec
+    parts = jnp.split(vec, splits)
+    return jax.tree.unflatten(
+        treedef,
+        [p.reshape(s).astype(d) for p, s, d in zip(parts, shapes, dtypes)])
+
+
 def make_client_update(loss_fn: Callable, lr: float, lam: float,
-                       local_steps: int = 1, backend: str = "auto"):
+                       local_steps: int = 1, backend: str = "auto",
+                       fused: bool = False):
     """loss_fn(params, batch) -> scalar.
 
     Returns client_update(theta, omega, batch) -> (theta_i, omega_i):
-    E = local_steps full-batch SGD steps of the bi-level objective."""
+    E = local_steps full-batch SGD steps of the bi-level objective.
+
+    ``fused=True`` flattens θ/ω ONCE, runs the E-step scan on the flat
+    vectors with the fused ``prox_update_flat`` kernel (jnp oracle
+    off-TPU — same f32-accumulate formula, so fused/tree agree bitwise
+    in fp32), and unflattens once at the end. Grads still see the
+    original pytree via a per-step unflatten view."""
     grad_fn = jax.grad(loss_fn)
+
+    if fused:
+        def client_update(theta, omega, batch):
+            spec = flat_spec(theta)
+            th_f = flatten_tree(theta)
+            om_f = flatten_tree(omega)
+
+            def step(carry, _):
+                thf, omf = carry
+                g_t = flatten_tree(grad_fn(unflatten_tree(thf, spec), batch))
+                g_o = flatten_tree(grad_fn(unflatten_tree(omf, spec), batch))
+                thf, omf = ops.prox_update_flat(thf, omf, g_t, g_o, lr, lam,
+                                                backend=backend)
+                return (thf, omf), None
+
+            (th_f, om_f), _ = jax.lax.scan(step, (th_f, om_f), None,
+                                           length=local_steps)
+            return unflatten_tree(th_f, spec), unflatten_tree(om_f, spec)
+
+        return client_update
 
     def client_update(theta, omega, batch):
         def step(carry, _):
@@ -44,13 +97,23 @@ def make_client_update(loss_fn: Callable, lr: float, lam: float,
     return client_update
 
 
-def make_cohort_update(loss_fn, lr, lam, local_steps=1, backend: str = "auto"):
+def make_cohort_update(loss_fn, lr, lam, local_steps=1, backend: str = "auto",
+                       fused: bool = False, donate: bool = True):
     """vmapped cohort step: thetas stacked per client, omega shared.
 
     thetas: pytree with leading client axis; batches: stacked client
-    batches. Returns (thetas_i, omegas_i) both with client axis."""
-    cu = make_client_update(loss_fn, lr, lam, local_steps, backend)
-    return jax.jit(jax.vmap(cu, in_axes=(0, None, 0)))
+    batches. Returns (thetas_i, omegas_i) both with client axis.
+
+    Off-CPU the stacked cohort buffers (thetas, batches) are donated:
+    both are per-round temporaries at every call site (thetas are
+    gathered from the bank/rows, batches from the arena), so their HBM
+    recycles into the outputs and the cohort step allocates nothing
+    net. Pass ``donate=False`` if a caller reuses either after the
+    call. CPU ignores donation; the knob resolves when the cohort fn is
+    built, which is per-EngineContext (not per-import)."""
+    cu = make_client_update(loss_fn, lr, lam, local_steps, backend, fused=fused)
+    dn = (0, 2) if (donate and jax.default_backend() != "cpu") else ()
+    return jax.jit(jax.vmap(cu, in_axes=(0, None, 0)), donate_argnums=dn)
 
 
 def chunk_map(fn, in_axes, chunk: int, donate=None):
@@ -144,11 +207,31 @@ def aggregate_stacked(stacked, weights):
     return jax.tree.map(mean_leaf, stacked)
 
 
-def local_sgd(loss_fn, params, batch, lr, steps, prox_to=None, lam=0.0):
+def local_sgd(loss_fn, params, batch, lr, steps, prox_to=None, lam=0.0,
+              fused: bool = False, backend: str = "auto"):
     """Generic E-step local SGD (shared by FedAvg/FedProx/Ditto/IFCA/CFL).
 
-    prox_to: optional reference params for a FedProx/Ditto prox term."""
+    prox_to: optional reference params for a FedProx/Ditto prox term.
+    ``fused=True`` runs the step loop on the flattened vector through
+    ``prox_update_flat`` (θ-output only; the reference is the prox
+    anchor, or θ itself with λ=0 for plain SGD — algebraically the same
+    expression tree as the unfused path, so fp32 stays bitwise)."""
     grad_fn = jax.grad(loss_fn)
+
+    if fused:
+        spec = flat_spec(params)
+        ref_f = None if prox_to is None else flatten_tree(prox_to)
+
+        def fstep(pf, _):
+            g_f = flatten_tree(grad_fn(unflatten_tree(pf, spec), batch))
+            ref = pf if ref_f is None else ref_f
+            lam_eff = 0.0 if ref_f is None else lam
+            pf, _unused = ops.prox_update_flat(pf, ref, g_f, g_f, lr, lam_eff,
+                                               backend=backend)
+            return pf, None
+
+        out_f, _ = jax.lax.scan(fstep, flatten_tree(params), None, length=steps)
+        return unflatten_tree(out_f, spec)
 
     def step(p, _):
         g = grad_fn(p, batch)

@@ -37,12 +37,21 @@ import numpy as np
 
 
 @functools.lru_cache(maxsize=None)
-def _row_writer():
-    """Jitted single-row scatter ``x.at[i].set(v)``; the stacked buffer is
-    donated off-CPU so the write recycles it in place (true O(row) joins
-    on accelerators — on CPU jax ignores donation and copies)."""
-    donate = (0,) if jax.default_backend() != "cpu" else ()
+def _row_writer_for(backend: str):
+    """Jitted single-row scatter ``x.at[i].set(v)`` for one backend; the
+    stacked buffer is donated off-CPU so the write recycles it in place
+    (true O(row) joins on accelerators — on CPU jax ignores donation and
+    copies)."""
+    donate = (0,) if backend != "cpu" else ()
     return jax.jit(lambda x, i, v: x.at[i].set(v), donate_argnums=donate)
+
+
+def _row_writer():
+    """The row writer for the backend active NOW. The backend is part of
+    the (cached) writer, not frozen at first use — a process that selects
+    its device after import (or a test that swaps platforms) gets the
+    right donation behavior at every call."""
+    return _row_writer_for(jax.default_backend())
 
 
 class ClientArena:

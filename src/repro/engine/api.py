@@ -65,6 +65,14 @@ def init(strategy: str, loss_fn, init_params, clients,
       The strategy's initial ``ServerState`` (round 0, nothing trained).
     """
     cfg = cfg or EngineConfig()
+    # Ψ stays anchored at the ORIGINAL fp32 params even in bf16 mode:
+    # the anchor is frozen (§3.1), so embeddings/means/Eq. 2 keep full
+    # precision while params/grads/batches run in cfg.dtype
+    psi_anchor = init_params
+    if cfg.dtype != "float32":
+        dt = _np_like_dtype(cfg.dtype)
+        init_params = _cast_floating(init_params, dt)
+        clients = [_cast_floating(c, dt) for c in clients]
     ctx = EngineContext(loss_fn=loss_fn, init_params=init_params,
                         clients=list(clients), cfg=cfg, eval_fn=eval_fn,
                         leaf_filter=leaf_filter, mesh=mesh)
@@ -73,9 +81,30 @@ def init(strategy: str, loss_fn, init_params, clients,
         ctx.arena = ClientArena.from_clients(ctx.clients)
     strat = get_strategy(strategy)
     if strat.needs_extractor:
-        ctx.extractor = make_extractor(loss_fn, init_params, cfg.project_dim,
+        ctx.extractor = make_extractor(loss_fn, psi_anchor, cfg.project_dim,
                                        leaf_filter=leaf_filter)
     return strat.init_state(ctx)
+
+
+def _np_like_dtype(name: str):
+    import jax.numpy as jnp
+    dt = jnp.dtype(name)
+    if not jnp.issubdtype(dt, jnp.floating):
+        raise ValueError(f"EngineConfig.dtype must be a float dtype, got {name!r}")
+    return dt
+
+
+def _cast_floating(tree, dt):
+    """Cast every floating leaf of a pytree to ``dt`` (ints/bools — labels,
+    masks, counters — keep their dtype)."""
+    import jax
+    import jax.numpy as jnp
+
+    def leaf(x):
+        x = jnp.asarray(x)
+        return x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x
+
+    return jax.tree.map(leaf, tree)
 
 
 def sample_clients(state: ServerState, unavailable=frozenset()):
@@ -312,7 +341,14 @@ def scan_program(state: ServerState, rounds: int, unavailable=frozenset()):
         def scan_fn(c0, cs):
             return jax.lax.scan(lambda c, _: step(c, cs), c0, None,
                                 length=rounds)
-        return jax.jit(scan_fn)
+        # donate the carry off-CPU: the prior state's model/bank/partition
+        # buffers roll straight into the scan's carry allocation, so a
+        # steady-state span allocates nothing net. Callers already treat
+        # the input state as consumed (run_rounds returns the successor
+        # state and the parity battery rebinds it); CPU ignores donation,
+        # so skip it there to keep compiles warning-free.
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        return jax.jit(scan_fn, donate_argnums=donate)
 
     return ctx.jit(cache_key, build), carry0, consts, finalize
 

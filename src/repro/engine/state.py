@@ -47,6 +47,12 @@ class EngineConfig:
     scan, identical draws eager or scanned); ``"numpy"`` is the host
     bit-generator compatibility mode (bit-exact with pre-scan
     checkpoints and the legacy-trainer parity tests).
+    ``fused_step`` routes every strategy's local update through the
+    flatten-once ``kernels.prox_update_flat`` path (one fused elementwise
+    pass on TPU; jnp oracle off-TPU — fp32 results stay bitwise).
+    ``dtype`` is the compute precision of params/grads/batches
+    ("float32" | "bfloat16"); Ψ-embeddings, cluster means, and the Eq. 2
+    objective always stay fp32 (see ``engine.init``).
     """
     tau: float = 0.5
     lam: float = 0.05
@@ -64,6 +70,8 @@ class EngineConfig:
     cohort_chunk: int = 0             # max clients per vmapped step (0=off)
     cluster_backend: str = "numpy"    # StoCFL partition: numpy | device
     rng_backend: str = "numpy"        # cohort sampling: numpy | device
+    fused_step: bool = False          # flat fused bilevel/SGD local update
+    dtype: str = "float32"            # param/grad compute precision
 
 
 @dataclasses.dataclass

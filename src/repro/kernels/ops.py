@@ -101,6 +101,26 @@ def prox_update_tree(theta, omega, g_theta, g_omega, eta, lam, backend: str = "a
     return jax.tree.unflatten(treedef, new_th), jax.tree.unflatten(treedef, new_om)
 
 
+def prox_update_flat(theta, omega, g_theta, g_omega, eta, lam,
+                     backend: str = "auto", **kw):
+    """Fused bi-level update on flat 1-D vectors (Algorithm 1 l.21-22).
+
+    The hot-path entry used by ``core.bilevel``'s flatten-once adapter:
+    one fused elementwise pass over the concatenated parameter vector
+    instead of per-leaf tree math. The jnp oracle mirrors the
+    ``prox_update_tree`` leaf formula exactly (f32 accumulate, cast back
+    to the operand dtype) so fused and tree paths agree bitwise off-TPU."""
+    if backend == "jnp" or (backend == "auto" and not _on_tpu()):
+        th32 = theta.astype(jnp.float32)
+        om32 = omega.astype(jnp.float32)
+        th = (th32 - eta * (g_theta.astype(jnp.float32) + lam * (th32 - om32))
+              ).astype(theta.dtype)
+        om = (om32 - eta * g_omega.astype(jnp.float32)).astype(omega.dtype)
+        return th, om
+    return _prox_pallas(theta, omega, g_theta, g_omega, eta, lam,
+                        interpret=not _on_tpu(), **kw)
+
+
 def ssm_scan(dA, dBx, C, backend: str = "auto", **kw):
     """Fused selective scan. See kernels/ssm_scan.py."""
     if backend == "jnp" or (backend == "auto" and not _on_tpu()):

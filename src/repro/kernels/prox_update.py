@@ -7,6 +7,15 @@ Unfused this reads/writes 4+2 arrays in ~7 passes; fused it streams each
 operand exactly once (memory-bound, VPU elementwise). 1-D tiling over the
 flattened parameter vector; block 64k floats (256 KiB fp32) per operand
 keeps the 6-operand working set ≈1.5 MiB — comfortably inside VMEM.
+
+Block-aligned vectors (the common case for the flatten-once adapter in
+``core.bilevel``, which can pick its own block) pass straight through:
+no padding copy, and θ/ω alias their outputs so the update happens in
+the operands' own buffers. Misaligned sizes pay one ``jnp.pad`` per
+operand (an append, not the old full-size zero-init + scatter-copy).
+Inputs are donated off-CPU — callers must treat the four arrays as
+consumed, which every call site of the fused path already does (grads
+are per-step temporaries, θ/ω are immediately rebound).
 """
 from __future__ import annotations
 
@@ -28,13 +37,17 @@ def _prox_kernel(theta_ref, omega_ref, gt_ref, go_ref, eta_ref, lam_ref,
     omega_out_ref[...] = (om - eta * go_ref[...].astype(jnp.float32)).astype(omega_out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def prox_update_flat(theta, omega, g_theta, g_omega, eta, lam, *,
-                     block: int = 65536, interpret: bool = False):
-    """All four arrays 1-D of equal length; returns (theta', omega')."""
+def _prox_call(theta, omega, g_theta, g_omega, eta, lam, *,
+               block: int, interpret: bool):
+    """Traced body shared by the donating and non-donating entry jits."""
     n = theta.shape[0]
     n_pad = -(-n // block) * block
-    pad = lambda a: jnp.zeros((n_pad,), a.dtype).at[:n].set(a)
+    if n_pad != n:
+        # misaligned tail: one append-pad per operand (pad values are
+        # computed but sliced off below — they never feed anything)
+        theta, omega, g_theta, g_omega = (
+            jnp.pad(a, (0, n_pad - n))
+            for a in (theta, omega, g_theta, g_omega))
     eta_v = jnp.full((1,), eta, jnp.float32)
     lam_v = jnp.full((1,), lam, jnp.float32)
 
@@ -57,6 +70,37 @@ def prox_update_flat(theta, omega, g_theta, g_omega, eta, lam, *,
             jax.ShapeDtypeStruct((n_pad,), theta.dtype),
             jax.ShapeDtypeStruct((n_pad,), omega.dtype),
         ],
+        # θ/ω update in place: with the jit-level donation below, the
+        # aligned path writes back into the operands' own HBM buffers
+        # (interpret mode runs the aliasing through the interpreter's
+        # copy semantics — still correct, just not in-place)
+        input_output_aliases={0: 0, 1: 1},
         interpret=interpret,
-    )(pad(theta), pad(omega), pad(g_theta), pad(g_omega), eta_v, lam_v)
-    return outs[0][:n], outs[1][:n]
+    )(theta, omega, g_theta, g_omega, eta_v, lam_v)
+    if n_pad != n:
+        return outs[0][:n], outs[1][:n]
+    return outs[0], outs[1]
+
+
+_prox_jit = functools.partial(jax.jit, static_argnames=("block", "interpret"))
+_prox_plain = _prox_jit(_prox_call)
+_prox_donating = _prox_jit(_prox_call, donate_argnums=(0, 1, 2, 3))
+
+
+def prox_update_flat(theta, omega, g_theta, g_omega, eta, lam, *,
+                     block: int = 65536, interpret: bool = False,
+                     donate=None):
+    """All four arrays 1-D of equal length; returns (theta', omega').
+
+    ``donate=None`` resolves at CALL time: off-CPU the four operands are
+    donated (their buffers are recycled into the outputs — the caller
+    must not reuse them); on CPU jax ignores donation, so the plain jit
+    is used to keep compiles warning-free. Pass an explicit bool to
+    override."""
+    if theta.shape[0] == 0:
+        return theta, omega
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    fn = _prox_donating if donate else _prox_plain
+    return fn(theta, omega, g_theta, g_omega, eta, lam,
+              block=block, interpret=interpret)

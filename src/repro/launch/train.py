@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import engine
-from repro.checkpoint import save_server_state
+from repro.checkpoint import save_server_state, wait_pending
 from repro.core import adjusted_rand_index
 from repro.data import make_federation, synthetic_lm_batch
 from repro.models import build, simple
@@ -58,7 +58,8 @@ def _engine_cfg(args) -> engine.EngineConfig:
         tau=args.tau, lam=args.lam, lr=args.lr, local_steps=args.local_steps,
         sample_rate=1.0 if args.algo == "cfl" else args.sample_rate,
         seed=args.seed, mu=args.lam, cohort_chunk=args.cohort_chunk,
-        cluster_backend=cluster_backend, rng_backend=rng_backend)
+        cluster_backend=cluster_backend, rng_backend=rng_backend,
+        fused_step=args.fused_step, dtype=args.dtype)
 
 
 def _churn_timeline(args, n_clusters: int):
@@ -136,8 +137,11 @@ def run_classification(args) -> dict:
         out["n_clusters"] = st.clusters.n_clusters()
         out["global_avg_acc"] = res["global_avg"]
     if args.save:
-        save_server_state(args.save, st)
+        # async: the JSON summary below overlaps the checkpoint write;
+        # wait_pending() barriers before the process exits
+        save_server_state(args.save, st, block=False)
     print(json.dumps(out, indent=1))
+    wait_pending()
     return out
 
 
@@ -160,7 +164,8 @@ def run_llm(args) -> dict:
                                local_steps=args.local_steps,
                                sample_rate=args.sample_rate, seed=args.seed,
                                project_dim=8192, cohort_chunk=args.cohort_chunk,
-                               cluster_backend=args.cluster_backend)
+                               cluster_backend=args.cluster_backend,
+                               fused_step=args.fused_step, dtype=args.dtype)
     mesh = make_cohort_mesh() if args.mesh else None
     st = engine.init("stocfl", model.loss_fn, params, clients, ecfg,
                      leaf_filter=llm_leaf_filter, mesh=mesh, arena=args.arena)
@@ -175,8 +180,9 @@ def run_llm(args) -> dict:
     out = {"arch": cfg.name, "ari": ari, "n_clusters": st.clusters.n_clusters(),
            "rounds": args.rounds, "wall_s": round(time.time() - t0, 1)}
     if args.save:
-        save_server_state(args.save, st)
+        save_server_state(args.save, st, block=False)
     print(json.dumps(out, indent=1))
+    wait_pending()
     return out
 
 
@@ -209,6 +215,22 @@ def main():
     ap.add_argument("--cohort-chunk", type=int, default=0,
                     help="max clients per vmapped step; larger cohorts run "
                          "in lax.map chunks with flat memory (0 = unchunked)")
+    ap.add_argument("--fused-step", action="store_true",
+                    help="route the bilevel inner step through the fused "
+                         "prox kernel (kernels.prox_update: one flat "
+                         "in-place update instead of a per-leaf chain); "
+                         "jnp oracle off-TPU, bitwise-identical in fp32")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="compute dtype for client params/grads/batches; "
+                         "Ψ-embeddings, cluster means and the Eq. 2 "
+                         "objective always stay float32")
+    ap.add_argument("--compile-cache", nargs="?", const="auto", default=None,
+                    metavar="DIR",
+                    help="persist compiled XLA executables to DIR (bare "
+                         "flag: $JAX_COMPILATION_CACHE_DIR or "
+                         "~/.cache/repro-jax-cache) so warm restarts skip "
+                         "the compile tax")
     ap.add_argument("--churn", default=None,
                     help="dynamic-federation mode (§5): a JSON trace path, "
                          "or Poisson churn 'join=2.0,leave=1.5,straggle=0.1' "
@@ -233,6 +255,11 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default=None)
     args = ap.parse_args()
+    if args.compile_cache is not None:
+        from repro.utils.cache import enable_compilation_cache
+        path = enable_compilation_cache(
+            None if args.compile_cache == "auto" else args.compile_cache)
+        print(f"compilation cache: {path}")
     if args.arch:
         run_llm(args)
     else:

@@ -1,0 +1,48 @@
+"""Persistent XLA compilation cache wiring.
+
+One call makes every jit in the process write/read compiled executables
+from a directory on disk, so a fresh process (or a ``jax.clear_caches()``
+restart) pays deserialization milliseconds instead of the multi-second
+XLA compile for every program it has seen before. The thresholds are
+dropped to zero so SMALL programs cache too — this repo's compile tax is
+many medium programs, not one giant one.
+
+Used by ``launch.train`` (``--compile-cache``) and the benchmark harness
+(``benchmarks.common``); CI shares one directory across bench steps and
+asserts the warm-start drop (see ``scripts/check_warm_cache.py``).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_ENV_DIR = "JAX_COMPILATION_CACHE_DIR"
+
+
+def default_cache_dir() -> str:
+    return os.environ.get(_ENV_DIR) or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro-jax-cache")
+
+
+def enable_compilation_cache(path: str | None = None) -> str:
+    """Point jax's persistent compilation cache at ``path`` (default:
+    ``$JAX_COMPILATION_CACHE_DIR`` or ``~/.cache/repro-jax-cache``) and
+    drop the size/time thresholds so every program is cached. Returns
+    the directory used. Safe to call more than once."""
+    path = path or default_cache_dir()
+    os.makedirs(path, exist_ok=True)
+    try:
+        from jax.experimental.compilation_cache import compilation_cache as cc
+        cc.set_cache_dir(path)
+        # jax latches a cache-used? decision at the FIRST compile of the
+        # process; if anything compiled before this call, the latch says
+        # "disabled" forever and the dir above is silently ignored.
+        # reset_cache() clears the latch (and the in-memory handle) so
+        # enabling mid-process actually takes effect.
+        cc.reset_cache()
+    except Exception:
+        jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    return path

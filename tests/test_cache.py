@@ -1,0 +1,105 @@
+"""Persistent-compilation-cache + donation-safety checks.
+
+``utils.cache.enable_compilation_cache`` must make recompiles after
+``jax.clear_caches()`` get SERVED from disk — observed through the
+``cache_hits`` counter that ``analysis.sanitize.compile_budget`` now
+tallies (the backend-compile event fires per request, served or not, so
+a warm serve shows up as ``cache_hits >= 1`` alongside the count).
+
+The donation tests pin the safety contract of the donating entry
+points: donation resolves at call/build time and is OFF on CPU, so
+donated-in-name inputs stay readable and no hidden host↔device copies
+appear (``no_transfer`` guard).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import sanitize
+from repro.kernels.prox_update import prox_update_flat
+from repro.utils.cache import enable_compilation_cache
+
+
+def test_compilation_cache_serves_after_clear(tmp_path):
+    prev_dir = jax.config.jax_compilation_cache_dir
+    prev_time = jax.config.jax_persistent_cache_min_compile_time_secs
+    prev_size = jax.config.jax_persistent_cache_min_entry_size_bytes
+    try:
+        used = enable_compilation_cache(str(tmp_path))
+        assert used == str(tmp_path)
+
+        @jax.jit
+        def f(x):
+            return jnp.tanh(x) * 3.0 + jnp.cos(x)
+
+        x = jnp.arange(128, dtype=jnp.float32)
+        want = np.asarray(f(x))                   # cold: compiles + writes
+        jax.clear_caches()
+        with sanitize.compile_budget() as log:
+            got = np.asarray(f(x))                # warm: served from disk
+        np.testing.assert_array_equal(want, got)
+        assert log.cache_hits >= 1, "recompile was not served from the cache"
+        assert log.count >= log.cache_hits
+    finally:
+        jax.config.update("jax_compilation_cache_dir", prev_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                          prev_time)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes",
+                          prev_size)
+        # drop the cache handle + used-latch so later tests re-resolve
+        # against the restored config instead of this test's tmpdir
+        from jax.experimental.compilation_cache import compilation_cache as cc
+        cc.reset_cache()
+
+
+def test_prox_donation_contract_on_cpu():
+    # the donate=None default resolves to NON-donating on CPU: inputs
+    # stay readable and no implicit host transfer sneaks past the guard
+    th, om = jnp.ones((64,)), jnp.zeros((64,))
+    gt, go = jnp.full((64,), 0.5), jnp.full((64,), 0.25)
+    eta, lam = jnp.float32(0.1), jnp.float32(0.05)   # device scalars
+    with sanitize.no_transfer():
+        t2, o2 = prox_update_flat(th, om, gt, go, eta, lam,
+                                  block=32, interpret=True)
+        t2.block_until_ready()
+    f32 = np.float32
+    exp_t = f32(1.0) - f32(0.1) * (f32(0.5) + f32(0.05) * (f32(1.0) - f32(0.0)))
+    exp_o = f32(0.0) - f32(0.1) * f32(0.25)
+    np.testing.assert_array_equal(np.asarray(th), np.ones(64))
+    np.testing.assert_array_equal(np.asarray(t2), np.full(64, exp_t, f32))
+    np.testing.assert_array_equal(np.asarray(o2), np.full(64, exp_o, f32))
+
+    # explicit donate=True consumes the operands EVEN on CPU (jax
+    # invalidates donated arrays whether or not the backend can alias
+    # them) — this is why the call-time default matters, and why every
+    # fused call site rebinds θ/ω immediately instead of reusing them
+    t3, _ = prox_update_flat(th, om, gt, go, eta, lam,
+                             block=32, interpret=True, donate=True)
+    np.testing.assert_array_equal(np.asarray(t3), np.asarray(t2))
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(th)
+
+
+def test_run_rounds_state_readable_after_scan():
+    # the scanned round loop donates its carry off-CPU; on CPU the input
+    # state must remain fully readable after the call (build-time resolve)
+    from repro import engine
+    from repro.data import rotated
+    from repro.models import simple
+
+    task = simple.SYNTH_MLP
+    loss = lambda p, b: simple.loss_fn(p, b, task)
+    clients, _, _ = rotated(n_clusters=2, n_clients=8, n_per=16, seed=0)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    cfg = engine.EngineConfig(local_steps=1, sample_rate=0.5, seed=0,
+                              rng_backend="device",
+                              cluster_backend="device")
+    st = engine.init("stocfl", loss, simple.init(jax.random.PRNGKey(0), task),
+                     clients, cfg, arena=True)
+    out = engine.run_rounds(st, 2)
+    # reading the PRE-scan state after the scan would be use-after-donate
+    # if donation were (incorrectly) enabled on CPU
+    for leaf in jax.tree.leaves(st.omega):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert out.round == st.round + 2

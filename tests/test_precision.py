@@ -1,0 +1,137 @@
+"""Mixed-precision battery for ``EngineConfig(dtype="bfloat16")``.
+
+The policy under test (ARCHITECTURE.md "hot path"): params, grads and
+client batches compute in bf16, while everything the CLUSTERING decision
+reads stays fp32 — Ψ-embeddings (extractor anchored at the fp32 init
+params), cluster means, and the Eq. 2 closed-form objective. So a bf16
+run must (a) carry bf16 leaves end-to-end, (b) keep its Ψ/objective
+surfaces in finite fp32, (c) track the fp32 trajectory to bf16 accuracy
+per strategy, and (d) round-trip through the npz checkpoint bit-exactly
+even though npy headers can't express ml_dtypes' bfloat16.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.checkpoint import (load_pytree, load_server_state, save_pytree,
+                              save_server_state, wait_pending)
+from repro.data import rotated
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+
+ALL = ["stocfl", "fedavg", "fedprox", "ditto", "ifca", "cfl"]
+
+
+def _fed(n_clients=12, n_per=32, seed=3):
+    clients, tc, tests = rotated(n_clusters=2, n_clients=n_clients,
+                                 n_per=n_per, seed=seed)
+    return [jax.tree.map(jnp.asarray, c) for c in clients], tc, tests
+
+
+def _cfg(name, **kw):
+    kw.setdefault("local_steps", 2)
+    kw.setdefault("sample_rate", 0.5)
+    kw.setdefault("seed", 0)
+    kw.setdefault("rng_backend", "device")
+    if name == "stocfl":
+        kw.setdefault("cluster_backend", "device")
+    if name == "cfl":
+        kw["sample_rate"] = 1.0
+        kw.setdefault("eps_rel", 0.9)
+        kw.setdefault("eps2", 1e-4)
+    return engine.EngineConfig(**kw)
+
+
+def _run(name, dtype, rounds=4, scan=False, fused=False):
+    clients, _, _ = _fed()
+    st = engine.init(name, LOSS, simple.init(jax.random.PRNGKey(0), TASK),
+                     clients, _cfg(name, dtype=dtype, fused_step=fused),
+                     arena=True)
+    if scan:
+        return engine.run_rounds(st, rounds)
+    for _ in range(rounds):
+        st, _ = engine.run_round(st)
+    return st
+
+
+def _flat(tree):
+    return np.concatenate([np.asarray(l, np.float32).ravel()
+                           for l in jax.tree.leaves(tree)])
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_bf16_tracks_fp32_trajectory(name):
+    a = _run(name, "float32")
+    b = _run(name, "bfloat16")
+    for leaf in jax.tree.leaves(b.omega):
+        assert leaf.dtype == jnp.bfloat16
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    fa, fb = _flat(a.omega), _flat(b.omega)
+    # bf16 has ~8 mantissa bits: demand the bf16 run stays within a few
+    # ulp-accumulations of the fp32 one over the 4-round window
+    rel = np.linalg.norm(fa - fb) / max(np.linalg.norm(fa), 1e-6)
+    assert rel < 0.05, f"{name}: bf16 drifted {rel:.4f} from fp32"
+
+
+def test_bf16_stocfl_clustering_surfaces_stay_fp32():
+    st = _run("stocfl", "bfloat16")
+    arrs = st.clusters.arrays()
+    assert arrs["rep"].dtype == jnp.float32, "Ψ reps must stay fp32"
+    # same partition as the fp32 run on this well-separated fixture
+    ref = _run("stocfl", "float32")
+    assert st.clusters.assignment() == ref.clusters.assignment()
+    for rec in st.history:
+        obj = np.asarray(rec["objective"], np.float32)
+        assert np.isfinite(obj)
+
+
+def test_bf16_scan_matches_eager_toleranced():
+    a = _run("stocfl", "bfloat16", scan=False)
+    b = _run("stocfl", "bfloat16", scan=True)
+    fa, fb = _flat(a.omega), _flat(b.omega)
+    np.testing.assert_allclose(fa, fb, rtol=0.02, atol=0.02)
+    assert a.clusters.assignment() == b.clusters.assignment()
+
+
+def test_bf16_fused_step_composes():
+    # dtype and fused_step are independent axes; together they still
+    # produce a finite bf16 trajectory near the unfused bf16 one
+    a = _run("stocfl", "bfloat16", fused=False)
+    b = _run("stocfl", "bfloat16", fused=True)
+    fa, fb = _flat(a.omega), _flat(b.omega)
+    rel = np.linalg.norm(fa - fb) / max(np.linalg.norm(fa), 1e-6)
+    assert np.isfinite(fb).all() and rel < 0.05
+
+
+def test_bf16_pytree_checkpoint_roundtrip_bitexact(tmp_path):
+    tree = {"w": jnp.asarray(np.random.RandomState(0).randn(32, 8),
+                             jnp.bfloat16),
+            "b": jnp.zeros((8,), jnp.float32)}
+    path = str(tmp_path / "t.npz")
+    save_pytree(path, tree)
+    back = load_pytree(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_bf16_server_state_roundtrip_async(tmp_path):
+    st = _run("stocfl", "bfloat16", rounds=2)
+    fut = save_server_state(str(tmp_path), st, block=False)
+    assert fut is not None
+    wait_pending()
+    clients, _, _ = _fed()
+    fresh = engine.init("stocfl", LOSS,
+                        simple.init(jax.random.PRNGKey(0), TASK), clients,
+                        _cfg("stocfl", dtype="bfloat16"), arena=True)
+    back = load_server_state(str(tmp_path), fresh)
+    for a, b in zip(jax.tree.leaves(st.omega), jax.tree.leaves(back.omega)):
+        assert b.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert back.clusters.assignment() == st.clusters.assignment()
