@@ -46,6 +46,19 @@ except stocfl's host bank rebuild (data-dependent merge shapes — see
 docs/ANALYSIS.md); the regression battery in
 ``tests/test_compile_budget.py`` gates exactly these numbers.
 
+Every timing row carries a ``devices`` field (1 for the plain sweep).
+``--mesh N`` reruns the smoke-sized points on an N-device client mesh
+(``repro.launch.mesh.make_client_mesh``) and MERGES those rows into an
+existing out file — the multi-device CI lane runs ``--mesh 1`` and
+``--mesh 4`` on forced host devices, so the json grows a device-count
+axis whose 1-device row should sit within noise of the unmeshed scan
+(the mesh-1 program is bitwise-identical modulo sharding annotations;
+see docs/SHARDING.md). Benches bypass tests/conftest.py, so forced
+host devices come from the same env knob, read here before jax loads:
+
+  REPRO_FORCE_HOST_DEVICES=8 PYTHONPATH=src \\
+      python -m benchmarks.round_scan --mesh 4
+
   PYTHONPATH=src python -m benchmarks.round_scan              # full sweep
   PYTHONPATH=src python -m benchmarks.round_scan --smoke      # CI-sized
   PYTHONPATH=src python -m benchmarks.round_scan --compile-sets
@@ -56,8 +69,17 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import time
+
+# must land before jax initializes its backends (same knob tests/conftest.py
+# translates for pytest runs)
+_force = os.environ.get("REPRO_FORCE_HOST_DEVICES")
+if _force:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={int(_force)}").strip()
 
 import jax
 import jax.numpy as jnp
@@ -86,9 +108,9 @@ def _cfg(sample_rate: float, chunk: int, fused: bool = False,
         fused_step=fused, dtype=dtype)
 
 
-def _init(clients, cfg):
+def _init(clients, cfg, mesh=None):
     return engine.init("stocfl", LOSS, simple.init(jax.random.PRNGKey(0), TASK),
-                       clients, cfg, arena=True)
+                       clients, cfg, arena=True, mesh=mesh)
 
 
 def _onboard(state, n_clients: int):
@@ -103,7 +125,8 @@ def _onboard(state, n_clients: int):
 
 def run_point(n_clients: int, rounds: int, sample_rate: float,
               chunk: int, n_per: int, fused: bool = False,
-              dtype: str = "float32", warm: bool = False) -> dict:
+              dtype: str = "float32", warm: bool = False,
+              mesh=None) -> dict:
     clients = _federation(n_clients, n_per)
     cfg = _cfg(sample_rate, chunk, fused, dtype)
 
@@ -114,7 +137,7 @@ def run_point(n_clients: int, rounds: int, sample_rate: float,
     spans = 3
 
     # ---- eager reference
-    st = _onboard(_init(clients, cfg), n_clients)
+    st = _onboard(_init(clients, cfg, mesh), n_clients)
     for _ in range(2):                       # steady-shape warm-up
         st, _ = engine.run_round(st)
     eager_s = float("inf")
@@ -127,7 +150,7 @@ def run_point(n_clients: int, rounds: int, sample_rate: float,
         eager_s = min(eager_s, time.time() - t0)
 
     # ---- fused scan: first call compiles, later calls are steady state
-    st = _onboard(_init(clients, cfg), n_clients)
+    st = _onboard(_init(clients, cfg, mesh), n_clients)
     t0 = time.time()
     s2 = engine.run_rounds(st, rounds)
     jax.block_until_ready(s2.omega)
@@ -144,6 +167,7 @@ def run_point(n_clients: int, rounds: int, sample_rate: float,
         "cohort": int(np.ceil(sample_rate * n_clients)),
         "cohort_chunk": chunk, "n_per": n_per,
         "fused": fused, "dtype": dtype,
+        "devices": 1 if mesh is None else int(mesh.devices.size),
         "eager_s": round(eager_s, 4),
         "eager_rounds_per_s": round(rounds / eager_s, 2),
         "scan_s": round(scan_s, 4),
@@ -213,7 +237,50 @@ def main():
     ap.add_argument("--compile-sets", action="store_true",
                     help="measure per-strategy compile counts under churn "
                          "and merge them into --out (skips the timing sweep)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="run the smoke points on an N-device client mesh "
+                         "and MERGE the rows (devices=N) into --out; needs "
+                         "N visible devices (REPRO_FORCE_HOST_DEVICES=8 to "
+                         "force host devices on CPU — see docs/SHARDING.md)")
     args = ap.parse_args()
+
+    if args.mesh:
+        ndev = len(jax.devices())
+        if args.mesh > ndev:
+            raise SystemExit(
+                f"--mesh {args.mesh} but only {ndev} device(s) visible; "
+                f"set REPRO_FORCE_HOST_DEVICES={args.mesh} (read before "
+                f"jax loads) to force host devices on CPU")
+        from benchmarks.common import setup_cache
+        from repro.launch.mesh import make_client_mesh
+        setup_cache()
+        mesh = make_client_mesh(args.mesh)
+        points = [dict(n_clients=24, rounds=args.rounds or 10,
+                       sample_rate=0.5, chunk=0, n_per=16),
+                  dict(n_clients=48, rounds=args.rounds or 10,
+                       sample_rate=0.25, chunk=0, n_per=16)]
+        rows = []
+        for p in points:
+            r = run_point(mesh=mesh, **p)
+            print(json.dumps(r))
+            rows.append(r)
+        try:
+            with open(args.out) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            doc = {"bench": "round_scan", "results": []}
+        # replace any stale rows for this (point, devices) combo, keep
+        # the rest of the sweep untouched — the CI lane runs --mesh 1
+        # and --mesh 4 back to back into the same file
+        key = lambda r: (r["clients"], r["rounds"], r["sample_rate"],
+                         r["fused"], r["dtype"], r.get("devices", 1))
+        fresh = {key(r) for r in rows}
+        doc["results"] = [r for r in doc.get("results", [])
+                          if key(r) not in fresh] + rows
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"merged {len(rows)} mesh rows into {args.out}")
+        return
 
     if args.compile_sets:
         try:

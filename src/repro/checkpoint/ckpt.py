@@ -192,7 +192,13 @@ def load_server_state(dirpath: str, state):
 
     ``state`` supplies the context (loss/eval fns, clients, compiled
     updates) and the parameter-shape templates; the returned state carries
-    the checkpointed arrays, partition, history, and rng position."""
+    the checkpointed arrays, partition, history, and rng position.
+
+    Mesh-transparent: restored arrays land unplaced and re-place on the
+    next scanned span (``engine.run_rounds`` re-pins carries/consts per
+    span — a no-op device_put once placed), so a checkpoint saved under
+    one mesh resumes under another, or under none. Mid-scan resume
+    parity is pinned by ``tests/test_mesh_engine.py``."""
     from repro.core.clustering import ClusterState
     from repro.core.device_clustering import DeviceClusters
 

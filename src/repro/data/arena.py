@@ -310,6 +310,24 @@ class ClientArena:
         return ClientArena(packed, mask, self.sizes, ragged, rows,
                            int(live.size), self.dead)
 
+    # ------------------------------------------------------------ sharding
+    def place(self, mesh) -> "ClientArena":
+        """New arena with ``packed``/``mask`` device_put row-sharded over
+        the mesh's client axes (``sharding.place_cohort`` on the leading
+        capacity axis; divisibility-safe — a capacity that does not
+        divide the device count stays replicated). ``engine.init`` calls
+        this once when a mesh is attached, so every later gather reads
+        from resident shards; arena mutations derive from the placed
+        buffers and the scanned engine re-pins its consts per span
+        (a no-op device_put when the sharding already matches)."""
+        if mesh is None:
+            return self
+        from repro.sharding import specs
+        return ClientArena(specs.place_cohort(self.packed, mesh),
+                           specs.place_cohort(self.mask, mesh),
+                           self.sizes, self.ragged, self.rows, self.n_rows,
+                           self.dead)
+
     # ------------------------------------------------------------- gather
     def gather(self, client_ids) -> Any:
         """Stacked cohort batch for ``client_ids`` — one take per leaf,

@@ -78,7 +78,16 @@ def init(strategy: str, loss_fn, init_params, clients,
                         leaf_filter=leaf_filter, mesh=mesh)
     if arena:
         from repro.data.arena import ClientArena
-        ctx.arena = ClientArena.from_clients(ctx.clients)
+        from repro.sharding import specs as shard_specs
+        # mesh-aligned row capacity: the packed leading axis must divide
+        # the client-axis device count for the arena rows to shard (the
+        # pad rows are zeroed spare capacity, never gathered); the
+        # pow2-doubling grow preserves the alignment thereafter
+        cap = (shard_specs.align_cohort_chunk(len(ctx.clients), mesh)
+               if mesh is not None else None)
+        ctx.arena = ClientArena.from_clients(ctx.clients, capacity=cap)
+        if mesh is not None:
+            ctx.arena = ctx.arena.place(mesh)
     strat = get_strategy(strategy)
     if strat.needs_extractor:
         ctx.extractor = make_extractor(loss_fn, psi_anchor, cfg.project_dim,
@@ -267,6 +276,13 @@ def run_rounds(state: ServerState, rounds: int,
     full-participation strategies (CFL trains its whole partition —
     same rule as the eager loop and the simulator).
 
+    With ``engine.init(..., mesh=...)`` the scanned span runs SPMD over
+    the mesh's client axes: arena rows are resident shards, gathered
+    cohorts and per-cohort-slot training partition over the devices,
+    and cross-client aggregations lower to per-shard partial reductions
+    plus an all-reduce (docs/SHARDING.md; parity pinned by
+    ``tests/test_mesh_engine.py`` at mesh sizes {1, 2, 4, 8}).
+
     Returns the state after ``rounds`` rounds.
     """
     rounds = int(rounds)
@@ -333,7 +349,11 @@ def scan_program(state: ServerState, rounds: int, unavailable=frozenset()):
     # statics are the values the step BAKES INTO ITS TRACE beyond the
     # carry/const shapes (arena raggedness, merge bounds, …) — they must
     # key the cache, or a flipped static would silently reuse a stale
-    # compiled scan
+    # compiled scan. The mesh fingerprint is a static too: the step
+    # bakes with_sharding_constraint(mesh) into its trace, so a context
+    # whose mesh changed must not reuse the old program
+    from repro.sharding import specs as shard_specs
+    statics = statics + (shard_specs.mesh_fingerprint(ctx.mesh),)
     cache_key = (f"scan:{state.strategy}:{rounds}:{m}:"
                  f"{hash((str(structure), shapes, statics))}")
 

@@ -59,6 +59,11 @@ class ClusterBank(Mapping):
     ``stacked``: pytree whose leaves are ``(capacity, ...)`` arrays with
     the K occupied rows first and zeroed spare rows after (``None`` when
     empty); ``roots``: tuple of int keys, position i ↔ row i.
+
+    Under the client-axis mesh the bank REPLICATES (cluster-keyed, K ≪
+    clients; every device needs every θ_k for the cohort gather) — its
+    pow2 row capacity still matters there because replicated shapes key
+    the same compiled-scan cache, see docs/SHARDING.md.
     """
 
     def __init__(self, stacked, roots: Sequence[int] = ()):

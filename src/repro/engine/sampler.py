@@ -48,7 +48,13 @@ def pool_capacity(n_clients: int) -> int:
     power of two means a churning federation crosses O(log population)
     distinct pool shapes instead of recompiling on every join; the
     compile-budget battery (``tests/test_compile_budget.py``) pins
-    exactly this."""
+    exactly this.
+
+    Deliberately NOT mesh-aligned: pow2 already divides the pow2 mesh
+    sizes the sharded engine runs (whenever capacity ≥ device count),
+    and a mesh-dependent pool shape would fork the draw sequence and
+    break sharded-vs-single-device parity (docs/SHARDING.md §padding;
+    pinned by ``tests/test_shard_properties.py``)."""
     n = int(n_clients)
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
 

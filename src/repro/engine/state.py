@@ -94,6 +94,15 @@ class EngineContext:
             self.cache[key] = builder()
         return self.cache[key]
 
+    def mesh_devices(self) -> int:
+        """Devices along the mesh's client axes (1 when no mesh is
+        attached) — the shard count of every cohort-sharded leading
+        axis; see ``sharding.mesh_client_count``."""
+        if self.mesh is None:
+            return 1
+        from repro.sharding import specs
+        return max(specs.mesh_client_count(self.mesh), 1)
+
 
 @dataclasses.dataclass
 class ServerState:

@@ -111,18 +111,21 @@ def _arena_consts(ctx: EngineContext) -> dict:  # jaxlint: hot-path
             "rowmap": ar.device_rows}
 
 
-def _gather_scan(consts: dict, ids, ragged: bool):
+def _gather_scan(consts: dict, ids, ragged: bool, mesh=None):
     """Traceable cohort gather from ``_arena_consts`` operands — the
     same takes (and the same ragged ``"mask"`` leaf) as
     ``ClientArena.gather``, so scanned batches are bitwise-identical to
-    the eager path's."""
+    the eager path's. With a mesh, the arena rows are resident shards
+    (``ClientArena.place``), the take is a cross-shard gather, and the
+    gathered batch is re-constrained onto the client axes so the
+    per-client training that follows partitions over the devices."""
     idx = jnp.take(consts["rowmap"], ids)
     batch = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
                          consts["packed"])
     if ragged:
         batch = dict(batch)
         batch["mask"] = jnp.take(consts["amask"], idx, axis=0)
-    return batch
+    return specs.constrain_cohort(batch, mesh)
 
 
 @functools.lru_cache(maxsize=512)
@@ -165,6 +168,32 @@ def _place(ctx: EngineContext, tree, replicated: bool = False):
     if replicated:
         return specs.place_replicated(tree, ctx.mesh)
     return specs.place_cohort(tree, ctx.mesh)
+
+
+def _constrain(ctx: EngineContext, tree):
+    """Trace-time cohort constraint (``sharding.constrain_cohort``) —
+    the in-step counterpart of ``_place`` for values produced INSIDE
+    the scanned round body (gathered batches, per-cohort model stacks,
+    scatter-updated carries). No-op without a mesh."""
+    return specs.constrain_cohort(tree, ctx.mesh)
+
+
+def _scan_consts(ctx: EngineContext, consts: dict) -> dict:
+    """Pin the scan's const operands to the mesh: arena buffers keep
+    their row sharding (leading capacity axis over the client devices —
+    a no-op device_put when ``ClientArena.place`` already placed them),
+    everything else (pool mask, sizes, row map, ω₀) replicates. Without
+    a mesh this is the identity, so the single-device scan's operands
+    are untouched."""
+    if ctx.mesh is None:
+        return consts
+    out = {}
+    for k, v in consts.items():
+        if k in ("packed", "amask"):
+            out[k] = specs.place_cohort(v, ctx.mesh)
+        else:
+            out[k] = specs.place_replicated(v, ctx.mesh)
+    return out
 
 
 def merge_cluster_models(models, merges, counts, init_params):
@@ -462,13 +491,20 @@ class StoCFLStrategy(Strategy):
         else:
             dcs0, cap, rows0, has_arr0, obj0, settled0 = \
                 self._cold_carry(ctx, state, clusters)
-        consts = dict(_arena_consts(ctx), pool=jnp.asarray(pool),
-                      sizes=_sizes_f32(state), init=ctx.init_params)
-        carry0 = (state.rng_key, state.omega, dcs0, rows0,
-                  has_arr0, obj0, settled0)
+        consts = _scan_consts(ctx, dict(_arena_consts(ctx),
+                                        pool=jnp.asarray(pool),
+                                        sizes=_sizes_f32(state),
+                                        init=ctx.init_params))
+        # carry: everything replicated — the partition/bank rows are
+        # cluster-keyed (not client-sharded); the cohort-sharded work is
+        # the per-round batches/thetas, whose segment-sums GSPMD lowers
+        # to per-shard partials + a cross-shard reduce
+        carry0 = _place(ctx, (state.rng_key, state.omega, dcs0, rows0,
+                              has_arr0, obj0, settled0), replicated=True)
         cohort = self._cohort(ctx)
         psi = ctx.extractor
         aggname = cfg.aggregator
+        mesh = ctx.mesh
         # static live-cluster bound for the merge pass: current clusters
         # plus every still-unseen live client (each could open a
         # singleton); can only shrink during the scan, so it stays
@@ -484,7 +520,7 @@ class StoCFLStrategy(Strategy):
             key, omega, dcs, rows, has, obj, settled = carry
             ids_arr = jnp.arange(cap, dtype=jnp.int32)
             key, ids = cohort_sampler.draw(key, cs["pool"], m)
-            batches = _gather_scan(cs, ids, ragged)
+            batches = _gather_scan(cs, ids, ragged, mesh)
             new = ~jnp.take(dcs.live, ids)
             new_any = jnp.any(new)
 
@@ -567,6 +603,7 @@ class StoCFLStrategy(Strategy):
                                        jnp.take(R, r_ids, axis=0),
                                        jnp.asarray(I)[None].astype(R.dtype)),
                 rows, cs["init"])
+            thetas = specs.constrain_cohort(thetas, mesh)
             thetas_i, omegas_i = cohort(thetas, omega, batches)
             w = jnp.take(cs["sizes"], ids)
             omega = AGGREGATORS[aggname](omegas_i, w)
@@ -722,14 +759,16 @@ class FedAvgStrategy(Strategy):
         update as the eager round, on the same shapes."""
         ragged = ctx.arena.ragged
         upd = self._upd(ctx)
-        consts = dict(_arena_consts(ctx), pool=jnp.asarray(pool),
-                      sizes=_sizes_f32(state))
-        carry0 = (state.rng_key, state.omega)
+        mesh = ctx.mesh
+        consts = _scan_consts(ctx, dict(_arena_consts(ctx),
+                                        pool=jnp.asarray(pool),
+                                        sizes=_sizes_f32(state)))
+        carry0 = _place(ctx, (state.rng_key, state.omega), replicated=True)
 
         def step(carry, cs):
             key, omega = carry
             key, ids = cohort_sampler.draw(key, cs["pool"], m)
-            batches = _gather_scan(cs, ids, ragged)
+            batches = _gather_scan(cs, ids, ragged, mesh)
             outs = upd(omega, batches)
             omega = bilevel.aggregate_stacked(outs, jnp.take(cs["sizes"], ids))
             return (key, omega), {"sampled": jnp.int32(m)}
@@ -811,21 +850,34 @@ class DittoStrategy(Strategy):
         personal0 = jax.tree.map(
             lambda *xs: jnp.stack(xs),
             *[state.personal[i if i < n else 0] for i in range(capn)])
-        consts = dict(_arena_consts(ctx), pool=jnp.asarray(pool),
-                      sizes=_sizes_f32(state))
-        carry0 = (state.rng_key, state.omega, personal0)
+        mesh = ctx.mesh
+        consts = _scan_consts(ctx, dict(_arena_consts(ctx),
+                                        pool=jnp.asarray(pool),
+                                        sizes=_sizes_f32(state)))
+        # the stacked personal bank is the one client-indexed carry leaf:
+        # shard its rows over the client axis (pow2 capn divides the pow2
+        # mesh whenever capn ≥ devices) and re-pin the scatter output so
+        # the carry's sharding is a scan fixed point — donation on
+        # accelerators requires the in/out shardings to match
+        carry0 = (_place(ctx, (state.rng_key, state.omega),
+                         replicated=True)
+                  + (_place(ctx, personal0),))
 
         def step(carry, cs):
             key, omega, personal = carry
             key, ids = cohort_sampler.draw(key, cs["pool"], m)
-            batches = _gather_scan(cs, ids, ragged)
+            batches = _gather_scan(cs, ids, ragged, mesh)
             g_outs = gupd(omega, batches)
-            v = jax.tree.map(lambda P: jnp.take(P, ids, axis=0), personal)
+            v = specs.constrain_cohort(
+                jax.tree.map(lambda P: jnp.take(P, ids, axis=0), personal),
+                mesh)
             v_outs = pupd(v, omega, batches)
             omega = bilevel.aggregate_stacked(g_outs,
                                               jnp.take(cs["sizes"], ids))
-            personal = jax.tree.map(lambda P, V: P.at[ids].set(V),
-                                    personal, v_outs)
+            personal = specs.constrain_cohort(
+                jax.tree.map(lambda P, V: P.at[ids].set(V),
+                             personal, v_outs),
+                mesh)
             return (key, omega, personal), {"sampled": jnp.int32(m)}
 
         def finalize(state, carry, ys, rounds):
@@ -921,18 +973,21 @@ class IFCAStrategy(Strategy):
         M = int(ctx.cfg.n_models)
         choice, upd = self._choice(ctx), self._upd(ctx)
         rows0 = state.models.take(np.arange(M), ctx.init_params)
-        consts = dict(_arena_consts(ctx), pool=jnp.asarray(pool),
-                      sizes=_sizes_f32(state))
-        carry0 = (state.rng_key, rows0)
+        mesh = ctx.mesh
+        consts = _scan_consts(ctx, dict(_arena_consts(ctx),
+                                        pool=jnp.asarray(pool),
+                                        sizes=_sizes_f32(state)))
+        carry0 = _place(ctx, (state.rng_key, rows0), replicated=True)
 
         def step(carry, cs):
             key, rows = carry
             key, ids = cohort_sampler.draw(key, cs["pool"], m)
-            batches = _gather_scan(cs, ids, ragged)
+            batches = _gather_scan(cs, ids, ragged, mesh)
             losses = choice(rows, batches)
             choices = jnp.argmin(losses, axis=1)
-            thetas = jax.tree.map(lambda R: jnp.take(R, choices, axis=0),
-                                  rows)
+            thetas = specs.constrain_cohort(
+                jax.tree.map(lambda R: jnp.take(R, choices, axis=0),
+                             rows), mesh)
             outs = upd(thetas, batches)
             w = jnp.take(cs["sizes"], ids)
             agg = bilevel.aggregate_segments(outs, w, choices, M)
@@ -1001,8 +1056,14 @@ class CFLStrategy(Strategy):
                     in_axes=(0, 0))), (0, 0), _chunk(ctx), donate=())
 
             def core(assign, k, rows, batches, sizes):
-                thetas = jax.tree.map(
-                    lambda R: jnp.take(R, assign, axis=0), rows)
+                # cohort-constrain the per-client operands HERE — eager
+                # and scan both call this program, so the sharded
+                # lowering (and its reduction order) is shared by
+                # construction
+                batches = specs.constrain_cohort(batches, ctx.mesh)
+                thetas = specs.constrain_cohort(
+                    jax.tree.map(lambda R: jnp.take(R, assign, axis=0),
+                                 rows), ctx.mesh)
                 outs = upd(thetas, batches)
                 deltas = jax.tree.map(lambda o, t: o - t, outs, thetas)
                 flat = jax.vmap(trees.tree_flatten_vector)(deltas)  # (L, d)
@@ -1135,15 +1196,18 @@ class CFLStrategy(Strategy):
         live, assign, k, rows = self._matrix(ctx, state)
         L = len(live)
         core = self._core(ctx, L)
-        consts = dict(_arena_consts(ctx),
-                      live=jnp.asarray(live.astype(np.int32)),
-                      sizes=jnp.asarray(
-                          np.asarray(state.sizes, np.float32)[live]))
-        carry0 = (jnp.asarray(assign), jnp.int32(k), rows)
+        mesh = ctx.mesh
+        consts = _scan_consts(ctx, dict(
+            _arena_consts(ctx),
+            live=jnp.asarray(live.astype(np.int32)),
+            sizes=jnp.asarray(
+                np.asarray(state.sizes, np.float32)[live])))
+        carry0 = _place(ctx, (jnp.asarray(assign), jnp.int32(k), rows),
+                        replicated=True)
 
         def step(carry, cs):
             assign, k, rows = carry
-            batches = _gather_scan(cs, cs["live"], ragged)
+            batches = _gather_scan(cs, cs["live"], ragged, mesh)
             assign, k, rows = core(assign, k, rows, batches, cs["sizes"])
             return (assign, k, rows), {"n_clusters": k,
                                        "sampled": jnp.int32(L)}

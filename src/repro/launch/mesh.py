@@ -26,6 +26,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(dev_array, axes)
 
 
+def make_client_mesh(n: int = 0):
+    """1-D ``("clients",)`` mesh for the sharded scanned engine
+    (``engine.run_rounds`` under ``engine.init(..., mesh=...)``): arena
+    rows, cohort gathers and the per-cohort-slot training partition over
+    this axis, cross-client aggregations all-reduce across it. n=0 uses
+    every local device; otherwise the first n. On CPU,
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` provides the
+    devices (real multi-device semantics — the mesh parity battery runs
+    exactly this way)."""
+    import numpy as np
+    devices = jax.devices()
+    n = len(devices) if n <= 0 else min(n, len(devices))
+    return jax.sharding.Mesh(np.array(devices[:n]), ("clients",))
+
+
 def make_cohort_mesh(n: int = 0):
     """1-D client-axis mesh for the engine's cohort step: the vmapped
     per-client bi-level updates shard over ("data",) — each device owns a

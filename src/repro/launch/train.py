@@ -4,7 +4,7 @@ Any registered strategy (stocfl, fedavg, fedprox, ditto, ifca, cfl) runs
 through the same ``engine.init -> engine.run_round`` loop; StoCFL adds
 clustering metrics, checkpointing of the full ``ServerState``, and §4.4
 inference. ``--mesh`` places the vmapped cohort step on a client-axis
-mesh over the local devices. ``--churn`` swaps the static loop for the
+mesh over the local devices (the sharded scanned engine — docs/SHARDING.md). ``--churn`` swaps the static loop for the
 §5 dynamic-federation simulator (``repro.sim``): Poisson joins/leaves/
 stragglers or a replayed JSON trace, e.g.
 
@@ -41,7 +41,7 @@ from repro.core import adjusted_rand_index
 from repro.data import make_federation, synthetic_lm_batch
 from repro.models import build, simple
 from repro.configs import get_config
-from repro.launch.mesh import make_cohort_mesh
+from repro.launch.mesh import make_client_mesh
 
 
 def _engine_cfg(args) -> engine.EngineConfig:
@@ -93,7 +93,7 @@ def run_classification(args) -> dict:
     loss = lambda p, b: simple.loss_fn(p, b, task)
     evalf = jax.jit(lambda p, b: simple.accuracy(p, b, task))
 
-    mesh = make_cohort_mesh() if args.mesh else None
+    mesh = make_client_mesh() if args.mesh else None
     t0 = time.time()
     arena = args.arena or args.scan_rounds   # scans gather from the arena
     st = engine.init(args.algo, loss, params, clients, _engine_cfg(args),
@@ -166,7 +166,7 @@ def run_llm(args) -> dict:
                                project_dim=8192, cohort_chunk=args.cohort_chunk,
                                cluster_backend=args.cluster_backend,
                                fused_step=args.fused_step, dtype=args.dtype)
-    mesh = make_cohort_mesh() if args.mesh else None
+    mesh = make_client_mesh() if args.mesh else None
     st = engine.init("stocfl", model.loss_fn, params, clients, ecfg,
                      leaf_filter=llm_leaf_filter, mesh=mesh, arena=args.arena)
     t0 = time.time()
@@ -196,7 +196,7 @@ def main():
     ap.add_argument("--arch", default=None, help="LLM mode: assigned arch id")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mesh", action="store_true",
-                    help="place the cohort step on a client-axis mesh")
+                    help="shard the engine over a (\"clients\",) mesh of the local devices (docs/SHARDING.md)")
     ap.add_argument("--arena", action="store_true",
                     help="pack client shards into a device-resident arena "
                          "(cohort = one gather instead of a per-round restack)")

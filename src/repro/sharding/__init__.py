@@ -1,9 +1,52 @@
+"""Mesh-sharding rules and cohort placement (see docs/SHARDING.md).
+
+Two sharding surfaces live here:
+
+* the MaxText-style logical-axis rule table for model parameters and
+  activations (``ShardCtx`` / ``shard`` / ``param_shardings`` /
+  ``unshard_fsdp``), used by the LLM substrate path; and
+* the client-axis cohort placement the federated engine's scanned round
+  loop runs on (``cohort_spec`` / ``place_cohort`` /
+  ``constrain_cohort`` / ``psum_segments``): stacked cohort pytrees
+  carry clients on the leading axis, placed over the mesh's client axes
+  (``client_axes``), with every placement divisibility-safe — a
+  non-dividing axis silently relaxes to replicated, so correctness
+  never depends on mesh size.
+"""
 from repro.sharding.specs import (  # noqa: F401
     ShardCtx,
+    align_cohort_chunk,
+    client_axes,
+    cohort_spec,
+    constrain_cohort,
     current_ctx,
+    mesh_client_count,
+    mesh_fingerprint,
     param_shardings,
+    place_cohort,
+    place_replicated,
+    psum_segments,
     replicated,
     shard,
     spec_for_path,
     unshard_fsdp,
 )
+
+__all__ = [
+    "ShardCtx",
+    "align_cohort_chunk",
+    "client_axes",
+    "cohort_spec",
+    "constrain_cohort",
+    "current_ctx",
+    "mesh_client_count",
+    "mesh_fingerprint",
+    "param_shardings",
+    "place_cohort",
+    "place_replicated",
+    "psum_segments",
+    "replicated",
+    "shard",
+    "spec_for_path",
+    "unshard_fsdp",
+]

@@ -18,6 +18,7 @@ import threading
 from typing import Optional, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _ctx = threading.local()
@@ -39,6 +40,8 @@ class ShardCtx:
         self.logical_map = logical_map or {}
 
     def resolve(self, logical: Sequence) -> P:
+        """Logical per-dim axis names -> physical ``PartitionSpec``
+        (unmapped logical names and ``None`` dims replicate)."""
         phys = []
         for ax in logical:
             if ax is None:
@@ -59,6 +62,9 @@ class ShardCtx:
 
 
 def current_ctx() -> Optional[ShardCtx]:
+    """The innermost active ``ShardCtx`` (``with ShardCtx(mesh): ...``),
+    or None when no sharding context is entered — ``shard`` and
+    ``unshard_fsdp`` are then no-ops."""
     stack = getattr(_ctx, "stack", [])
     return stack[-1] if stack else None
 
@@ -138,6 +144,9 @@ PARAM_RULES = [
 
 
 def spec_for_path(path: str, ndim: int, ctx: ShardCtx) -> P:
+    """Resolve a parameter pytree path against ``PARAM_RULES``: first
+    matching rule wins, rule specs bind to the TRAILING dims (stacked-
+    layer leading axes replicate), no match replicates everything."""
     for pat, logical in PARAM_RULES:
         if re.match(pat, path):
             spec = ctx.resolve(logical)
@@ -183,6 +192,7 @@ def param_shardings(params, mesh: Mesh, ctx: Optional[ShardCtx] = None):
 
 
 def replicated(mesh: Mesh):
+    """Fully-replicated ``NamedSharding`` over ``mesh``."""
     return NamedSharding(mesh, P())
 
 
@@ -240,6 +250,83 @@ def place_replicated(tree, mesh: Mesh):
     """device_put a pytree fully replicated over the mesh (ω, shared refs)."""
     sh = NamedSharding(mesh, P())
     return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+def constrain_cohort(tree, mesh: Optional[Mesh]):
+    """Trace-time twin of ``place_cohort``: ``with_sharding_constraint``
+    every stacked leaf's LEADING (client) axis onto the mesh's client
+    axes, inside a jitted computation.
+
+    This is the constraint the scanned round body places on gathered
+    cohort batches and per-cohort model stacks — XLA then partitions the
+    vmapped per-client math over the devices and lowers the cross-client
+    reductions (weighted means, segment-sums) to per-shard partials plus
+    an all-reduce. Divisibility-safe like ``place_cohort``: a leading
+    axis that does not divide the client-axis device count keeps the
+    leaf replicated (correctness never depends on cohort divisibility);
+    ``mesh=None`` is the single-device no-op."""
+    if mesh is None or not client_axes(mesh):
+        return tree
+
+    def one(x):
+        spec = cohort_spec(mesh, getattr(x, "ndim", 0))
+        if not _divisible(x, spec, mesh):
+            spec = P()
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(one, tree)
+
+
+def mesh_fingerprint(mesh: Optional[Mesh]):
+    """Hashable identity of a mesh for compile-cache keys: axis names,
+    axis sizes, and the device ids in mesh order — two meshes with the
+    same fingerprint lower a ``with_sharding_constraint`` identically,
+    two different ones must not share a cached scan."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names),
+            tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+def psum_segments(stacked, weights, segment_ids, num_segments: int,
+                  mesh: Mesh):
+    """Weighted segment-sum over a client-sharded leading axis, written
+    as an EXPLICIT ``shard_map``: each shard reduces its local rows into
+    ``num_segments`` partial sums, then one ``psum`` over the client
+    axes combines them — the collective form of
+    ``bilevel.aggregate_segments``'s dense reduction.
+
+    The GSPMD-constrained engine path lowers to this same shape
+    (per-shard ``segment_sum`` + cross-shard all-reduce); this function
+    exists so the mesh battery can check the compiled engine against an
+    independent hand-written collective (docs/SHARDING.md). Falls back
+    to the dense reduction when the leading axis does not divide the
+    mesh's client-axis device count."""
+    from jax.experimental.shard_map import shard_map
+
+    axes = client_axes(mesh)
+    lead = int(np.shape(jax.tree.leaves(stacked)[0])[0])
+    n = mesh_client_count(mesh)
+    dense = lambda: jax.tree.map(
+        lambda x: jax.ops.segment_sum(
+            x * weights.reshape((-1,) + (1,) * (x.ndim - 1)),
+            segment_ids, num_segments=num_segments), stacked)
+    if not axes or n <= 1 or lead % n != 0:
+        return dense()
+    axis_tag = axes if len(axes) > 1 else axes[0]
+
+    def local(xs, w, seg):
+        part = jax.tree.map(
+            lambda x: jax.ops.segment_sum(
+                x * w.reshape((-1,) + (1,) * (x.ndim - 1)),
+                seg, num_segments=num_segments), xs)
+        return jax.lax.psum(part, axes)
+
+    spec = P(axis_tag)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(spec, spec, spec), out_specs=P())(
+        stacked, weights, segment_ids)
 
 
 def unshard_fsdp(tree):

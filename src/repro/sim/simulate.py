@@ -160,7 +160,10 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
         gaps — the per-round host dispatch
         disappears for exactly the rounds that don't need it, and the
         trajectory stays bitwise identical to the eager loop (the
-        scan-vs-eager battery pins this under churn). Needs the
+        scan-vs-eager battery pins this under churn). When the engine
+        carries a client-axis mesh, the scanned spans run SPMD over it
+        unchanged (the mesh parity battery covers churn boundaries —
+        docs/SHARDING.md). Needs the
         run_rounds preconditions (arena + device rng; device partition
         for StoCFL); states that don't meet them fall back to eager
         rounds silently.

@@ -5,6 +5,15 @@ import os
 # itself before any import). Keep any inherited flag from leaking in.
 os.environ.pop("XLA_FLAGS", None)
 
+# Opt-in multi-device lane: REPRO_FORCE_HOST_DEVICES=N splits the host
+# CPU into N real XLA devices (the mesh parity battery in
+# test_mesh_engine.py runs under N=8 in CI). Must be translated into
+# XLA_FLAGS before jax is first imported — it is ignored afterwards.
+_force = os.environ.pop("REPRO_FORCE_HOST_DEVICES", "")
+if _force:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={int(_force)}")
+
 import jax  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")

@@ -103,3 +103,41 @@ def test_run_rounds_state_readable_after_scan():
     for leaf in jax.tree.leaves(st.omega):
         assert np.isfinite(np.asarray(leaf)).all()
     assert out.round == st.round + 2
+
+
+def test_donated_carry_sharding_is_scan_fixed_point():
+    """Donation audit under sharding: on accelerators the scan donates
+    its carry, and XLA can only alias a donated buffer when the carry's
+    OUTPUT sharding equals its input sharding. This pins that contract
+    for the one client-sharded carry leaf (Ditto's stacked personal
+    bank) and for a replicated carry (fedavg's ω): every carry leaf
+    must come out of the compiled span with the sharding it went in
+    with — a silent reshard would break donation (and double the
+    scan's carry memory) the day this runs on TPU. Mesh size adapts to
+    the available devices (1 on plain tier-1, 4+ in the CI mesh lane),
+    so the invariant itself is checked everywhere."""
+    from repro import engine
+    from repro.data import rotated
+    from repro.launch.mesh import make_client_mesh
+    from repro.models import simple
+
+    task = simple.SYNTH_MLP
+    loss = lambda p, b: simple.loss_fn(p, b, task)
+    clients, _, _ = rotated(n_clusters=2, n_clients=8, n_per=16, seed=0)
+    clients = [jax.tree.map(jnp.asarray, c) for c in clients]
+    mesh = make_client_mesh(min(4, len(jax.devices())))
+    for name in ("ditto", "fedavg"):
+        cfg = engine.EngineConfig(local_steps=1, sample_rate=0.5, seed=0,
+                                  rng_backend="device")
+        st = engine.init(name, loss,
+                         simple.init(jax.random.PRNGKey(0), task),
+                         clients, cfg, arena=True, mesh=mesh)
+        fn, carry0, consts, _fin = engine.scan_program(st, 2)
+        carry1, _ys = fn(carry0, consts)
+        # jax's own equivalence: handles trailing-None specs and size-1
+        # mesh axes (P("clients") ≡ P() on one device) — exactly the
+        # notion XLA's donation aliasing uses
+        for a, b in zip(jax.tree.leaves(carry0), jax.tree.leaves(carry1)):
+            assert a.sharding.is_equivalent_to(b.sharding, a.ndim), \
+                f"{name}: carry sharding not a scan fixed point " \
+                f"({a.sharding} -> {b.sharding})"

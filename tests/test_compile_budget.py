@@ -114,6 +114,52 @@ def test_joins_within_pow2_bracket_add_zero_programs():
     assert st.n_clients == 16 and st.round == 10
 
 
+def test_sharded_joins_within_pow2_bracket_add_zero_programs():
+    """The bracket claim survives the mesh: on a multi-device
+    ("clients",) mesh the scan's compile key gains the mesh fingerprint
+    but still quantizes shapes by pow2 bracket — joins 14 → 16 with a
+    constant cohort compile ZERO new programs, and the per-span
+    ``device_put`` re-pins of already-placed arena shards count no
+    compiles either. Runs on 4 devices under REPRO_FORCE_HOST_DEVICES
+    (CI); on fewer devices the mesh degenerates but the code path is
+    the same."""
+    from repro.launch.mesh import make_client_mesh
+    nd = min(4, len(jax.devices()))
+    clients, _, _ = _fed()                # 12 clients
+    extra, _, _ = _fed(n_clients=4, seed=11)
+    st = engine.init("fedavg", LOSS,
+                     simple.init(jax.random.PRNGKey(0), TASK), clients,
+                     _cfg("fedavg", sample_rate=0.25), eval_fn=EVAL,
+                     arena=True, mesh=make_client_mesh(nd))
+    st = engine.run_rounds(st, 2)
+    st, _ = engine.join(st, extra[0])     # n=13: warms join + arena growth
+    st = engine.run_rounds(st, 2)
+    with sanitize.compile_budget(0) as log:
+        for batch in extra[1:]:           # n=14, 15, 16
+            st, _ = engine.join(st, batch)
+            st = engine.run_rounds(st, 2)
+    assert log.count == 0
+    assert st.n_clients == 16 and st.round == 10
+
+
+def test_mesh_fingerprint_keys_separate_scan_caches():
+    """Two engines over the same federation but different meshes must
+    not share a compiled scan (the constraint lowering differs): the
+    scan-cache key includes ``sharding.mesh_fingerprint``."""
+    from repro.launch.mesh import make_client_mesh
+    clients, _, _ = _fed()
+    a = _init("fedavg", clients)
+    b = engine.init("fedavg", LOSS,
+                    simple.init(jax.random.PRNGKey(0), TASK), clients,
+                    _cfg("fedavg"), eval_fn=EVAL, arena=True,
+                    mesh=make_client_mesh(1))
+    ka = [k for k in (engine.scan_program(a, 2), a.ctx.cache)[1]
+          if k.startswith("scan:")]
+    kb = [k for k in (engine.scan_program(b, 2), b.ctx.cache)[1]
+          if k.startswith("scan:")]
+    assert ka and kb and set(ka).isdisjoint(kb), (ka, kb)
+
+
 @pytest.mark.parametrize("name", ALL)
 def test_churn_cycle_compile_set_pinned(name):
     """After two warm churn cycles, a third identical-shape cycle stays

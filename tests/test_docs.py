@@ -4,8 +4,8 @@ coverage, and resolvable markdown links.
 The README's "Engine quickstart" code block is executed verbatim — if
 the public API drifts, this test (not a reader) finds out. The
 docstring test walks the ``__all__`` of ``repro.engine``, ``repro.sim``,
-``repro.core``, ``repro.kernels``, and ``repro.analysis`` and fails on
-any public function,
+``repro.core``, ``repro.kernels``, ``repro.analysis`` and
+``repro.sharding`` and fails on any public function,
 class, or class member without a docstring, which is what keeps
 `docs/ARCHITECTURE.md`'s and `docs/CLUSTERING.md`'s "see the
 docstrings" stance honest."""
@@ -35,7 +35,7 @@ def _public_members(cls):
 
 @pytest.mark.parametrize("modname", ["repro.engine", "repro.sim",
                                      "repro.core", "repro.kernels",
-                                     "repro.analysis"])
+                                     "repro.analysis", "repro.sharding"])
 def test_public_api_docstring_coverage(modname):
     mod = __import__(modname, fromlist=["__all__"])
     assert mod.__doc__, f"{modname} needs a module docstring"

@@ -1,0 +1,304 @@
+"""Multi-device parity battery for the mesh-sharded scanned engine.
+
+``engine.init(..., mesh=make_client_mesh(n))`` turns the fully-jitted
+``run_rounds`` scan into one SPMD program over a 1-D ``("clients",)``
+mesh: arena rows, cohort gathers and the vmapped per-client training
+partition over the devices, cross-client aggregations all-reduce across
+them (docs/SHARDING.md). These tests pin the parity contract against
+the single-device scan for every registered strategy at mesh sizes
+{1, 2, 4, 8}:
+
+- mesh size 1 is BITWISE equal to the no-mesh scan (same programs, same
+  reduction order);
+- larger meshes keep every piece of integer bookkeeping exact — PRNG
+  keys (so draw sequences never fork), partition assignments, Ψ reps,
+  member tuples, round counters, departure sets — while trained floats
+  agree to a documented tolerance (an all-reduce of per-shard partials
+  sums in a different order than the single-device row-major reduction;
+  rtol 2e-5 on this fixture);
+- churn boundaries (join/leave between scanned spans), mid-scan
+  checkpoint save/resume, ragged arenas and non-mesh-divisible cohort
+  sizes all preserve that contract;
+- the GSPMD-lowered aggregation matches ``sharding.psum_segments``, an
+  independent hand-written shard_map collective (per-shard segment-sum
+  + cross-shard psum);
+- the client-sharded scan carry (Ditto's stacked personal bank) keeps
+  its ``NamedSharding`` across scan iterations — the donation contract
+  on accelerators requires the carry sharding to be a fixed point.
+
+Multi-device lane: run under ``REPRO_FORCE_HOST_DEVICES=8`` (conftest
+translates it to ``--xla_force_host_platform_device_count`` before jax
+imports; CI does). On a plain single-device run only the mesh-size-1
+cases execute — still meaningful: they prove the mesh machinery itself
+changes nothing.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine
+from repro.checkpoint import load_server_state, save_server_state
+from repro.data import rotated
+from repro.launch.mesh import make_client_mesh
+from repro.models import simple
+from repro.sharding import specs
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+
+ALL = ["stocfl", "fedavg", "fedprox", "ditto", "ifca", "cfl"]
+MESH_SIZES = [s for s in (1, 2, 4, 8) if s <= len(jax.devices())]
+# reduction-order tolerance for trained floats at mesh > 1 (see module
+# docstring); mesh size 1 bypasses this and compares bitwise
+RTOL, ATOL = 2e-5, 1e-6
+
+
+def _fed(n_clients=12, n_per=32, seed=3):
+    clients, tc, tests = rotated(n_clusters=2, n_clients=n_clients,
+                                 n_per=n_per, seed=seed)
+    return [jax.tree.map(jnp.asarray, c) for c in clients]
+
+
+def _params(seed=0):
+    return simple.init(jax.random.PRNGKey(seed), TASK)
+
+
+def _cfg(name, **kw):
+    kw.setdefault("local_steps", 2)
+    kw.setdefault("sample_rate", 0.5)
+    kw.setdefault("seed", 0)
+    kw.setdefault("rng_backend", "device")
+    if name == "stocfl":
+        kw.setdefault("cluster_backend", "device")
+    if name == "cfl":
+        kw["sample_rate"] = 1.0
+        kw.setdefault("eps_rel", 0.9)
+        kw.setdefault("eps2", 1e-4)
+    return engine.EngineConfig(**kw)
+
+
+def _init(name, clients, mesh=None, **kw):
+    return engine.init(name, LOSS, _params(), clients, _cfg(name, **kw),
+                       arena=True, mesh=mesh)
+
+
+def _leaves_equal(a, b, exact):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if exact or not np.issubdtype(x.dtype, np.floating):
+            if not np.array_equal(x, y):
+                return False
+        elif not np.allclose(x, y, rtol=RTOL, atol=ATOL):
+            return False
+    return True
+
+
+def _assert_states_match(ref, got, exact):
+    """ref = single-device scan, got = sharded scan. ``exact`` compares
+    bitwise (the mesh-size-1 contract); otherwise floats use the
+    documented tolerance and every integer/bookkeeping field stays
+    exact."""
+    assert _leaves_equal(ref.omega, got.omega, exact), "omega diverged"
+    assert set(ref.models.keys()) == set(got.models.keys()), \
+        "bank keys diverged"
+    for k in ref.models:
+        assert _leaves_equal(ref.models[k], got.models[k], exact), \
+            f"bank row {k} diverged"
+    assert set(ref.personal) == set(got.personal)
+    for k in ref.personal:
+        assert _leaves_equal(ref.personal[k], got.personal[k], exact), \
+            f"personal model {k} diverged"
+    if ref.clusters is not None:
+        assert ref.clusters.assignment() == got.clusters.assignment(), \
+            "partition diverged"
+        assert sorted(ref.clusters.seen) == sorted(got.clusters.seen)
+        for c in ref.clusters.seen:
+            # Ψ reps are per-client (no cross-client reduction in the
+            # extractor): exact at every mesh size
+            assert np.array_equal(np.asarray(ref.clusters.reps[c]),
+                                  np.asarray(got.clusters.reps[c])), \
+                f"Ψ rep of client {c} diverged"
+    assert ref.members == got.members, "CFL partition diverged"
+    assert ref.round == got.round
+    assert ref.left == got.left
+    assert len(ref.history) == len(got.history)
+    for hr, hg in zip(ref.history, got.history):
+        assert set(hr) == set(hg)
+        for k in hr:
+            if isinstance(hr[k], float) and not exact:
+                assert np.allclose(hr[k], hg[k], rtol=RTOL, atol=ATOL), \
+                    f"history[{k}] diverged"
+            else:
+                assert hr[k] == hg[k], f"history[{k}] diverged"
+    if ref.rng_key is not None or got.rng_key is not None:
+        assert np.array_equal(np.asarray(ref.rng_key),
+                              np.asarray(got.rng_key)), \
+            "PRNG key diverged (draw sequences would fork)"
+
+
+# =============================================== core mesh parity battery
+@pytest.mark.parametrize("nd", MESH_SIZES)
+@pytest.mark.parametrize("name", ALL)
+def test_sharded_scan_matches_single_device(name, nd):
+    """run_rounds over a ("clients",) mesh of every size ≡ the no-mesh
+    scan, for all six strategies over 5 rounds."""
+    clients = _fed()
+    ref = engine.run_rounds(_init(name, clients), 5)
+    got = engine.run_rounds(_init(name, clients, mesh=make_client_mesh(nd)), 5)
+    _assert_states_match(ref, got, exact=(nd == 1))
+
+
+@pytest.mark.parametrize("nd", MESH_SIZES)
+@pytest.mark.parametrize("name", ["stocfl", "fedavg", "ditto"])
+def test_churn_boundary_sharded(name, nd):
+    """Join + leave between scanned spans under the mesh: the arena
+    rebuild/tombstone, the pool-bracket transition and the fresh scan
+    compile all preserve parity with the single-device timeline."""
+    clients = _fed()
+    extra = _fed(n_clients=14, seed=9)[12:]
+
+    def timeline(mesh):
+        st = _init(name, list(clients), mesh=mesh)
+        st = engine.run_rounds(st, 2)
+        st, _ = engine.join(st, extra[0])
+        st = engine.run_rounds(st, 2)
+        st = engine.leave(st, 3)
+        return engine.run_rounds(st, 2)
+
+    ref = timeline(None)
+    got = timeline(make_client_mesh(nd))
+    _assert_states_match(ref, got, exact=(nd == 1))
+
+
+@pytest.mark.parametrize("name", ["stocfl", "ditto", "cfl"])
+def test_checkpoint_resume_mid_scan_sharded(name, tmp_path):
+    """Save after a sharded span, reload into a FRESH sharded engine,
+    finish there: bitwise vs the uninterrupted sharded run (same mesh →
+    same programs → same reduction order; checkpoints round-trip
+    exactly and reloaded host arrays re-place on the next span)."""
+    nd = MESH_SIZES[-1]
+    clients = _fed()
+    cont = engine.run_rounds(_init(name, clients, mesh=make_client_mesh(nd)), 5)
+
+    st = engine.run_rounds(_init(name, clients, mesh=make_client_mesh(nd)), 2)
+    save_server_state(str(tmp_path / "ck"), st)
+    fresh = _init(name, clients, mesh=make_client_mesh(nd))
+    resumed = load_server_state(str(tmp_path / "ck"), fresh)
+    resumed = engine.run_rounds(resumed, 3)
+    _assert_states_match(cont, resumed, exact=True)
+
+
+@pytest.mark.parametrize("name", ["fedavg", "stocfl"])
+def test_non_divisible_cohort_sharded(name):
+    """A cohort size that does not divide the mesh (10 clients at 50% →
+    m=5 on 4 devices) must relax to replicated placement, not crash or
+    change results (divisibility-safe constraints, docs/SHARDING.md)."""
+    nd = max(MESH_SIZES)
+    clients = _fed(n_clients=10)
+    ref = engine.run_rounds(_init(name, clients), 4)
+    got = engine.run_rounds(_init(name, clients, mesh=make_client_mesh(nd)), 4)
+    _assert_states_match(ref, got, exact=(nd == 1))
+
+
+@pytest.mark.parametrize("nd", MESH_SIZES)
+def test_ragged_arena_sharded(nd):
+    """Ragged federations (mask leaf in the gathered batch) shard like
+    equal-size ones."""
+    clients = _fed()
+    clients[1] = jax.tree.map(lambda x: x[:17], clients[1])
+    clients[5] = jax.tree.map(lambda x: x[:9], clients[5])
+    ref = engine.run_rounds(_init("fedavg", clients), 4)
+    got = engine.run_rounds(
+        _init("fedavg", clients, mesh=make_client_mesh(nd)), 4)
+    _assert_states_match(ref, got, exact=(nd == 1))
+
+
+# ===================================================== collective oracle
+def test_psum_segments_matches_dense_aggregation():
+    """The hand-written shard_map collective (per-shard segment-sum +
+    psum over the client axis) equals the dense weighted segment-sum the
+    engine's GSPMD path lowers from — the two implementations are
+    independent, so they cross-check each other."""
+    nd = max(MESH_SIZES)
+    mesh = make_client_mesh(nd)
+    rng = np.random.default_rng(0)
+    rows = 16
+    stacked = {"w": jnp.asarray(rng.normal(size=(rows, 5, 3)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(rows, 7)), jnp.float32)}
+    weights = jnp.asarray(rng.uniform(1, 4, size=rows), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, 4, size=rows), jnp.int32)
+
+    dense = jax.tree.map(
+        lambda x: jax.ops.segment_sum(
+            x * weights.reshape((-1,) + (1,) * (x.ndim - 1)),
+            seg, num_segments=4), stacked)
+    got = specs.psum_segments(specs.place_cohort(stacked, mesh),
+                              specs.place_cohort(weights, mesh),
+                              specs.place_cohort(seg, mesh), 4, mesh)
+    for k in dense:
+        assert np.allclose(np.asarray(dense[k]), np.asarray(got[k]),
+                           rtol=1e-6, atol=1e-6), k
+
+
+def test_psum_segments_falls_back_when_not_divisible():
+    """A leading axis that does not divide the mesh takes the dense
+    fallback — same result, no shard_map shape error."""
+    nd = max(MESH_SIZES)
+    mesh = make_client_mesh(nd)
+    rows = nd + 1 if nd > 1 else 3
+    stacked = jnp.arange(rows * 2, dtype=jnp.float32).reshape(rows, 2)
+    weights = jnp.ones((rows,), jnp.float32)
+    seg = jnp.zeros((rows,), jnp.int32)
+    got = specs.psum_segments(stacked, weights, seg, 2, mesh)
+    assert np.allclose(np.asarray(got)[0], np.asarray(stacked).sum(0))
+
+
+# ============================================= carry sharding / donation
+def test_ditto_carry_keeps_client_sharding_across_scan():
+    """The one client-sharded carry leaf (Ditto's stacked personal bank)
+    must come OUT of the scan with the same ``NamedSharding`` it went in
+    with — donation on accelerators requires input/output carry
+    shardings to match, and a silent reshard would also double the
+    scan's memory. Regression for the in-step ``constrain_cohort``
+    output pin."""
+    nd = max(MESH_SIZES)
+    if nd < 2:
+        pytest.skip("needs a multi-device mesh (REPRO_FORCE_HOST_DEVICES)")
+    mesh = make_client_mesh(nd)
+    st = _init("ditto", _fed(), mesh=mesh)
+    prog = engine.scan_program(st, 3)
+    fn, carry0, consts, finalize = prog
+    carry1, _ys = fn(carry0, consts)
+    p0, p1 = carry0[2], carry1[2]
+
+    def spec_of(x):
+        # trailing None dims are implicitly replicated: P("clients") and
+        # P("clients", None) are the same sharding — normalize
+        spec = tuple(getattr(x.sharding, "spec", ()) or ())
+        while spec and spec[-1] is None:
+            spec = spec[:-1]
+        return spec
+
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+        assert spec_of(a) == spec_of(b), \
+            f"carry sharding changed across scan: {spec_of(a)} -> {spec_of(b)}"
+    # and the rows really are split over the client axis, not replicated
+    lead = jax.tree.leaves(p1)[0]
+    assert spec_of(lead) and spec_of(lead)[0] is not None, \
+        "personal bank came back replicated — cohort constraint lost"
+
+
+def test_mesh_size_one_is_bitwise_with_no_mesh():
+    """The degenerate 1-device mesh must change NOTHING: same draws,
+    same floats, bit for bit (it runs in tier-1 on a single device)."""
+    clients = _fed()
+    for name in ALL:
+        ref = engine.run_rounds(_init(name, clients), 3)
+        got = engine.run_rounds(
+            _init(name, clients, mesh=make_client_mesh(1)), 3)
+        _assert_states_match(ref, got, exact=True)

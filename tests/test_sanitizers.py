@@ -179,6 +179,32 @@ def test_scanned_rounds_zero_host_transfers(name):
     assert len(st2.history) == len(st.history) + rounds
 
 
+@pytest.mark.parametrize("name", ALL)
+def test_sharded_scanned_rounds_zero_host_transfers(name):
+    """Zero-transfer holds on a multi-device client mesh too: the
+    cross-shard gathers and all-reduces the sharded scan adds are
+    device-to-device collectives, not host round-trips. Runs on a
+    4-device ("clients",) mesh under REPRO_FORCE_HOST_DEVICES (CI);
+    degenerates to the 1-device mesh otherwise — still a real check of
+    the mesh code path."""
+    from repro.launch.mesh import make_client_mesh
+    nd = min(4, len(jax.devices()))
+    clients, _, _ = _fed()
+    st = engine.init(name, LOSS, simple.init(jax.random.PRNGKey(0), TASK),
+                     clients, _cfg(name), eval_fn=EVAL, arena=True,
+                     mesh=make_client_mesh(nd))
+    rounds = 3
+    prog = engine.scan_program(st, rounds)
+    assert prog is not None
+    fn, carry0, consts, finalize = prog
+    fn(carry0, consts)                      # compile + commit operands
+    with sanitize.no_transfer():
+        carry, ys = fn(carry0, consts)
+        jax.block_until_ready((carry, ys))
+    st2 = finalize(st, carry, ys, rounds)
+    assert st2.round == st.round + rounds
+
+
 def test_scan_program_skipped_pool_returns_none():
     """An empty pool (everyone unavailable) has no program — run_rounds
     records skipped rounds instead."""

@@ -1,0 +1,211 @@
+"""Hypothesis properties for the client-axis sharding helpers.
+
+``sharding.specs``'s cohort helpers (``client_axes``,
+``mesh_client_count``, ``align_cohort_chunk``, ``cohort_spec``) read
+only ``mesh.axis_names`` / ``mesh.shape``, so the properties sweep FAKE
+meshes (SimpleNamespace) over arbitrary axis layouts without needing
+devices — the whole file runs on one CPU device in tier-1. The few
+placement properties that need real shardings use the real local
+mesh and scale with however many devices the run has.
+
+Pinned invariants (docs/SHARDING.md §padding):
+
+- ``align_cohort_chunk`` returns the least multiple of the mesh's
+  client-device count ≥ chunk; it is idempotent, monotone, and the
+  identity for single-device/no-mesh cases.
+- pow2 quantization composes with mesh alignment: for pow2 mesh sizes
+  (the only sizes CI runs), ``align_cohort_chunk(pool_capacity(n))``
+  IS ``pool_capacity(n)`` whenever the pool bracket ≥ the device count
+  — which is why the sampler pool is deliberately not mesh-aligned.
+- ``cohort_spec`` shards exactly the leading axis, over exactly
+  ``client_axes``, and ``mesh_client_count`` is the product of those
+  axes' sizes.
+- ``param_shardings`` / ``place_cohort`` relax any non-divisible axis
+  to replicated instead of erroring (divisibility safety).
+
+CI runs these with the ``[test]`` extra; deterministic seeded slices of
+the same invariants live in ``tests/test_sharding_launch.py`` for
+extra-less environments.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the test extra
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.engine import sampler
+from repro.sharding import specs
+
+# ---------------------------------------------------------- fake meshes
+CLIENT_AXES = ("pod", "data", "clients")
+OTHER_AXES = ("model", "expert")
+
+
+@st.composite
+def fake_meshes(draw):
+    """A mesh-shaped object: 1-4 named axes with sizes 1-16, any mix of
+    client-carrying and other axes, in any order."""
+    n_axes = draw(st.integers(1, 4))
+    names = draw(st.permutations(CLIENT_AXES + OTHER_AXES))[:n_axes]
+    shape = {a: draw(st.integers(1, 16)) for a in names}
+    return SimpleNamespace(axis_names=tuple(names), shape=shape)
+
+
+@st.composite
+def pow2_client_meshes(draw):
+    """The meshes CI actually runs: 1-D ("clients",) with pow2 size."""
+    n = 2 ** draw(st.integers(0, 4))
+    return SimpleNamespace(axis_names=("clients",), shape={"clients": n})
+
+
+# ------------------------------------------------- align_cohort_chunk
+@settings(max_examples=200, deadline=None)
+@given(fake_meshes(), st.integers(1, 4096))
+def test_align_is_least_dividing_multiple(mesh, chunk):
+    n = specs.mesh_client_count(mesh)
+    a = specs.align_cohort_chunk(chunk, mesh)
+    assert a >= chunk
+    assert a % max(n, 1) == 0
+    assert a - chunk < max(n, 1), "not the LEAST dividing multiple"
+
+
+@settings(max_examples=200, deadline=None)
+@given(fake_meshes(), st.integers(1, 4096))
+def test_align_idempotent(mesh, chunk):
+    a = specs.align_cohort_chunk(chunk, mesh)
+    assert specs.align_cohort_chunk(a, mesh) == a
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 4096))
+def test_align_identity_without_mesh(chunk):
+    assert specs.align_cohort_chunk(chunk, None) == chunk
+
+
+@settings(max_examples=100, deadline=None)
+@given(fake_meshes(), st.integers(1, 2048), st.integers(1, 2048))
+def test_align_monotone(mesh, a, b):
+    lo, hi = min(a, b), max(a, b)
+    assert (specs.align_cohort_chunk(lo, mesh)
+            <= specs.align_cohort_chunk(hi, mesh))
+
+
+# --------------------------------------- pow2 ∘ mesh-alignment composition
+@settings(max_examples=200, deadline=None)
+@given(pow2_client_meshes(), st.integers(1, 100_000))
+def test_pool_capacity_already_mesh_aligned(mesh, n):
+    """pow2 divides pow2: whenever the pool bracket is at least the
+    device count, mesh-aligning it is the identity — the sampler's pool
+    (and Ditto's personal capacity, and the bank's row capacity) need
+    no mesh-specific padding. This is the invariant that lets the
+    engine leave ``pool_capacity`` untouched by the mesh (changing the
+    pool shape would fork the draw sequence and break parity)."""
+    cap = sampler.pool_capacity(n)
+    ndev = specs.mesh_client_count(mesh)
+    if cap >= ndev:
+        assert specs.align_cohort_chunk(cap, mesh) == cap
+
+
+@settings(max_examples=100, deadline=None)
+@given(pow2_client_meshes(), st.integers(1, 100_000))
+def test_arena_capacity_alignment_survives_doubling(mesh, n):
+    """engine.init mesh-aligns the arena row capacity once; ClientArena
+    grows by pow2 doubling, which must preserve the alignment."""
+    cap = specs.align_cohort_chunk(n, mesh)
+    ndev = specs.mesh_client_count(mesh)
+    for _ in range(4):
+        cap *= 2
+        assert cap % max(ndev, 1) == 0
+
+
+# -------------------------------------- cohort_spec / mesh_client_count
+@settings(max_examples=200, deadline=None)
+@given(fake_meshes(), st.integers(0, 5))
+def test_cohort_spec_consistent_with_client_axes(mesh, ndim):
+    axes = specs.client_axes(mesh)
+    spec = specs.cohort_spec(mesh, ndim)
+    if ndim == 0 or not axes:
+        assert spec == P()
+        return
+    lead = spec[0]
+    lead_axes = lead if isinstance(lead, tuple) else (lead,)
+    assert tuple(lead_axes) == axes, "leading axis must cover client_axes"
+    assert all(s is None for s in spec[1:]), "only the leading axis shards"
+    n = 1
+    for a in lead_axes:
+        n *= mesh.shape[a]
+    assert n == specs.mesh_client_count(mesh)
+
+
+@settings(max_examples=200, deadline=None)
+@given(fake_meshes())
+def test_client_axes_subset_and_order(mesh):
+    axes = specs.client_axes(mesh)
+    assert set(axes) <= set(CLIENT_AXES)
+    assert set(axes) == set(mesh.axis_names) & set(CLIENT_AXES)
+    # canonical order, independent of mesh axis order
+    assert list(axes) == [a for a in CLIENT_AXES if a in axes]
+
+
+# ------------------------------------------------ divisibility relaxing
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 3))
+def test_divisible_predicate_matches_arithmetic(rows, ndev, trailing):
+    mesh = SimpleNamespace(axis_names=("clients",),
+                           shape={"clients": ndev})
+    x = SimpleNamespace(shape=(rows,) + (3,) * trailing, ndim=1 + trailing)
+    spec = specs.cohort_spec(mesh, x.ndim)
+    assert specs._divisible(x, spec, mesh) == (rows % ndev == 0)
+
+
+def test_place_cohort_relaxes_non_divisible_rows():
+    """Real-mesh check: a row count that does not divide the device
+    count must place replicated (every device holds all rows), while a
+    dividing one splits — silently, no error either way."""
+    ndev = len(jax.devices())
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("clients",))
+    ok = specs.place_cohort(jax.numpy.zeros((4 * ndev, 3)), mesh)
+    assert ok.sharding.spec[0] == ("clients" if ndev > 1 else None) \
+        or ndev == 1
+    bad = specs.place_cohort(jax.numpy.zeros((4 * ndev + 1, 3)), mesh)
+    assert all(s is None for s in bad.sharding.spec), \
+        "non-divisible rows must relax to replicated"
+
+
+def test_param_shardings_divisible_fallback_probe():
+    """``param_shardings`` applies the same relax-to-replicated rule to
+    the MaxText-style rule table (the existing tier-1 coverage in
+    test_sharding_launch.py pins the full table; this probes just the
+    divisibility interaction on whatever devices this run has)."""
+    ndev = len(jax.devices())
+    if ndev < 2:
+        pytest.skip("needs multi-device (REPRO_FORCE_HOST_DEVICES)")
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()).reshape(ndev, 1), ("data", "model"))
+    params = {"layers": {"attn": {"wq": jax.numpy.zeros((ndev * 2, 4)),
+                                  "odd": {"wq": jax.numpy.zeros((ndev + 1, 4))}}}}
+    sh = specs.param_shardings(params, mesh)
+    assert sh["layers"]["attn"]["wq"].spec[0] == "data"
+    assert all(s is None for s in sh["layers"]["attn"]["odd"]["wq"].spec)
+
+
+# --------------------------------------------------- mesh_fingerprint
+def test_mesh_fingerprint_distinguishes_sizes_and_none():
+    """The scan-cache static: distinct device counts (and the no-mesh
+    case) must hash differently, same mesh twice must hash the same."""
+    assert specs.mesh_fingerprint(None) is None
+    devs = jax.devices()
+    m1 = jax.sharding.Mesh(np.array(devs[:1]), ("clients",))
+    assert specs.mesh_fingerprint(m1) == specs.mesh_fingerprint(
+        jax.sharding.Mesh(np.array(devs[:1]), ("clients",)))
+    assert hash(specs.mesh_fingerprint(m1)) is not None
+    if len(devs) > 1:
+        m2 = jax.sharding.Mesh(np.array(devs[:2]), ("clients",))
+        assert specs.mesh_fingerprint(m1) != specs.mesh_fingerprint(m2)
+    d = jax.sharding.Mesh(np.array(devs[:1]), ("data",))
+    assert specs.mesh_fingerprint(m1) != specs.mesh_fingerprint(d)

@@ -1,4 +1,11 @@
-"""Sharding rules + launch-layer units (host-scale, 1 CPU device)."""
+"""Sharding rules + launch-layer units (host-scale, 1 CPU device).
+
+Includes deterministic seeded slices of the cohort-helper invariants
+whose full hypothesis sweep lives in ``tests/test_shard_properties.py``
+(which needs the ``[test]`` extra; these run everywhere).
+"""
+from types import SimpleNamespace
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,10 +14,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.launch.dryrun import collective_bytes, model_flops
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_client_mesh, make_host_mesh
 from repro.models import build
 from repro.models.config import INPUT_SHAPES, InputShape
-from repro.sharding import ShardCtx, param_shardings, spec_for_path
+from repro.sharding import ShardCtx, param_shardings, spec_for_path, specs
 
 
 def test_spec_rules():
@@ -94,3 +101,78 @@ def test_lower_step_on_host_mesh():
     dshape = InputShape("d", 64, 2, "decode")
     lowered, _ = lower_step(model, dshape, mesh, "decode")
     assert lowered.compile() is not None
+
+
+# ----------------------- cohort-helper invariants (deterministic slices)
+def _fake_mesh(**shape):
+    return SimpleNamespace(axis_names=tuple(shape), shape=shape)
+
+
+def test_align_cohort_chunk_least_multiple_and_idempotent():
+    for ndev in (1, 2, 3, 4, 7, 8, 16):
+        mesh = _fake_mesh(clients=ndev)
+        for chunk in (1, 2, 5, 8, 15, 16, 31, 1000):
+            a = specs.align_cohort_chunk(chunk, mesh)
+            assert a >= chunk and a % ndev == 0 and a - chunk < ndev
+            assert specs.align_cohort_chunk(a, mesh) == a
+    assert specs.align_cohort_chunk(13, None) == 13
+    assert specs.align_cohort_chunk(0, _fake_mesh(clients=4)) == 0
+
+
+def test_pool_capacity_is_already_mesh_aligned():
+    """pow2 divides pow2: the sampler pool bracket never needs
+    mesh-specific padding on the pow2 mesh sizes CI runs (changing the
+    pool shape would fork the draw sequence — docs/SHARDING.md)."""
+    from repro.engine.sampler import pool_capacity
+    for ndev in (1, 2, 4, 8):
+        mesh = _fake_mesh(clients=ndev)
+        for n in (1, 3, 8, 12, 100, 4000):
+            cap = pool_capacity(n)
+            if cap >= ndev:
+                assert specs.align_cohort_chunk(cap, mesh) == cap
+
+
+def test_cohort_spec_tracks_client_axes():
+    m = _fake_mesh(pod=2, data=4, model=8)
+    assert specs.client_axes(m) == ("pod", "data")
+    assert specs.mesh_client_count(m) == 8
+    assert specs.cohort_spec(m, 3) == P(("pod", "data"), None, None)
+    assert specs.cohort_spec(m, 0) == P()
+    c = _fake_mesh(clients=4)
+    assert specs.cohort_spec(c, 2) == P("clients", None)
+    assert specs.cohort_spec(_fake_mesh(model=4), 2) == P()
+
+
+def test_place_and_constrain_relax_non_divisible():
+    """Divisibility safety on the real local mesh: dividing rows shard,
+    non-dividing rows replicate — silently, both eagerly (place_cohort)
+    and in-trace (constrain_cohort)."""
+    ndev = len(jax.devices())
+    mesh = make_client_mesh()
+    ok = specs.place_cohort(jnp.zeros((4 * ndev, 3)), mesh)
+    if ndev > 1:
+        assert ok.sharding.spec[0] == "clients"
+    bad = specs.place_cohort(jnp.zeros((4 * ndev + 1, 3)), mesh)
+    if ndev > 1:
+        assert all(s is None for s in bad.sharding.spec)
+    else:
+        # one device divides everything — nothing to relax
+        assert bad.sharding.spec[0] == "clients"
+    out = jax.jit(lambda x: specs.constrain_cohort(x, mesh))(
+        jnp.zeros((4 * ndev + 1, 3)))
+    assert np.asarray(out).shape == (4 * ndev + 1, 3)
+
+
+def test_mesh_fingerprint_identity():
+    """Scan-cache static: same mesh → same key, different size/axes/no
+    mesh → different key."""
+    assert specs.mesh_fingerprint(None) is None
+    devs = jax.devices()
+    m1 = jax.sharding.Mesh(np.array(devs[:1]), ("clients",))
+    m1b = jax.sharding.Mesh(np.array(devs[:1]), ("clients",))
+    assert specs.mesh_fingerprint(m1) == specs.mesh_fingerprint(m1b)
+    assert specs.mesh_fingerprint(m1) != specs.mesh_fingerprint(
+        jax.sharding.Mesh(np.array(devs[:1]), ("data",)))
+    if len(devs) > 1:
+        m2 = jax.sharding.Mesh(np.array(devs[:2]), ("clients",))
+        assert specs.mesh_fingerprint(m1) != specs.mesh_fingerprint(m2)
