@@ -59,8 +59,18 @@ host devices come from the same env knob, read here before jax loads:
   REPRO_FORCE_HOST_DEVICES=8 PYTHONPATH=src \\
       python -m benchmarks.round_scan --mesh 4
 
+``--async`` sweeps the asynchronous buffered round
+(``engine.run_round_async``, docs/ASYNC.md) against the eager sync
+round at the same shapes: rounds/sec vs ``staleness_cap`` with a
+saturating per-cohort delay pattern (delays cycle 0..cap, so every
+flush merges a full steady-state width through the staleness-weighted
+path). Rows land in the same ``results`` list with ``mode: "async"``
+and a ``staleness_cap`` field, merged by row key like ``--mesh``.
+
   PYTHONPATH=src python -m benchmarks.round_scan              # full sweep
   PYTHONPATH=src python -m benchmarks.round_scan --smoke      # CI-sized
+  PYTHONPATH=src python -m benchmarks.round_scan --async [--smoke]
+                         # async-vs-sync sweep; merges mode="async" rows
   PYTHONPATH=src python -m benchmarks.round_scan --compile-sets
                          # churn compile-count sweep only; merges the
                          # ``compile_sets`` section into an existing out file
@@ -100,12 +110,33 @@ def _federation(n_clients: int, n_per: int, seed: int = 0):
 
 
 def _cfg(sample_rate: float, chunk: int, fused: bool = False,
-         dtype: str = "float32") -> engine.EngineConfig:
+         dtype: str = "float32", async_cfg=None) -> engine.EngineConfig:
     return engine.EngineConfig(
         tau=0.5, lam=0.05, lr=0.1, local_steps=1, sample_rate=sample_rate,
         seed=0, project_dim=1024, cohort_chunk=chunk,
         cluster_backend="device", rng_backend="device",
-        fused_step=fused, dtype=dtype)
+        fused_step=fused, dtype=dtype, async_cfg=async_cfg)
+
+
+def _row_key(r):
+    """Identity of one timing row — --mesh and --async replace stale
+    rows for the combos they re-measure and keep the rest of the sweep."""
+    return (r["clients"], r["rounds"], r["sample_rate"], r["fused"],
+            r["dtype"], r.get("devices", 1), r.get("mode", "sync"),
+            r.get("staleness_cap", -1))
+
+
+def _merge_rows(out: str, rows: list) -> None:
+    try:
+        with open(out) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        doc = {"bench": "round_scan", "results": []}
+    fresh = {_row_key(r) for r in rows}
+    doc["results"] = [r for r in doc.get("results", [])
+                      if _row_key(r) not in fresh] + rows
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
 
 
 def _init(clients, cfg, mesh=None):
@@ -187,6 +218,58 @@ def run_point(n_clients: int, rounds: int, sample_rate: float,
     return row
 
 
+def run_async_point(n_clients: int, rounds: int, sample_rate: float,
+                    n_per: int, staleness_cap: int) -> dict:
+    """Async buffered rounds vs the eager sync round at one population
+    size: every dispatch carries the saturating delay pattern
+    (0, 1, …, cap, 0, 1, …) so flushes run full steady-state widths
+    through the staleness-weighted merge, and the buffer sits at its
+    occupancy bound — the honest per-round cost of buffering."""
+    clients = _federation(n_clients, n_per)
+    cohort = int(np.ceil(sample_rate * n_clients))
+    delays = (np.arange(cohort) % (staleness_cap + 1)).astype(np.int64)
+    cfg = _cfg(sample_rate, 0,
+               async_cfg=engine.AsyncConfig(staleness_cap=staleness_cap))
+    spans = 3
+
+    # ---- eager sync reference (same shapes, same key chain)
+    st = _onboard(_init(clients, cfg), n_clients)
+    for _ in range(2):
+        st, _ = engine.run_round(st)
+    eager_s = float("inf")
+    se = st
+    for _ in range(spans):
+        t0 = time.time()
+        for _ in range(rounds):
+            se, _ = engine.run_round(se)
+        jax.block_until_ready(se.omega)
+        eager_s = min(eager_s, time.time() - t0)
+
+    # ---- async: warm until the delay pattern's widths lock in, then time
+    st = _onboard(_init(clients, cfg), n_clients)
+    for _ in range(staleness_cap + 3):
+        st, _ = engine.run_round_async(st, delays=delays)
+    async_s = float("inf")
+    for _ in range(spans):
+        t0 = time.time()
+        for _ in range(rounds):
+            st, _ = engine.run_round_async(st, delays=delays)
+        jax.block_until_ready(st.omega)
+        async_s = min(async_s, time.time() - t0)
+
+    return {
+        "clients": n_clients, "rounds": rounds, "sample_rate": sample_rate,
+        "cohort": cohort, "n_per": n_per, "fused": False, "dtype": "float32",
+        "devices": 1, "mode": "async", "staleness_cap": staleness_cap,
+        "buffer_capacity": int(st.buffer.capacity),
+        "eager_s": round(eager_s, 4),
+        "eager_rounds_per_s": round(rounds / eager_s, 2),
+        "async_s": round(async_s, 4),
+        "async_rounds_per_s": round(rounds / async_s, 2),
+        "async_overhead": round(async_s / eager_s, 2),
+    }
+
+
 def compile_sets(n_clients: int = 12, cycles: int = 3) -> dict:
     """Distinct-XLA-program counts per strategy over a churn timeline:
     ``cold`` is the full first-contact compile (init + first scanned
@@ -237,6 +320,10 @@ def main():
     ap.add_argument("--compile-sets", action="store_true",
                     help="measure per-strategy compile counts under churn "
                          "and merge them into --out (skips the timing sweep)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="sweep async buffered rounds (run_round_async) vs "
+                         "the eager sync round over staleness caps and "
+                         "MERGE the rows (mode=async) into --out")
     ap.add_argument("--mesh", type=int, default=0, metavar="N",
                     help="run the smoke points on an N-device client mesh "
                          "and MERGE the rows (devices=N) into --out; needs "
@@ -264,22 +351,36 @@ def main():
             r = run_point(mesh=mesh, **p)
             print(json.dumps(r))
             rows.append(r)
-        try:
-            with open(args.out) as f:
-                doc = json.load(f)
-        except FileNotFoundError:
-            doc = {"bench": "round_scan", "results": []}
         # replace any stale rows for this (point, devices) combo, keep
         # the rest of the sweep untouched — the CI lane runs --mesh 1
         # and --mesh 4 back to back into the same file
-        key = lambda r: (r["clients"], r["rounds"], r["sample_rate"],
-                         r["fused"], r["dtype"], r.get("devices", 1))
-        fresh = {key(r) for r in rows}
-        doc["results"] = [r for r in doc.get("results", [])
-                          if key(r) not in fresh] + rows
-        with open(args.out, "w") as f:
-            json.dump(doc, f, indent=1)
+        _merge_rows(args.out, rows)
         print(f"merged {len(rows)} mesh rows into {args.out}")
+        return
+
+    if args.async_mode:
+        from benchmarks.common import setup_cache
+        setup_cache()
+        if args.smoke:
+            points = [dict(n_clients=24, rounds=args.rounds or 10,
+                           sample_rate=0.5, n_per=16, staleness_cap=c)
+                      for c in (0, 4)] + \
+                     [dict(n_clients=48, rounds=args.rounds or 10,
+                           sample_rate=0.25, n_per=16, staleness_cap=4)]
+        else:
+            points = [dict(n_clients=400, rounds=args.rounds or 20,
+                           sample_rate=0.1, n_per=64, staleness_cap=c)
+                      for c in (0, 4, 8)] + \
+                     [dict(n_clients=4000, rounds=args.rounds or 20,
+                           sample_rate=0.05, n_per=32, staleness_cap=c)
+                      for c in (0, 8)]
+        rows = []
+        for p in points:
+            r = run_async_point(**p)
+            print(json.dumps(r))
+            rows.append(r)
+        _merge_rows(args.out, rows)
+        print(f"merged {len(rows)} async rows into {args.out}")
         return
 
     if args.compile_sets:

@@ -15,7 +15,7 @@ import re
 import sys
 
 DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/CLUSTERING.md",
-                 "docs/ANALYSIS.md", "docs/SHARDING.md",
+                 "docs/ANALYSIS.md", "docs/SHARDING.md", "docs/ASYNC.md",
                  "EXPERIMENTS.md", "ROADMAP.md", "CHANGES.md"]
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 

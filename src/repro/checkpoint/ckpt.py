@@ -174,12 +174,38 @@ def save_server_state(dirpath: str, state,
     else:
         cluster_file, cluster_arrays = None, None
 
+    # async delta buffer: device row banks to async_buffer.npz, host
+    # entry bookkeeping (slots, arrival rounds, seq order, f32 weights)
+    # to the manifest — a mid-buffer resume replays bit-exactly
+    buf = getattr(state, "buffer", None)
+    buffer_arrays = None
+    if buf is None:
+        manifest["async_buffer"] = None
+    else:
+        comps = [k for k, v in (("payload", buf.payload), ("aux", buf.aux),
+                                ("psi", buf.psi)) if v is not None]
+        manifest["async_buffer"] = {
+            "capacity": int(buf.capacity),
+            "next_seq": int(buf.next_seq),
+            "entries": [[int(e.slot), int(e.cid), int(e.dispatch),
+                         int(e.arrival), int(e.seq), float(e.weight)]
+                        for e in buf.entries],
+            "components": comps,
+        }
+        if comps:
+            buffer_arrays = {
+                k: _np_safe(v) for k, v in _flatten(jax.device_get(
+                    {c: getattr(buf, c) for c in comps})).items()}
+
     def write():
         np.savez(os.path.join(dirpath, "arrays.npz"), **flat_arrays)
         with open(os.path.join(dirpath, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if cluster_file is not None:
             np.savez(os.path.join(dirpath, cluster_file), **cluster_arrays)
+        if buffer_arrays is not None:
+            np.savez(os.path.join(dirpath, "async_buffer.npz"),
+                     **buffer_arrays)
 
     if block:
         write()
@@ -232,7 +258,36 @@ def load_server_state(dirpath: str, state):
     rng_key = state.rng_key
     if man.get("rng_key") is not None:
         rng_key = jnp.asarray(np.asarray(man["rng_key"], np.uint32))
+    # async delta buffer: row templates come from init_params with the
+    # checkpointed pow2 capacity as the leading axis (bf16 banks were
+    # stored as lossless f32 and cast back); Ψ rows reload raw (always
+    # fp32). Pre-async checkpoints carry no "async_buffer" key → None.
+    buffer = None
+    abm = man.get("async_buffer")
+    if abm is not None:
+        from repro.engine.async_agg import AsyncBuffer, _Entry
+        cap = int(abm["capacity"])
+        comps = list(abm["components"])
+        rows_tmpl = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                (cap,) + tuple(np.shape(x)), np.asarray(x).dtype), tmpl)
+        template = {c: (rows_tmpl if c in ("payload", "aux") else None)
+                    for c in comps}
+        parts = (load_pytree(os.path.join(dirpath, "async_buffer.npz"),
+                             template) if comps else {})
+        asdev = lambda t: (None if t is None
+                           else jax.tree.map(jnp.asarray, t))
+        buffer = AsyncBuffer(
+            capacity=cap,
+            payload=asdev(parts.get("payload")),
+            aux=asdev(parts.get("aux")),
+            psi=asdev(parts.get("psi")),
+            entries=tuple(_Entry(int(s), int(c), int(d), int(a), int(q),
+                                 float(w))
+                          for s, c, d, a, q, w in abm["entries"]),
+            next_seq=int(abm["next_seq"]))
     return state.replace(
+        buffer=buffer,
         strategy=man["strategy"], round=man["round"],
         rng_state=man["rng_state"], rng_key=rng_key,
         sizes=tuple(man["sizes"]), left=frozenset(man["left"]),

@@ -7,12 +7,19 @@ implemented by ``stocfl`` and the paper's baselines (``fedavg``,
 ``fedprox``, ``ditto``, ``ifca``, ``cfl``). ``run_rounds`` fuses a whole
 multi-round span into one jitted ``lax.scan`` with on-device cohort
 sampling (``repro.engine.sampler``), bit-faithful to the eager
-``run_round`` loop. See ``repro.engine.api`` for the full contract.
+``run_round`` loop. ``run_round_async`` removes the round barrier:
+delayed client contributions land in a device-resident ``AsyncBuffer``
+and flush as staleness-weighted merges, bitwise equal to ``run_round``
+at zero delay (``repro.engine.async_agg``). See ``repro.engine.api``
+for the full contract.
 """
 from repro.engine.api import (advance_rng, evaluate, infer, init,  # noqa: F401
                               join, leave, run, run_round, run_rounds,
                               sample_clients, scan_blockers, scan_history,
                               scan_program)
+from repro.engine.async_agg import (AsyncBuffer, AsyncConfig,  # noqa: F401
+                                    FlushBatch, run_round_async,
+                                    staleness_weights)
 from repro.engine.registry import (STRATEGIES, get_strategy,  # noqa: F401
                                    list_strategies, register)
 from repro.engine.state import (EngineConfig, EngineContext,  # noqa: F401
@@ -26,9 +33,11 @@ from repro.engine.strategies import Strategy  # noqa: F401
 __all__ = [
     "init", "run", "run_round", "run_rounds", "sample_clients",
     "advance_rng", "scan_blockers", "scan_history", "scan_program",
+    "run_round_async", "staleness_weights",
     "cohort_pool", "cohort_size", "draw_cohort", "pool_capacity",
     "evaluate", "join", "leave", "infer",
     "EngineConfig", "EngineContext", "ServerState",
+    "AsyncConfig", "AsyncBuffer", "FlushBatch",
     "Strategy", "ClusterBank",
     "register", "get_strategy", "list_strategies", "STRATEGIES",
 ]

@@ -1,0 +1,454 @@
+"""Async buffered aggregation with staleness-weighted cluster merges.
+
+The synchronous engine (``engine.run_round``) is a global barrier: every
+sampled client trains and reports back inside one round. This module
+removes the barrier while keeping the engine's bitwise standard intact:
+clients drawn into a cohort at round *t* DISPATCH immediately (Ψ
+handshake + local training start) and their trained contribution lands
+in a fixed-capacity device-resident delta buffer with an arrival round
+``t + delay``; every round the server FLUSHES the arrived entries as one
+staleness-weighted merge (weight = ``count · γ^staleness``) through the
+exact same aggregation functions the synchronous round calls.
+
+The contract that makes this testable (``tests/test_async_agg.py``):
+
+    zero delay + flush-every-round  ≡  engine.run_round, BITWISE,
+
+for every async-capable strategy (stocfl / fedavg / fedprox), with or
+without a client-axis mesh. The construction guarantees it rather than
+approximating it:
+
+* dispatch runs the synchronous round's pre-aggregation half (StoCFL's
+  observe → merge_round → cluster-model merge → bi-level cohort step;
+  FedAvg/FedProx's broadcast + local SGD) on the same compiled cohort
+  programs, so the buffered rows are bit-identical to the rows the sync
+  round would have aggregated;
+* the buffer is pure memory movement — pow2-padded rows scattered in at
+  dispatch (``.at[slots].set``) and gathered out at flush (``take``),
+  both bit-preserving;
+* a flush merges entries in dispatch (seq) order — the draw order — at
+  EXACT width, calling ``bilevel.aggregate_stacked`` /
+  ``aggregate_segments`` / ``AGGREGATORS[cfg.aggregator]`` on the same
+  shapes the sync round uses; and ``γ^0 · w = w`` holds bitwise (any
+  float to the zeroth power is exactly 1.0).
+
+Two-phase protocol. The Ψ handshake is instantaneous at dispatch: a new
+client's embedding is written to the buffer's Ψ rows and union-find
+``observe`` / ``merge_round`` read it right there — clustering proceeds
+without waiting on any outstanding delta, faithful to Algorithm 1's
+cluster-then-broadcast structure. Only the heavy training result is
+delayed; at its flush the delta re-roots through the CURRENT partition
+(``find(cid)``), so merges that happened while it was in flight are
+honored.
+
+Memory model (same arena discipline as ``data.ClientArena``): row
+capacity is pow2-quantized and doubles on overflow, so the compiled
+scatter/gather program set stays O(log capacity); a steady-state async
+round (constant cohort, constant delay) compiles ZERO new XLA programs
+after warmup (pinned by ``tests/test_compile_budget.py``). On a mesh,
+buffer rows are pinned to the client axis exactly like arena rows
+(``sharding.place_buffer_rows``). See ``docs/ASYNC.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["AsyncConfig", "AsyncBuffer", "FlushBatch", "run_round_async",
+           "staleness_weights"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Knobs of the async buffered-aggregation loop (attach as
+    ``EngineConfig.async_cfg``).
+
+    ``staleness_decay`` is γ: a delta dispatched at round ``t_d`` and
+    merged at round ``t`` contributes with weight
+    ``count · γ^(t - t_d)``. γ=1 recovers pure count weighting (total
+    merge weight conserved vs the sync round); γ<1 discounts stale
+    work. ``staleness_cap`` bounds how stale a merged delta may be —
+    entries older than the cap are dropped, never merged (the
+    bounded-staleness invariant), and entries whose delay already
+    exceeds the cap are dropped at the first flush after dispatch.
+    ``buffer_capacity`` fixes the delta buffer's row count (0 = auto:
+    pow2 of ``cohort · (cap + 2)``); either way the capacity is pow2-
+    quantized and doubles on overflow. ``flush_every`` merges the
+    arrived entries every N rounds (1 — the default, and the sync-limit
+    contract's requirement — flushes at the end of every round)."""
+    staleness_decay: float = 1.0
+    staleness_cap: int = 4
+    buffer_capacity: int = 0
+    flush_every: int = 1
+
+
+class _Entry(NamedTuple):
+    """Host bookkeeping for one in-flight contribution (aux data of the
+    buffer pytree: slot row, client id, dispatch/arrival rounds, the
+    insertion sequence number that fixes merge order, and the host-side
+    f32 sample-count weight)."""
+    slot: int
+    cid: int
+    dispatch: int
+    arrival: int
+    seq: int
+    weight: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushBatch:
+    """One flush's merged entries, stacked in dispatch (seq) order —
+    exactly the draw order, so a zero-delay flush presents the same
+    rows in the same order as the synchronous aggregation.
+
+    ``payload`` / ``aux`` are the gathered device rows (leading axis =
+    entries); ``weight`` is the host f32 sample-count vector (the same
+    bits ``strategies._weights`` would produce); ``staleness[i] =
+    flush_round - dispatch_round`` of entry i."""
+    payload: Any
+    aux: Any
+    cids: np.ndarray
+    weight: np.ndarray
+    staleness: np.ndarray
+
+    @property
+    def n(self) -> int:
+        """Number of merged entries in this flush."""
+        return int(len(self.cids))
+
+
+def _pow2(n: int) -> int:
+    n = int(n)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def staleness_weights(weight, staleness, decay) -> np.ndarray:
+    """Effective merge weights ``w · γ^s`` as host f32.
+
+    At ``s = 0`` the factor is exactly 1.0 (IEEE ``x**0 == 1.0`` for
+    every finite γ) and ``w · 1.0`` is bit-exact, which is the float-
+    level half of the sync-limit contract; for γ ∈ [0, 1] the weights
+    are monotone non-increasing in staleness and at γ = 1 the total
+    merge weight equals the synchronous round's (both pinned by
+    ``tests/test_async_properties.py``)."""
+    w = np.asarray(weight, np.float32)
+    s = np.asarray(staleness, np.float32)
+    return (w * np.float32(decay) ** s).astype(np.float32)
+
+
+# ------------------------------------------------- jitted row movement
+# One program per (row shapes, capacity, width) — all pow2/steady-state
+# quantized, so the compiled set is bounded (compile-budget pinned).
+@jax.jit
+def _scatter_rows(rows, slots, updates):
+    return jax.tree.map(lambda r, u: r.at[slots].set(u.astype(r.dtype)),
+                        rows, updates)
+
+
+@jax.jit
+def _gather_rows(rows, idx):
+    return jax.tree.map(lambda r: jnp.take(r, idx, axis=0), rows)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _zeros_rows(updates, capacity):
+    return jax.tree.map(
+        lambda u: jnp.zeros((capacity,) + u.shape[1:], u.dtype), updates)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _grow_rows(rows, capacity):
+    return jax.tree.map(
+        lambda r: jnp.zeros((capacity,) + r.shape[1:], r.dtype)
+        .at[: r.shape[0]].set(r), rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncBuffer:
+    """Fixed-capacity device-resident delta buffer (a registered pytree).
+
+    Device children: ``payload`` (trained per-client model rows — StoCFL
+    θᵢ, FedAvg/FedProx local params), ``aux`` (strategy extra — StoCFL
+    ωᵢ rows), ``psi`` (fp32 Ψ-embedding rows, the handshake surface the
+    union-find observes from). Each leaf has a pow2 ``capacity`` leading
+    row axis, scattered at dispatch and gathered at flush by the row-
+    movement jits above — the same arena discipline as ``ClientArena``
+    (pow2 rows, doubling growth, spare rows are dead zeros). Host aux
+    data: the in-flight ``_Entry`` tuple (seq-ordered) and the insertion
+    counter. All transitions are pure (``dataclasses.replace``)."""
+    capacity: int
+    payload: Any = None
+    aux: Any = None
+    psi: Any = None
+    entries: Tuple[_Entry, ...] = ()
+    next_seq: int = 0
+
+    # -------------------------------------------------------- lifecycle
+    @classmethod
+    def fresh(cls, capacity: int) -> "AsyncBuffer":
+        """An empty buffer with pow2-quantized row capacity; device
+        rows materialize lazily at the first write (their shapes come
+        from the first contribution)."""
+        return cls(capacity=_pow2(capacity))
+
+    def replace(self, **kw) -> "AsyncBuffer":
+        """``dataclasses.replace`` shorthand — the one way transitions
+        derive a new buffer from an old one."""
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def in_flight(self) -> int:
+        """Entries currently buffered (dispatched, not yet flushed)."""
+        return len(self.entries)
+
+    # --------------------------------------------------------- reserve
+    def reserve(self, cids: Sequence[int], dispatch: int,
+                arrivals: Sequence[int], weights: Sequence[float]):
+        """Assign one buffer row per dispatched client; returns
+        ``(buffer', slots)``.
+
+        Slots are the lowest free rows in ascending order, entries are
+        appended in cohort (draw) order with consecutive seq numbers —
+        on an empty buffer the slots are ``0..m-1``, so a zero-delay
+        flush gathers the dispatch stack back identically. Doubles the
+        pow2 capacity when the free rows run out (amortized O(1), like
+        the arena)."""
+        m = len(cids)
+        occupied = {e.slot for e in self.entries}
+        cap = self.capacity
+        while cap - len(occupied) < m:
+            cap *= 2
+        buf = self if cap == self.capacity else self._grow(cap)
+        free = [s for s in range(cap) if s not in occupied][:m]
+        new = tuple(_Entry(slot=int(s), cid=int(c), dispatch=int(dispatch),
+                           arrival=int(a), seq=self.next_seq + i,
+                           weight=float(w))
+                    for i, (s, c, a, w) in enumerate(
+                        zip(free, cids, arrivals, weights)))
+        return (buf.replace(entries=buf.entries + new,
+                            next_seq=self.next_seq + m),
+                np.asarray(free, np.int32))
+
+    def _grow(self, capacity: int) -> "AsyncBuffer":
+        grow = lambda t: None if t is None else _grow_rows(t, capacity=capacity)
+        return self.replace(capacity=capacity, payload=grow(self.payload),
+                            aux=grow(self.aux), psi=grow(self.psi))
+
+    # ---------------------------------------------------------- Ψ rows
+    def write_psi(self, slots, rows) -> "AsyncBuffer":
+        """Scatter the dispatch handshake's Ψ embeddings into the fp32
+        Ψ rows (created on first use; clustering reads them back with
+        ``read_psi`` — the buffer IS the observe data path)."""
+        rows = jnp.asarray(rows, jnp.float32)
+        psi = self.psi
+        if psi is None:
+            psi = _zeros_rows(rows, capacity=self.capacity)
+        return self.replace(
+            psi=_scatter_rows(psi, jnp.asarray(slots), rows))
+
+    def read_psi(self, slots):
+        """Gather Ψ rows back (bit-identical to what ``write_psi``
+        stored) — what StoCFL's ``observe`` is fed from."""
+        return _gather_rows(self.psi, jnp.asarray(slots))
+
+    # ----------------------------------------------------- delta rows
+    def write(self, slots, payload, aux=None) -> "AsyncBuffer":
+        """Scatter a dispatch's trained contribution rows (leading axis
+        = cohort) into the buffer. Pure memory movement: the gathered
+        flush rows are bit-identical to ``payload``/``aux``."""
+        slots = jnp.asarray(slots)
+        p = self.payload
+        if p is None:
+            p = _zeros_rows(payload, capacity=self.capacity)
+        p = _scatter_rows(p, slots, payload)
+        a = self.aux
+        if aux is not None:
+            if a is None:
+                a = _zeros_rows(aux, capacity=self.capacity)
+            a = _scatter_rows(a, slots, aux)
+        return self.replace(payload=p, aux=a)
+
+    # ------------------------------------------------------------ flush
+    def flush(self, t: int, staleness_cap: int, left=frozenset()):
+        """End-of-round merge boundary: split the in-flight entries at
+        round ``t`` into merged / kept / dropped.
+
+        Returns ``(buffer', FlushBatch | None, drops)``. Merged: arrived
+        (``arrival <= t``), not departed, staleness ``t - dispatch <=
+        staleness_cap`` — gathered in seq (dispatch) order. Dropped
+        stale: arrived entries over the cap, plus entries whose delay
+        alone already exceeds the cap (they could never merge — freed
+        at the first flush after dispatch, which is what bounds buffer
+        occupancy by ``cohort · (cap + 1)``). Dropped left: in-flight
+        entries of departed clients. Everything else stays buffered."""
+        merge, keep, stale, gone = [], [], [], []
+        for e in self.entries:                   # seq order == draw order
+            if e.arrival <= t:
+                if int(e.cid) in left:
+                    gone.append(e)
+                elif t - e.dispatch > staleness_cap:
+                    stale.append(e)
+                else:
+                    merge.append(e)
+            elif e.arrival - e.dispatch > staleness_cap:
+                stale.append(e)                  # hopeless: cap-exceeding delay
+            elif int(e.cid) in left:
+                gone.append(e)
+            else:
+                keep.append(e)
+        drops = {"stale": len(stale), "left": len(gone)}
+        buf = self.replace(entries=tuple(keep))
+        if not merge:
+            return buf, None, drops
+        idx = jnp.asarray(np.asarray([e.slot for e in merge], np.int32))
+        payload = _gather_rows(self.payload, idx)
+        aux = None if self.aux is None else _gather_rows(self.aux, idx)
+        batch = FlushBatch(
+            payload=payload, aux=aux,
+            cids=np.asarray([e.cid for e in merge], np.int64),
+            weight=np.asarray([e.weight for e in merge], np.float32),
+            staleness=np.asarray([t - e.dispatch for e in merge], np.int64))
+        return buf, batch, drops
+
+    # ------------------------------------------------------------- mesh
+    def place(self, mesh) -> "AsyncBuffer":
+        """Pin every device row bank to the mesh's client axis (same
+        rule as arena rows: the pow2 row capacity divides the pow2 mesh
+        whenever capacity ≥ devices — ``sharding.place_buffer_rows``).
+        No-op without a mesh."""
+        if mesh is None:
+            return self
+        from repro.sharding import specs
+        pl = lambda t: None if t is None else specs.place_buffer_rows(t, mesh)
+        return self.replace(payload=pl(self.payload), aux=pl(self.aux),
+                            psi=pl(self.psi))
+
+
+def _flatten_buffer(b: AsyncBuffer):
+    children = (b.payload, b.aux, b.psi)
+    aux = (b.capacity, b.entries, b.next_seq)
+    return children, aux
+
+
+def _unflatten_buffer(aux, children):
+    payload, a, psi = children
+    capacity, entries, next_seq = aux
+    return AsyncBuffer(capacity=capacity, payload=payload, aux=a, psi=psi,
+                       entries=entries, next_seq=next_seq)
+
+
+jax.tree_util.register_pytree_node(AsyncBuffer, _flatten_buffer,
+                                   _unflatten_buffer)
+
+
+# =================================================================== loop
+def _auto_capacity(m: int, acfg: AsyncConfig) -> int:
+    if acfg.buffer_capacity:
+        return _pow2(acfg.buffer_capacity)
+    return _pow2(max(m * (int(acfg.staleness_cap) + 2), 1))
+
+
+def run_round_async(state, client_ids: Optional[Sequence[int]] = None,
+                    delays=None):
+    """One async server round: dispatch the cohort, buffer its delayed
+    contributions, flush what has arrived.
+
+    The asynchronous counterpart of ``engine.run_round`` — same
+    signature plus ``delays``, same rng threading (explicit cohorts
+    skip sampling and leave the rng untouched), same history append.
+    ``delays`` gives each cohort member's report-back latency in rounds
+    (scalar broadcasts; default 0). At ``delays = 0`` with
+    ``flush_every = 1`` the round is BITWISE equal to ``run_round`` —
+    the sync-limit contract (``tests/test_async_agg.py``).
+
+    Per round, with ``t = state.round``:
+
+    1. sample/accept the cohort and reserve one buffer row per member;
+    2. ``strategy.async_dispatch``: the sync round's pre-aggregation
+       half — for StoCFL the Ψ handshake writes embedding rows into the
+       buffer and ``observe``/``merge_round`` read them back (clustering
+       never waits on an outstanding delta), then the bi-level cohort
+       step trains from the post-merge cluster models — and the trained
+       rows are scattered into the buffer with arrival ``t + delay``;
+    3. flush (every ``flush_every``-th round): entries with ``arrival <=
+       t`` and staleness ``<= staleness_cap`` are gathered in dispatch
+       order and handed to ``strategy.async_merge`` with weights
+       ``count · γ^staleness`` (``staleness_weights``); stale and
+       departed-client entries are dropped and counted.
+
+    The per-round record extends the strategy's metrics with the async
+    bookkeeping: ``merged``, ``dropped_stale``, ``dropped_left``,
+    ``in_flight``, ``max_staleness``. Raises ``NotImplementedError``
+    for strategies without async hooks (ditto / ifca / cfl) and
+    ``ValueError`` on an empty cohort, mirroring ``run_round``.
+    """
+    from repro.engine.api import sample_clients
+    from repro.engine.registry import get_strategy
+
+    ctx = state.ctx
+    acfg = ctx.cfg.async_cfg or AsyncConfig()
+    strat = get_strategy(state.strategy)
+    if not getattr(strat, "supports_async", False):
+        raise NotImplementedError(
+            f"strategy {state.strategy!r} has no async hooks "
+            "(async_dispatch/async_merge) — async buffered aggregation "
+            "supports stocfl, fedavg and fedprox")
+    rng_state, rng_key = state.rng_state, state.rng_key
+    if client_ids is None:
+        if ctx.cfg.rng_backend == "device":
+            rng_key, client_ids = sample_clients(state)
+        else:
+            rng_state, client_ids = sample_clients(state)
+    client_ids = np.asarray(client_ids)
+    if client_ids.size == 0:
+        raise ValueError("run_round_async needs a non-empty cohort "
+                         "(no clients sampled — all departed or "
+                         "unavailable?)")
+    m = int(client_ids.size)
+    if delays is None:
+        delays = np.zeros(m, np.int64)
+    else:
+        delays = np.broadcast_to(np.asarray(delays, np.int64), (m,))
+    t = int(state.round)
+
+    # ---- dispatch: reserve rows, run the strategy's pre-agg half
+    from repro.engine.strategies import _sizes_np
+    weights = _sizes_np(state.sizes)[client_ids]
+    buf = state.buffer
+    if buf is None:
+        buf = AsyncBuffer.fresh(_auto_capacity(m, acfg)).place(ctx.mesh)
+    buf, slots = buf.reserve(client_ids, t, t + delays, weights)
+    state, buf = strat.async_dispatch(ctx, state, client_ids, buf, slots)
+
+    # ---- flush: staleness-weighted merge of the arrived entries
+    rec: dict = {"sampled": m}
+    if (t + 1) % max(int(acfg.flush_every), 1) == 0:
+        buf, batch, drops = buf.flush(t, int(acfg.staleness_cap),
+                                      state.left)
+        if batch is not None:
+            if ctx.mesh is not None:
+                from repro.sharding import specs
+                batch = dataclasses.replace(
+                    batch,
+                    payload=specs.place_buffer_rows(batch.payload, ctx.mesh),
+                    aux=(None if batch.aux is None else
+                         specs.place_buffer_rows(batch.aux, ctx.mesh)))
+            w_eff = staleness_weights(batch.weight, batch.staleness,
+                                      acfg.staleness_decay)
+            state, srec = strat.async_merge(ctx, state, batch, w_eff)
+            rec.update(srec)
+        rec.update(
+            merged=0 if batch is None else batch.n,
+            dropped_stale=drops["stale"], dropped_left=drops["left"],
+            max_staleness=(0 if batch is None else
+                           int(batch.staleness.max(initial=0))))
+    rec["in_flight"] = buf.in_flight
+    state = state.replace(buffer=buf, round=t + 1, rng_state=rng_state,
+                          rng_key=rng_key,
+                          history=state.history + (dict(rec),))
+    return state, rec

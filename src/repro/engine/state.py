@@ -53,6 +53,10 @@ class EngineConfig:
     ``dtype`` is the compute precision of params/grads/batches
     ("float32" | "bfloat16"); Ψ-embeddings, cluster means, and the Eq. 2
     objective always stay fp32 (see ``engine.init``).
+    ``async_cfg`` opts into async buffered aggregation: an
+    ``engine.AsyncConfig`` consumed by ``run_round_async`` (staleness
+    decay γ, staleness cap, buffer capacity, flush cadence); ``None``
+    keeps the engine purely synchronous.
     """
     tau: float = 0.5
     lam: float = 0.05
@@ -72,6 +76,7 @@ class EngineConfig:
     rng_backend: str = "numpy"        # cohort sampling: numpy | device
     fused_step: bool = False          # flat fused bilevel/SGD local update
     dtype: str = "float32"            # param/grad compute precision
+    async_cfg: Optional[Any] = None   # AsyncConfig: async buffered aggregation
 
 
 @dataclasses.dataclass
@@ -132,6 +137,7 @@ class ServerState:
     members: Optional[Tuple[Tuple[int, ...], ...]] = None   # CFL partition
     history: Tuple[dict, ...] = ()
     rng_key: Optional[Any] = None     # device sampling key (rng_backend="device")
+    buffer: Optional[Any] = None      # AsyncBuffer: in-flight delayed deltas
 
     # ------------------------------------------------------------- helpers
     @property
@@ -174,20 +180,20 @@ def fresh_rng_key(seed: int):
 
 
 def _flatten_state(s: ServerState):
-    children = (s.omega, s.models, s.personal, s.rng_key)
+    children = (s.omega, s.models, s.personal, s.rng_key, s.buffer)
     aux = (s.ctx, s.strategy, s.round, s.rng_state, s.sizes, s.left,
            s.clusters, s.members, s.history)
     return children, aux
 
 
 def _unflatten_state(aux, children):
-    omega, models, personal, rng_key = children
+    omega, models, personal, rng_key, buffer = children
     ctx, strategy, rnd, rng_state, sizes, left, clusters, members, history = aux
     return ServerState(ctx=ctx, strategy=strategy, round=rnd,
                        rng_state=rng_state, sizes=sizes, left=left,
                        omega=omega, models=models, personal=personal,
                        clusters=clusters, members=members, history=history,
-                       rng_key=rng_key)
+                       rng_key=rng_key, buffer=buffer)
 
 
 jax.tree_util.register_pytree_node(ServerState, _flatten_state, _unflatten_state)

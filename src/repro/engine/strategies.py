@@ -231,6 +231,7 @@ class Strategy:
     name = "base"
     needs_extractor = False
     full_participation = False
+    supports_async = False
 
     # ------------------------------------------------------------ lifecycle
     def init_state(self, ctx: EngineContext) -> ServerState:
@@ -299,6 +300,25 @@ class Strategy:
         strategies only."""
         raise NotImplementedError(f"strategy {self.name!r} has no cluster inference")
 
+    # ------------------------------------------------------------ async
+    def async_dispatch(self, ctx, state, client_ids, buf, slots):
+        """Async round's pre-aggregation half: run this strategy's
+        clustering + local-training work for the dispatched cohort and
+        scatter the trained rows into the buffer's reserved ``slots``;
+        ``(ctx, state, client_ids, buf, slots) -> (state', buf')``.
+        Only strategies with ``supports_async = True`` implement it."""
+        raise NotImplementedError(
+            f"strategy {self.name!r} has no async dispatch hook")
+
+    def async_merge(self, ctx, state, batch, weights):
+        """Async round's aggregation half: merge one ``FlushBatch`` of
+        arrived contributions under the staleness-effective ``weights``
+        (host f32, dispatch order) through the SAME aggregation
+        functions the synchronous round calls;
+        ``(ctx, state, batch, weights) -> (state', metrics dict)``."""
+        raise NotImplementedError(
+            f"strategy {self.name!r} has no async merge hook")
+
 
 # --------------------------------------------------------------------- stocfl
 @register("stocfl")
@@ -306,6 +326,7 @@ class StoCFLStrategy(Strategy):
     """Algorithm 1: stochastic Ψ-clustering + bi-level cohort update."""
 
     needs_extractor = True
+    supports_async = True
 
     def init_state(self, ctx):
         """Adds the Ψ-clustering bookkeeping: the host ``ClusterState``
@@ -391,6 +412,80 @@ class StoCFLStrategy(Strategy):
                "objective": objective,
                "sampled": len(client_ids)}
         return state.replace(omega=omega, models=models, clusters=clusters), rec
+
+    # ------------------------------------------------------------ async
+    def async_dispatch(self, ctx, state, client_ids, buf, slots):
+        """The sync round's pre-aggregation half with the Ψ handshake
+        routed through the buffer: new clients' embeddings are scattered
+        into the buffer's Ψ rows and ``observe``/``merge_round`` read
+        them back (clustering never waits on a delta), then the bi-level
+        cohort step trains from the post-merge cluster models and the
+        (θᵢ, ωᵢ) stacks land in the reserved buffer slots. Line-for-line
+        the same clustering + training calls as ``round`` — that is what
+        makes the zero-delay flush bitwise."""
+        client_ids = np.asarray(client_ids)
+        clusters = state.clusters.copy()
+
+        # --- stochastic client clustering (Algorithm 1 lines 5-13)
+        new_pos = [i for i, c in enumerate(client_ids)
+                   if int(c) not in clusters.seen]
+        if new_pos:
+            new_ids = [int(client_ids[i]) for i in new_pos]
+            if ctx.arena is not None:
+                reps = [ctx.extractor(jax.tree.map(
+                    lambda x: x[0], ctx.arena.gather([c])))
+                    for c in new_ids]
+            else:
+                reps = [ctx.extractor(ctx.clients[c]) for c in new_ids]
+            # the buffer IS the observe data path: Ψ rows in, Ψ rows out
+            # (pure scatter/gather — the read-back is bit-identical)
+            new_slots = np.asarray(slots)[new_pos]
+            buf = buf.write_psi(new_slots, jnp.stack(reps))
+            back = buf.read_psi(new_slots)
+            clusters.observe(new_ids, [back[i] for i in range(len(new_ids))])
+        counts = {r: len(m) for r, m in clusters.clusters().items()}
+        merges = clusters.merge_round()
+        models = merge_cluster_models(state.models, merges, counts,
+                                      ctx.init_params)
+
+        # --- bi-level CFL (lines 14-19): one SPMD cohort step
+        roots = np.fromiter((clusters.uf.find(int(c)) for c in client_ids),
+                            np.int64, len(client_ids))
+        if ctx.arena is not None:
+            thetas = models.take(roots, ctx.init_params)
+        else:
+            thetas = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[models.get(int(r), ctx.init_params)
+                                    for r in roots])
+        batches = _batches(ctx, client_ids)
+        thetas = _place(ctx, thetas)
+        batches = _place(ctx, batches)
+        omega = _place(ctx, state.omega, replicated=True)
+        thetas_i, omegas_i = self._cohort(ctx)(thetas, omega, batches)
+        buf = buf.write(slots, thetas_i, omegas_i)
+        return state.replace(models=models, clusters=clusters), buf
+
+    def async_merge(self, ctx, state, batch, weights):
+        """The sync round's aggregation half over one flush: global ω
+        via ``AGGREGATORS[cfg.aggregator]``, per-cluster θ via the
+        pow2-padded ``aggregate_segments`` — with each flushed delta
+        re-rooted through the CURRENT partition (``find(cid)``), so
+        merges that happened while it was in flight are honored."""
+        cfg = ctx.cfg
+        clusters = state.clusters
+        omega = AGGREGATORS[cfg.aggregator](batch.aux, weights)
+        roots = np.fromiter((clusters.uf.find(int(c)) for c in batch.cids),
+                            np.int64, len(batch.cids))
+        uroots, seg = np.unique(roots, return_inverse=True)
+        agg = bilevel.aggregate_segments(batch.payload, weights, seg,
+                                         bank_pow2(len(uroots)))
+        models = state.models.put([int(r) for r in uroots], agg)
+        if isinstance(clusters, devclust.DeviceClusters):
+            objective = devclust.objective_closed(clusters.state)
+        else:
+            objective = clusters.objective()
+        rec = {"n_clusters": clusters.n_clusters(), "objective": objective}
+        return state.replace(omega=omega, models=models), rec
 
     def _cold_carry(self, ctx, state, clusters):
         """Build the scanned round's initial carry pieces from scratch:
@@ -728,6 +823,7 @@ class FedAvgStrategy(Strategy):
     """Single global model; λ=0 ∧ τ=−1 degeneration of StoCFL."""
 
     prox = False
+    supports_async = True
 
     def _upd(self, ctx):
         cfg = ctx.cfg
@@ -752,6 +848,23 @@ class FedAvgStrategy(Strategy):
         outs = self._upd(ctx)(_place(ctx, state.omega, replicated=True), batches)
         omega = bilevel.aggregate_stacked(outs, _weights(state, ids))
         return state.replace(omega=omega), {"sampled": len(ids)}
+
+    # ------------------------------------------------------------ async
+    def async_dispatch(self, ctx, state, client_ids, buf, slots):
+        """Broadcast ω and run the cohort's local SGD (the sync round's
+        training half, same compiled update), scattering the local
+        params into the reserved buffer slots."""
+        ids = np.asarray(client_ids)
+        batches = _place(ctx, _batches(ctx, ids))
+        outs = self._upd(ctx)(_place(ctx, state.omega, replicated=True),
+                              batches)
+        return state, buf.write(slots, outs)
+
+    def async_merge(self, ctx, state, batch, weights):
+        """Weighted mean of the flushed local params — the sync round's
+        ``aggregate_stacked`` on the staleness-effective weights."""
+        omega = bilevel.aggregate_stacked(batch.payload, weights)
+        return state.replace(omega=omega), {}
 
     def scan_round(self, ctx, state, pool, m):
         """Scannable FedAvg/FedProx round: draw → gather → local SGD →

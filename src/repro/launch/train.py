@@ -54,12 +54,16 @@ def _engine_cfg(args) -> engine.EngineConfig:
         if args.algo == "stocfl" and cluster_backend != "device":
             print("--scan-rounds: forcing --cluster-backend device")
             cluster_backend = "device"
+    async_cfg = None
+    if getattr(args, "async_mode", False):
+        async_cfg = engine.AsyncConfig(staleness_decay=args.staleness_decay,
+                                       staleness_cap=args.staleness_cap)
     return engine.EngineConfig(
         tau=args.tau, lam=args.lam, lr=args.lr, local_steps=args.local_steps,
         sample_rate=1.0 if args.algo == "cfl" else args.sample_rate,
         seed=args.seed, mu=args.lam, cohort_chunk=args.cohort_chunk,
         cluster_backend=cluster_backend, rng_backend=rng_backend,
-        fused_step=args.fused_step, dtype=args.dtype)
+        fused_step=args.fused_step, dtype=args.dtype, async_cfg=async_cfg)
 
 
 def _churn_timeline(args, n_clusters: int):
@@ -107,7 +111,8 @@ def run_classification(args) -> dict:
                            cohort_quantum=args.cohort_quantum,
                            eval_every=max(args.rounds // 10, 1),
                            test_sets=test_sets, true_cluster=true_cluster,
-                           scan_spans=args.scan_rounds)
+                           scan_spans=args.scan_rounds,
+                           async_mode=args.async_mode)
         out["churn"] = {"timeline": tl.counts(),
                         "joined": len(log.joined),
                         "departed": len(log.departed),
@@ -119,6 +124,11 @@ def run_classification(args) -> dict:
         if args.save_log:
             with open(args.save_log, "w") as f:
                 json.dump(log.to_json(), f, indent=1)
+    elif args.async_mode:
+        for t in range(args.rounds):
+            st, rec = engine.run_round_async(st)
+            if t % max(args.rounds // 10, 1) == 0:
+                print(f"round {t}: {rec}")
     elif args.scan_rounds:
         st = engine.run_rounds(st, args.rounds)   # ONE jitted lax.scan
         for t, rec in enumerate(st.history):
@@ -231,6 +241,20 @@ def main():
                          "flag: $JAX_COMPILATION_CACHE_DIR or "
                          "~/.cache/repro-jax-cache) so warm restarts skip "
                          "the compile tax")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="async buffered aggregation (engine."
+                         "run_round_async): delayed client deltas land in "
+                         "a device-resident buffer and flush as staleness-"
+                         "weighted merges; bitwise equal to the sync loop "
+                         "at zero delay (docs/ASYNC.md). Supported by "
+                         "stocfl/fedavg/fedprox; under --churn, Straggle "
+                         "victims report back late instead of dropping")
+    ap.add_argument("--staleness-decay", type=float, default=1.0,
+                    help="async merge-weight decay γ (weight = "
+                         "count · γ^staleness; 1.0 = pure count weighting)")
+    ap.add_argument("--staleness-cap", type=int, default=4,
+                    help="max rounds a buffered delta may age before it is "
+                         "dropped instead of merged")
     ap.add_argument("--churn", default=None,
                     help="dynamic-federation mode (§5): a JSON trace path, "
                          "or Poisson churn 'join=2.0,leave=1.5,straggle=0.1' "
@@ -255,6 +279,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default=None)
     args = ap.parse_args()
+    if args.async_mode and args.scan_rounds:
+        raise SystemExit("--async is host-orchestrated (the delta buffer "
+                         "bookkeeping lives on the host) and cannot be "
+                         "fused with --scan-rounds")
     if args.compile_cache is not None:
         from repro.utils.cache import enable_compilation_cache
         path = enable_compilation_cache(

@@ -23,6 +23,7 @@ from repro.sharding.specs import (  # noqa: F401
     mesh_client_count,
     mesh_fingerprint,
     param_shardings,
+    place_buffer_rows,
     place_cohort,
     place_replicated,
     psum_segments,
@@ -42,6 +43,7 @@ __all__ = [
     "mesh_client_count",
     "mesh_fingerprint",
     "param_shardings",
+    "place_buffer_rows",
     "place_cohort",
     "place_replicated",
     "psum_segments",

@@ -252,6 +252,16 @@ def place_replicated(tree, mesh: Mesh):
     return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
 
 
+def place_buffer_rows(tree, mesh: Mesh):
+    """Pin an async delta-buffer row bank (or a flushed row stack) to the
+    mesh's client axes — the same rule as arena rows: the leading axis is
+    the per-client row axis, so it rides the client axes whenever it
+    divides them (pow2 buffer capacities always divide a pow2 mesh) and
+    relaxes to replicated otherwise. Alias of ``place_cohort``, named for
+    the engine's async surface (``AsyncBuffer.place``)."""
+    return place_cohort(tree, mesh)
+
+
 def constrain_cohort(tree, mesh: Optional[Mesh]):
     """Trace-time twin of ``place_cohort``: ``with_sharding_constraint``
     every stacked leaf's LEADING (client) axis onto the mesh's client

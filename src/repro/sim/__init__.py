@@ -3,7 +3,7 @@
 The engine (``repro.engine``) gives the churn *primitives* — pure
 ``join`` / ``leave`` / ``infer`` transitions and an arena that grows and
 compacts — and this package drives them over time: a ``Timeline`` of
-typed events (``Join``, ``Leave``, ``Straggle``, ``Drift``,
+typed events (``Join``, ``Leave``, ``Straggle``, ``Drift``, ``Delay``,
 ``Availability`` windows) generated stochastically
 (``Timeline.from_poisson``), replayed from a JSON trace
 (``Timeline.from_trace``), or written explicitly, and a
@@ -11,14 +11,14 @@ typed events (``Join``, ``Leave``, ``Straggle``, ``Drift``,
 ``engine.run_round`` while recording the §5 joined-client accuracy
 trajectory. See ``docs/ARCHITECTURE.md`` for where this layer sits.
 """
-from repro.sim.events import (Availability, Drift, Join, Leave,  # noqa: F401
-                              Straggle, event_from_dict, to_dict)
+from repro.sim.events import (Availability, Delay, Drift, Join,  # noqa: F401
+                              Leave, Straggle, event_from_dict, to_dict)
 from repro.sim.simulate import (SimLog, routed_accuracy,  # noqa: F401
                                 routed_model, simulate)
 from repro.sim.timeline import Timeline  # noqa: F401
 
 __all__ = [
-    "Availability", "Drift", "Join", "Leave", "Straggle", "Timeline",
+    "Availability", "Delay", "Drift", "Join", "Leave", "Straggle", "Timeline",
     "SimLog", "simulate", "routed_model", "routed_accuracy",
     "event_from_dict", "to_dict",
 ]

@@ -70,6 +70,20 @@ class Drift:
 
 
 @dataclasses.dataclass(frozen=True)
+class Delay:
+    """Async report-back latency at round ``t`` (``simulate(...,
+    async_mode=True)`` only): the cohort members in ``cids`` (``None`` =
+    the whole cohort) return their trained contribution ``rounds``
+    rounds late — the delta sits in the engine's ``AsyncBuffer`` and
+    merges at its arrival flush with weight ``count · γ^staleness``.
+    Delays accumulate with Straggle-induced latency in the same round.
+    """
+    t: int
+    rounds: int = 1
+    cids: Optional[Tuple[int, ...]] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class Availability:
     """Client ``cid`` is only available for sampling in rounds
     ``start <= t < end``. A client with no window is always available; a
@@ -81,7 +95,7 @@ class Availability:
 
 
 _KINDS = {"join": Join, "leave": Leave, "straggle": Straggle,
-          "drift": Drift, "availability": Availability}
+          "drift": Drift, "availability": Availability, "delay": Delay}
 
 
 def to_dict(ev) -> dict:
@@ -94,7 +108,7 @@ def to_dict(ev) -> dict:
         if d.pop("batch", None) is not None:
             raise ValueError("Join events carrying an in-memory batch "
                              "cannot be serialized; use cluster= instead")
-    if kind == "drift" and d["cids"] is not None:
+    if kind in ("drift", "delay") and d["cids"] is not None:
         d["cids"] = list(d["cids"])
     return {"kind": kind, **{k: v for k, v in d.items() if v is not None}}
 
@@ -106,6 +120,6 @@ def event_from_dict(d: dict):
     if kind not in _KINDS:
         raise ValueError(f"unknown event kind {kind!r} "
                          f"(expected one of {sorted(_KINDS)})")
-    if kind == "drift" and d.get("cids") is not None:
+    if kind in ("drift", "delay") and d.get("cids") is not None:
         d["cids"] = tuple(int(c) for c in d["cids"])
     return _KINDS[kind](**d)

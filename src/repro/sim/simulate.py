@@ -30,7 +30,7 @@ import numpy as np
 
 from repro import engine
 from repro.engine.registry import get_strategy
-from repro.sim.events import Drift, Join, Leave, Straggle
+from repro.sim.events import Delay, Drift, Join, Leave, Straggle
 from repro.sim.timeline import Timeline
 
 
@@ -122,7 +122,8 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
              cohort_quantum: int = 0, eval_every: int = 0,
              test_sets: Optional[dict] = None,
              true_cluster: Optional[Any] = None,
-             incumbent_sample: int = 64, scan_spans: bool = False):
+             incumbent_sample: int = 64, scan_spans: bool = False,
+             async_mode: bool = False):
     """Drive ``rounds`` engine rounds through a churn ``Timeline``.
 
     Args:
@@ -167,6 +168,18 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
         run_rounds preconditions (arena + device rng; device partition
         for StoCFL); states that don't meet them fall back to eager
         rounds silently.
+      async_mode: drive every round through ``engine.run_round_async``
+        instead of ``run_round`` (needs an async-capable strategy —
+        stocfl / fedavg / fedprox). Latency comes from the same event
+        machinery: a ``Straggle`` at round ``t`` no longer drops its
+        victims from the cohort — each one reports back one round LATE
+        (same seeded rng draw as the sync drop, so a timeline replays
+        identically) — and ``Delay`` events add ``ev.rounds`` of latency
+        to their ``cids`` (or the whole cohort). Per-round records gain
+        the flush bookkeeping (``merged`` / ``dropped_stale`` /
+        ``in_flight``). Mutually exclusive with ``scan_spans`` (the
+        buffer is host-orchestrated, not scannable — spans fall back to
+        eager async rounds).
 
     Returns:
       (final ``ServerState``, ``SimLog``).
@@ -199,7 +212,7 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
     while t < rounds:
         # ---- event-free span: one run_rounds scan instead of N eager
         # dispatches (identical trajectory; see scan_spans docs)
-        if scan_spans and cohort_quantum <= 1:
+        if scan_spans and not async_mode and cohort_quantum <= 1:
             span = 0
             while t + span < rounds and _plain(t + span):
                 span += 1
@@ -236,7 +249,7 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
                 continue
 
         evs = timeline.at(t)
-        labels, drop_rate = [], 0.0
+        labels, drop_rate, delay_evs = [], 0.0, []
         t0 = time.time()
         for ev in evs:
             if isinstance(ev, Join):
@@ -262,6 +275,12 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
             elif isinstance(ev, Straggle):
                 drop_rate = max(drop_rate, float(ev.rate))
                 labels.append(f"straggle:{ev.rate}")
+            elif isinstance(ev, Delay):
+                if async_mode:
+                    delay_evs.append(ev)
+                    labels.append(f"delay:{ev.rounds}")
+                else:
+                    labels.append("delay:inapplicable-sync")
             elif isinstance(ev, Drift):
                 cids = ev.cids if ev.cids is not None else tuple(
                     i for i in range(state.n_clients) if i not in state.left)
@@ -285,15 +304,33 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
             # otherwise would log cohort sizes that never trained
             ids = np.array([i for i in range(state.n_clients)
                             if i not in state.left])
+            delays = np.zeros(len(ids), np.int64)
             if busy or drop_rate > 0:
                 labels.append("full-participation:cohort-events-inapplicable")
         else:
             adv, ids = engine.sample_clients(state, unavailable=busy)
             state = engine.advance_rng(state, adv)
+            delays = np.zeros(len(ids), np.int64)
             if drop_rate > 0 and len(ids):
-                ids = ids[rng.random(len(ids)) >= drop_rate]
+                # one seeded draw either way, so a timeline replays
+                # identically sync vs async
+                straggled = rng.random(len(ids)) < drop_rate
+                victims = [int(c) for c in np.asarray(ids)[straggled]]
+                if victims:
+                    labels.append("straggle-victims:" +
+                                  ",".join(str(c) for c in victims))
+                if async_mode:
+                    delays[straggled] += 1   # report back late, not never
+                else:
+                    ids = ids[~straggled]
+                    delays = delays[~straggled]
+            for ev in delay_evs:
+                hit = (np.ones(len(ids), bool) if ev.cids is None
+                       else np.isin(np.asarray(ids), np.asarray(ev.cids)))
+                delays[hit] += int(ev.rounds)
             if cohort_quantum > 1 and len(ids) > cohort_quantum:
                 ids = ids[: (len(ids) // cohort_quantum) * cohort_quantum]
+                delays = delays[: len(ids)]
 
         rec: dict = {"t": t, "events": labels,
                      "n_registered": state.n_clients,
@@ -306,13 +343,21 @@ def simulate(state, timeline: Timeline, rounds: Optional[int] = None,
             t += 1
             continue
         t1 = time.time()
-        state, metrics = engine.run_round(state, ids)
+        if async_mode:
+            state, metrics = engine.run_round_async(state, ids, delays=delays)
+        else:
+            state, metrics = engine.run_round(state, ids)
         jax.block_until_ready(state.omega)
         t2 = time.time()
         rec["sec_train"] = round(t2 - t1, 4)     # run_round alone
         rec["sec_round"] = round(t2 - t0, 4)     # + event application
         if "n_clusters" in metrics:
             rec["n_clusters"] = metrics["n_clusters"]
+        if async_mode:
+            for k in ("merged", "dropped_stale", "dropped_left", "in_flight",
+                      "max_staleness"):
+                if k in metrics:
+                    rec[k] = int(metrics[k])
 
         # ---- §5 joined-vs-incumbent routed-accuracy trajectory
         if (eval_every and test_sets is not None

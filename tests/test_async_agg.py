@@ -1,0 +1,321 @@
+"""Sync-limit parity battery for async buffered aggregation
+(``engine.run_round_async`` / ``engine.AsyncBuffer`` — docs/ASYNC.md).
+
+The centerpiece contract: at zero delay with flush-every-round, the
+async round is BITWISE equal to the synchronous ``engine.run_round`` for
+every async-capable strategy (stocfl / fedavg / fedprox), with no mesh
+and on client-axis meshes of size 1 and 4 (run under
+``REPRO_FORCE_HOST_DEVICES=8`` for the multi-device lane — conftest
+translates it before jax imports; CI does). Around that centerpiece:
+
+- bounded staleness: no buffered delta older than ``staleness_cap`` is
+  ever merged (the recorded ``max_staleness`` proves it round by round);
+- arrival-order / memory-layout independence: a flush merges entries in
+  dispatch (seq) order at whatever slots the buffer assigned them, so
+  out-of-order arrivals and different buffer capacities (hence slot
+  layouts) cannot change a single bit of the result;
+- checkpoint mid-buffer: save with deltas in flight, restore into a
+  fresh engine, finish — bitwise vs the uninterrupted run;
+- churn boundaries: joins and leaves land while deltas are in flight;
+  a departed client's delta is dropped, never merged.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine
+from repro.checkpoint import load_server_state, save_server_state
+from repro.data import rotated
+from repro.engine.async_agg import AsyncBuffer
+from repro.launch.mesh import make_client_mesh
+from repro.models import simple
+
+TASK = simple.SYNTH_MLP
+LOSS = lambda p, b: simple.loss_fn(p, b, TASK)
+
+ASYNC = ["stocfl", "fedavg", "fedprox"]
+# None = no mesh; 1 and 4 = ("clients",) meshes (4 needs the forced-host
+# multi-device lane; sizes above the device count are skipped)
+MESHES = [None] + [s for s in (1, 4) if s <= len(jax.devices())]
+
+
+def _fed(n_clients=12, n_per=32, seed=3):
+    clients, tc, tests = rotated(n_clusters=2, n_clients=n_clients,
+                                 n_per=n_per, seed=seed)
+    return [jax.tree.map(jnp.asarray, c) for c in clients]
+
+
+def _params(seed=0):
+    return simple.init(jax.random.PRNGKey(seed), TASK)
+
+
+def _cfg(name, **kw):
+    kw.setdefault("local_steps", 2)
+    kw.setdefault("sample_rate", 0.5)
+    kw.setdefault("seed", 0)
+    kw.setdefault("rng_backend", "device")
+    if name == "stocfl":
+        kw.setdefault("cluster_backend", "device")
+    return engine.EngineConfig(**kw)
+
+
+def _init(name, clients, mesh_n=None, **kw):
+    mesh = None if mesh_n is None else make_client_mesh(mesh_n)
+    return engine.init(name, LOSS, _params(), clients, _cfg(name, **kw),
+                       arena=True, mesh=mesh)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def _assert_bitwise(sync, asy, history_subset=True):
+    """Async state ≡ sync state, bitwise: params, bank rows, partition,
+    Ψ reps, round counter, PRNG key. History: every key the sync round
+    recorded must appear in the async record with the identical value
+    (async records carry extra flush bookkeeping on top)."""
+    assert _leaves_equal(sync.omega, asy.omega), "omega diverged"
+    assert set(sync.models.keys()) == set(asy.models.keys()), \
+        "bank keys diverged"
+    for k in sync.models.keys():
+        assert _leaves_equal(sync.models[k], asy.models[k]), \
+            f"bank row {k} diverged"
+    if sync.clusters is not None:
+        assert sync.clusters.assignment() == asy.clusters.assignment(), \
+            "partition diverged"
+        assert sorted(sync.clusters.seen) == sorted(asy.clusters.seen)
+        for c in sync.clusters.seen:
+            assert np.array_equal(np.asarray(sync.clusters.reps[c]),
+                                  np.asarray(asy.clusters.reps[c])), \
+                f"Ψ rep of client {c} diverged"
+    assert sync.round == asy.round
+    assert sync.left == asy.left
+    assert np.array_equal(np.asarray(sync.rng_key), np.asarray(asy.rng_key)), \
+        "PRNG key diverged (draw sequences would fork)"
+    if history_subset:
+        assert len(sync.history) == len(asy.history)
+        for hs, ha in zip(sync.history, asy.history):
+            for k, v in hs.items():
+                assert k in ha and ha[k] == v, f"history[{k}] diverged"
+
+
+def _bitwise_states(a, b):
+    """Full async-vs-async equality (incl. buffer bookkeeping)."""
+    assert _leaves_equal(a.omega, b.omega)
+    assert set(a.models.keys()) == set(b.models.keys())
+    for k in a.models.keys():
+        assert _leaves_equal(a.models[k], b.models[k])
+    if a.clusters is not None:
+        assert a.clusters.assignment() == b.clusters.assignment()
+    assert a.round == b.round and a.left == b.left
+    assert np.array_equal(np.asarray(a.rng_key), np.asarray(b.rng_key))
+    assert a.history == b.history
+    assert (a.buffer is None) == (b.buffer is None)
+    if a.buffer is not None:
+        assert a.buffer.entries == b.buffer.entries
+
+
+# ================================================= sync-limit centerpiece
+@pytest.mark.parametrize("mesh_n", MESHES)
+@pytest.mark.parametrize("name", ASYNC)
+def test_zero_delay_parity(name, mesh_n):
+    """Zero delay + flush-every-round ≡ run_round, BITWISE, for five
+    rounds — per strategy, per mesh {none, 1, 4}."""
+    clients = _fed()
+    sync = _init(name, clients, mesh_n)
+    asy = _init(name, clients, mesh_n, async_cfg=engine.AsyncConfig())
+    for _ in range(5):
+        sync, _ = engine.run_round(sync)
+        asy, _ = engine.run_round_async(asy)
+    _assert_bitwise(sync, asy)
+
+
+@pytest.mark.parametrize("name", ASYNC)
+def test_zero_delay_parity_decay_irrelevant(name):
+    """γ < 1 cannot perturb the sync limit: γ^0 is exactly 1.0, so the
+    effective weights are bit-identical to the sync counts."""
+    clients = _fed()
+    sync = _init(name, clients)
+    asy = _init(name, clients,
+                async_cfg=engine.AsyncConfig(staleness_decay=0.5))
+    for _ in range(3):
+        sync, _ = engine.run_round(sync)
+        asy, _ = engine.run_round_async(asy)
+    _assert_bitwise(sync, asy)
+
+
+def test_unsupported_strategy_raises():
+    """Strategies without async hooks fail loudly, not silently-sync."""
+    clients = _fed()
+    st = _init("ditto", clients, async_cfg=engine.AsyncConfig())
+    with pytest.raises(NotImplementedError, match="async"):
+        engine.run_round_async(st)
+
+
+def test_empty_cohort_raises():
+    """Same empty-cohort contract as run_round."""
+    clients = _fed()
+    st = _init("fedavg", clients, async_cfg=engine.AsyncConfig())
+    with pytest.raises(ValueError, match="non-empty"):
+        engine.run_round_async(st, client_ids=np.asarray([], np.int64))
+
+
+# ==================================================== bounded staleness
+def test_bounded_staleness_invariant():
+    """No merged delta is ever older than the cap, and hopeless entries
+    (delay alone over the cap) are dropped — occupancy stays bounded."""
+    cap = 2
+    clients = _fed()
+    st = _init("stocfl", clients,
+               async_cfg=engine.AsyncConfig(staleness_cap=cap,
+                                            staleness_decay=0.8))
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        st, rec = engine.run_round_async(st, delays=rng.integers(0, 6, 6))
+        assert rec["max_staleness"] <= cap
+        assert rec["in_flight"] <= rec["sampled"] * (cap + 1)
+    assert any(r["dropped_stale"] > 0 for r in st.history), \
+        "fixture never exercised the cap"
+    assert all(r["max_staleness"] <= cap for r in st.history)
+
+
+# ============================== arrival-order / layout independence
+def test_flush_merges_in_dispatch_order():
+    """Out-of-order arrivals within a flush are canonicalized: the
+    flush presents entries in dispatch (seq) order whatever their slots
+    or arrival pattern, and the gathered rows are bit-identical to the
+    dispatched ones."""
+    rows = lambda v: {"w": jnp.full((1, 2, 3), float(v), jnp.float32)}
+    buf = AsyncBuffer.fresh(4)
+    # dispatch A at round 0 arriving at 2 (slow), B at round 1 arriving
+    # at 2 (fast) — B "overtakes" A in real time
+    buf, sa = buf.reserve([10], dispatch=0, arrivals=[2], weights=[3.0])
+    buf = buf.write(sa, rows(1.0))
+    buf, sb = buf.reserve([11], dispatch=1, arrivals=[2], weights=[5.0])
+    buf = buf.write(sb, rows(2.0))
+    buf, batch, drops = buf.flush(t=2, staleness_cap=4)
+    assert batch is not None and drops == {"stale": 0, "left": 0}
+    assert batch.cids.tolist() == [10, 11], "not dispatch order"
+    assert batch.staleness.tolist() == [2, 1]
+    assert batch.weight.tolist() == [3.0, 5.0]
+    got = np.asarray(batch.payload["w"])
+    assert np.array_equal(got[0], np.full((2, 3), 1.0, np.float32))
+    assert np.array_equal(got[1], np.full((2, 3), 2.0, np.float32))
+    assert buf.in_flight == 0
+
+
+@pytest.mark.parametrize("capacity", [0, 16, 128])
+def test_buffer_capacity_layout_independence(capacity):
+    """The buffer's row capacity (hence slot layout and pow2 padding)
+    is pure memory policy: every capacity yields the bitwise-identical
+    trajectory under the same delays."""
+    clients = _fed()
+    delays = [np.array([0, 1, 2, 0, 1, 2]), np.array([2, 2, 0, 0, 1, 1]),
+              np.zeros(6, np.int64), np.array([1, 0, 1, 0, 1, 0])]
+    ref = _init("stocfl", clients,
+                async_cfg=engine.AsyncConfig(staleness_decay=0.9))
+    got = _init("stocfl", clients,
+                async_cfg=engine.AsyncConfig(staleness_decay=0.9,
+                                             buffer_capacity=capacity))
+    for d in delays:
+        ref, _ = engine.run_round_async(ref, delays=d)
+        got, _ = engine.run_round_async(got, delays=d)
+    _bitwise_states(ref, got)
+
+
+def test_buffer_grows_on_overflow():
+    """A capacity smaller than the cohort doubles pow2-amortized instead
+    of corrupting rows — and the trajectory stays bitwise."""
+    clients = _fed()
+    ref = _init("fedavg", clients, async_cfg=engine.AsyncConfig())
+    tiny = _init("fedavg", clients,
+                 async_cfg=engine.AsyncConfig(buffer_capacity=2))
+    for d in ([3, 3, 3, 3, 3, 3], [0, 0, 0, 0, 0, 0]):
+        ref, _ = engine.run_round_async(ref, delays=np.asarray(d))
+        tiny, _ = engine.run_round_async(tiny, delays=np.asarray(d))
+    assert tiny.buffer.capacity >= 8
+    _bitwise_states(ref, tiny)
+
+
+# ================================================== checkpoint mid-buffer
+@pytest.mark.parametrize("name", ["stocfl", "fedavg"])
+def test_checkpoint_mid_buffer_resume(name, tmp_path):
+    """Save with deltas in flight, restore into a FRESH engine, finish:
+    bitwise vs the uninterrupted run — buffer rows, entry bookkeeping,
+    seq order and f32 weights all round-trip."""
+    clients = _fed()
+    acfg = engine.AsyncConfig(staleness_decay=0.8, staleness_cap=3)
+    st = _init(name, clients, async_cfg=acfg)
+    rng = np.random.default_rng(5)
+    head = [rng.integers(0, 3, 6) for _ in range(3)]
+    tail = [rng.integers(0, 3, 6) for _ in range(3)]
+    for d in head:
+        st, _ = engine.run_round_async(st, delays=d)
+    assert st.buffer.in_flight > 0, "fixture never left deltas in flight"
+    save_server_state(str(tmp_path / "ck"), st)
+    resumed = load_server_state(str(tmp_path / "ck"),
+                                _init(name, clients, async_cfg=acfg))
+    assert resumed.buffer.entries == st.buffer.entries
+    for d in tail:
+        st, _ = engine.run_round_async(st, delays=d)
+        resumed, _ = engine.run_round_async(resumed, delays=d)
+    _bitwise_states(st, resumed)
+
+
+def test_pre_async_checkpoint_loads_without_buffer(tmp_path):
+    """A checkpoint saved by a synchronous run carries no buffer and
+    restores with ``buffer=None`` (forward compatibility)."""
+    clients = _fed()
+    st = _init("fedavg", clients)
+    st, _ = engine.run_round(st)
+    save_server_state(str(tmp_path / "ck"), st)
+    back = load_server_state(str(tmp_path / "ck"), _init("fedavg", clients))
+    assert back.buffer is None
+    assert _leaves_equal(st.omega, back.omega)
+
+
+# ======================================================= churn in flight
+def test_leave_drops_in_flight_delta():
+    """A client that departs while its delta is buffered is dropped at
+    the flush, never merged — and the run keeps going."""
+    clients = _fed()
+    st = _init("stocfl", clients, async_cfg=engine.AsyncConfig())
+    # round 0: everyone reports 2 rounds late
+    st, rec = engine.run_round_async(st, delays=np.full(6, 2, np.int64))
+    assert rec["in_flight"] == 6
+    victim = int(st.buffer.entries[0].cid)
+    st = engine.leave(st, victim)
+    dropped = merged_victim = 0
+    for _ in range(3):
+        st, rec = engine.run_round_async(st)
+        dropped += rec["dropped_left"]
+    assert dropped >= 1, "departed client's delta was not dropped"
+    assert victim in st.left
+    # the victim's contribution must not have reached any merge: no
+    # flushed batch may contain it (checked via the entry bookkeeping —
+    # nothing in flight carries the departed cid anymore)
+    assert all(int(e.cid) != victim for e in st.buffer.entries)
+    assert merged_victim == 0
+
+
+def test_join_while_deltas_in_flight():
+    """A client joining mid-flight gets observed, clustered, and merged
+    through the same buffer path on its first sampled round."""
+    clients = _fed()
+    extra = _fed(n_clients=14, seed=9)[12:]
+    st = _init("stocfl", clients,
+               async_cfg=engine.AsyncConfig(staleness_cap=3))
+    st, _ = engine.run_round_async(st, delays=np.full(6, 1, np.int64))
+    assert st.buffer.in_flight > 0
+    st, cid = engine.join(st, extra[0])
+    for _ in range(6):
+        st, _ = engine.run_round_async(st, delays=np.full(7, 1, np.int64)[
+            : max(1, int(np.ceil(0.5 * (st.n_clients - len(st.left)))))])
+    assert cid in st.clusters.seen, "joined client never observed"
+    assert sum(r["merged"] for r in st.history) > 0

@@ -1,0 +1,99 @@
+"""Hypothesis properties for async buffered aggregation
+(``repro.engine.async_agg``) — the randomized counterpart of the seeded
+sync-limit battery in ``tests/test_async_agg.py``.
+
+Three invariants, over hypothesis-chosen weights, delays, and buffer
+shapes:
+
+- staleness weights are monotone non-increasing in delay (γ ≤ 1) and
+  exactly the raw counts at zero staleness (γ^0 ≡ 1.0);
+- at γ = 1 the total merge weight of any flush partition equals the
+  synchronous round's total — no weight is created or destroyed by
+  buffering, only by the explicit stale/left drops;
+- the buffer's pow2 capacity quantization never forks the sampler draw
+  sequence: reserve/grow touch no PRNG, so any capacity yields the
+  identical cohort stream (the ``pool_capacity`` invariant style of
+  ``test_sampler_properties.py``, applied to the delta buffer).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.engine import sampler
+from repro.engine.async_agg import AsyncBuffer, staleness_weights
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+
+@settings(deadline=None, max_examples=60)
+@given(w=hst.floats(0.5, 1e4), decay=hst.floats(0.0, 1.0),
+       s=hst.integers(0, 12))
+def test_staleness_weights_monotone(w, decay, s):
+    """w·γ^s is non-increasing in s for γ ∈ [0, 1], stays f32, and is
+    bit-identical to the raw weight at s = 0."""
+    ws = staleness_weights(np.full(s + 1, w), np.arange(s + 1), decay)
+    assert ws.dtype == np.float32
+    assert np.all(np.diff(ws) <= 0), "weight grew with staleness"
+    assert ws[0] == np.float32(w), "γ^0 perturbed the zero-staleness weight"
+
+
+@settings(deadline=None, max_examples=60)
+@given(ws=hst.lists(hst.floats(0.5, 1e4), min_size=1, max_size=32),
+       ss=hst.data())
+def test_gamma_one_conserves_total_weight(ws, ss):
+    """γ = 1: the flushed effective weights sum to exactly the sync
+    total, whatever the per-entry staleness (1.0^s ≡ 1.0 bitwise)."""
+    w = np.asarray(ws, np.float32)
+    s = np.asarray(ss.draw(hst.lists(hst.integers(0, 10), min_size=len(w),
+                                     max_size=len(w))))
+    eff = staleness_weights(w, s, 1.0)
+    assert np.array_equal(eff, w), "γ=1 changed a weight bit"
+    assert np.float32(eff.sum()) == np.float32(w.sum())
+
+
+@settings(deadline=None, max_examples=40)
+@given(cap=hst.integers(1, 200), m=hst.integers(1, 32),
+       rounds=hst.integers(1, 4))
+def test_reserve_slots_deterministic_and_pow2(cap, m, rounds):
+    """Reserve never consults randomness: slot assignment is the lowest
+    free rows in draw order, capacity stays pow2 through growth, and
+    entries keep consecutive seq numbers across rounds."""
+    buf = AsyncBuffer.fresh(cap)
+    assert buf.capacity & (buf.capacity - 1) == 0
+    seq = 0
+    for t in range(rounds):
+        buf, slots = buf.reserve(list(range(t * m, t * m + m)), t,
+                                 [t + 5] * m, [1.0] * m)
+        assert buf.capacity & (buf.capacity - 1) == 0, "capacity not pow2"
+        assert len(set(slots.tolist())) == m, "slot collision"
+        for e in buf.entries[-m:]:
+            assert e.seq == seq
+            seq += 1
+    occupied = [e.slot for e in buf.entries]
+    assert len(set(occupied)) == len(occupied), "two entries share a row"
+    assert max(occupied) < buf.capacity
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=hst.integers(0, 2**31 - 1), cap_exp=hst.integers(0, 7))
+def test_buffer_capacity_never_forks_draw_sequence(seed, cap_exp):
+    """The sampler key stream is independent of the delta buffer: a
+    pow2-padded buffer of ANY capacity leaves every cohort draw
+    identical (buffer ops consume no PRNG — the async engine threads
+    the same ``draw_cohort`` chain as the sync one)."""
+    pool = sampler.cohort_pool(16, {1, 5}, set())
+    k_ref = k_buf = jax.random.PRNGKey(seed)
+    buf = AsyncBuffer.fresh(1 << cap_exp)
+    for t in range(3):
+        k_ref, a = sampler.draw_cohort(k_ref, pool, 4)
+        k_buf, b = sampler.draw_cohort(k_buf, pool, 4)
+        # interleave buffer traffic between draws — must be a no-op for
+        # the key chain
+        buf, slots = buf.reserve([int(x) for x in np.asarray(b)], t,
+                                 [t] * 4, [1.0] * 4)
+        buf, _, _ = buf.flush(t, staleness_cap=4)
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert np.array_equal(np.asarray(k_ref), np.asarray(k_buf)), \
+            "buffer traffic forked the PRNG chain"

@@ -160,6 +160,55 @@ def test_mesh_fingerprint_keys_separate_scan_caches():
     assert ka and kb and set(ka).isdisjoint(kb), (ka, kb)
 
 
+@pytest.mark.parametrize("name", ["stocfl", "fedavg"])
+def test_steady_async_rounds_compile_zero_programs(name):
+    """Steady-state async rounds (constant cohort, constant delay —
+    hence constant dispatch and flush widths) compile ZERO new XLA
+    programs after warmup: the buffer's scatter/gather are keyed on
+    (capacity, width), both constant, and the merge runs the same
+    aggregation programs as the warmed rounds."""
+    import numpy as np
+    clients, _, _ = _fed()
+    st = _init(name, clients, async_cfg=engine.AsyncConfig())
+    d = np.ones(6, np.int64)
+    for _ in range(6):                      # warm: partition settles,
+        st, _ = engine.run_round_async(st, delays=d)   # widths lock in
+    with sanitize.compile_budget(0):
+        for _ in range(3):
+            st, rec = engine.run_round_async(st, delays=d)
+            assert rec["merged"] == 6       # full steady flush
+    assert st.round == 9
+
+
+def test_async_buffer_capacity_brackets_bound_programs():
+    """Buffer growth is pow2-amortized: a delay burst that doubles the
+    row capacity re-keys only the per-capacity row programs (grow +
+    scatter + gather per bank) — a small documented residue, NOT a
+    recompile of the training or aggregation programs."""
+    import numpy as np
+    clients, _, _ = _fed()
+    st = _init("fedavg", clients,
+               async_cfg=engine.AsyncConfig(buffer_capacity=8,
+                                            staleness_cap=8))
+    z = np.zeros(6, np.int64)
+    for _ in range(3):                      # warm at capacity 8
+        st, _ = engine.run_round_async(st, delays=z)
+    assert st.buffer.capacity == 8
+    with sanitize.compile_budget(16, log_names=True) as log:
+        # burst: everyone 4 rounds late, twice — occupancy 12 > 8 forces
+        # one doubling; training/aggregation programs must all be reused
+        st, _ = engine.run_round_async(st, delays=np.full(6, 4, np.int64))
+        st, _ = engine.run_round_async(st, delays=np.full(6, 4, np.int64))
+    assert st.buffer.capacity == 16
+    assert log.count <= 16, log.describe()
+    for _ in range(3):
+        st, _ = engine.run_round_async(st, delays=z)
+    # the grown capacity is itself steady again: zero from here
+    st, _ = engine.run_round_async(st, delays=z)
+    with sanitize.compile_budget(0):
+        st, _ = engine.run_round_async(st, delays=z)
+
+
 @pytest.mark.parametrize("name", ALL)
 def test_churn_cycle_compile_set_pinned(name):
     """After two warm churn cycles, a third identical-shape cycle stays

@@ -205,6 +205,33 @@ def test_sharded_scanned_rounds_zero_host_transfers(name):
     assert st2.round == st.round + rounds
 
 
+def test_async_buffer_data_plane_zero_host_transfers():
+    """The async buffer's data plane — slot scatter at dispatch, row
+    gather at flush, weighted aggregation of the flushed stack — runs
+    entirely on device. After one warm async round compiles every
+    program, re-invoking the jitted row movement + merge on committed
+    device operands under ``no_transfer()`` completes. (The control
+    plane — entry bookkeeping, staleness weights — is host-side BY
+    DESIGN: it's O(cohort) Python scalars per round, see docs/ASYNC.md.)"""
+    from repro.core import bilevel
+    from repro.engine.async_agg import _gather_rows, _scatter_rows
+    clients, _, _ = _fed()
+    st = _init("fedavg", clients, async_cfg=engine.AsyncConfig())
+    st, _ = engine.run_round_async(st)      # warm: rows + programs exist
+    rows = st.buffer.payload
+    slots = jnp.arange(4)
+    upd = jax.tree.map(lambda r: r[:4], rows)
+    agg = jax.jit(bilevel.aggregate_stacked)
+    w = jnp.ones(4, jnp.float32)
+    # warm the exact calls, then prove them transfer-free
+    jax.block_until_ready((_scatter_rows(rows, slots, upd),
+                           agg(_gather_rows(rows, slots), w)))
+    with sanitize.no_transfer():
+        rows2 = _scatter_rows(rows, slots, upd)
+        merged = agg(_gather_rows(rows2, slots), w)
+        jax.block_until_ready((rows2, merged))
+
+
 def test_scan_program_skipped_pool_returns_none():
     """An empty pool (everyone unavailable) has no program — run_rounds
     records skipped rounds instead."""

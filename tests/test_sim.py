@@ -385,3 +385,86 @@ def test_arena_update_rewrites_row_in_place():
     assert float(np.asarray(got["mask"]).sum()) == 4.0
     with pytest.raises(ValueError):
         ar2.update(1, _mk(rng, 99))                  # longer than n_max
+
+
+# ============================================== straggler auditability
+def test_straggle_victims_recorded_in_event_labels():
+    """Regression: stragglers used to vanish from the cohort silently —
+    the round logged ``straggle:{rate}`` but not WHO was dropped. The
+    victims now ride the event labels (``straggle-victims:<cids>``), so
+    async delay attribution is auditable from the log alone."""
+    clients, _, _ = _fed(n_clients=12)
+    st = engine.init("fedavg", LOSS, _params(), clients,
+                     _cfg(sample_rate=0.75))
+    tl = Timeline([Straggle(t=1, rate=0.6)])
+    st, log = simulate(st, tl, rounds=3, seed=0)
+    rec = log.records[1]
+    assert any(l.startswith("straggle:") for l in rec["events"])
+    victim_labels = [l for l in rec["events"]
+                     if l.startswith("straggle-victims:")]
+    assert victim_labels, "victim ids missing from the event log"
+    victims = [int(c) for c in victim_labels[0].split(":", 1)[1].split(",")]
+    assert victims, "label present but empty"
+    # same seed, no straggle → the same draw trains in full; the victims
+    # are exactly the sampled-minus-trained gap
+    st0 = engine.init("fedavg", LOSS, _params(), clients,
+                      _cfg(sample_rate=0.75))
+    _, log0 = simulate(st0, Timeline([]), rounds=3, seed=0)
+    assert rec["cohort"] + len(victims) == log0.records[1]["cohort"]
+
+
+def test_straggle_victims_replay_identically():
+    """Same seed, same timeline → same victims, both modes: the async
+    path consumes the identical rng draw to delay instead of drop."""
+    clients, _, _ = _fed(n_clients=12)
+
+    def labels(async_mode):
+        cfg = _cfg(sample_rate=0.75, rng_backend="device",
+                   cluster_backend="device",
+                   async_cfg=engine.AsyncConfig() if async_mode else None)
+        st = engine.init("stocfl", LOSS, _params(), clients, cfg, arena=True)
+        tl = Timeline([Straggle(t=1, rate=0.6)])
+        _, log = simulate(st, tl, rounds=3, seed=0, async_mode=async_mode)
+        return [l for l in log.records[1]["events"]
+                if l.startswith("straggle-victims:")]
+
+    sync_victims, async_victims = labels(False), labels(True)
+    assert sync_victims and sync_victims == async_victims
+
+
+def test_simulate_async_mode_delay_events():
+    """The async dispatch loop: Straggle victims report late instead of
+    dropping (cohort stays full), Delay events push whole-cohort latency,
+    and the per-round records carry the flush bookkeeping."""
+    from repro.sim import Delay
+    clients, _, _ = _fed(n_clients=8)
+    st = engine.init("stocfl", LOSS, _params(), clients,
+                     _cfg(rng_backend="device", cluster_backend="device",
+                          async_cfg=engine.AsyncConfig(staleness_cap=3)),
+                     arena=True)
+    tl = Timeline([Straggle(t=1, rate=0.5), Delay(t=3, rounds=2)])
+    st, log = simulate(st, tl, rounds=7, seed=0, async_mode=True)
+    recs = log.records
+    assert all("merged" in r and "in_flight" in r for r in recs
+               if not r["skipped"])
+    # straggle round keeps its full cohort (victims delayed, not dropped)
+    assert recs[1]["cohort"] == 4
+    # the Delay round defers its whole cohort: nothing it dispatched
+    # can merge before t+2
+    assert recs[3]["in_flight"] >= recs[3]["cohort"]
+    # conservation: every dispatched delta is merged or explicitly dropped
+    dispatched = sum(r["cohort"] for r in recs if not r["skipped"])
+    merged = sum(r.get("merged", 0) for r in recs)
+    dropped = sum(r.get("dropped_stale", 0) + r.get("dropped_left", 0)
+                  for r in recs)
+    in_flight = recs[-1]["in_flight"]
+    assert merged + dropped + in_flight == dispatched
+
+
+def test_delay_event_round_trips_through_trace():
+    """Delay serializes like every other event (kind + fields, cids
+    list⇄tuple)."""
+    from repro.sim import Delay, event_from_dict, to_dict
+    ev = Delay(t=4, rounds=3, cids=(1, 2))
+    assert event_from_dict(to_dict(ev)) == ev
+    assert to_dict(Delay(t=1))["kind"] == "delay"
