@@ -16,6 +16,7 @@ import sys
 
 DEFAULT_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/CLUSTERING.md",
                  "docs/ANALYSIS.md", "docs/SHARDING.md", "docs/ASYNC.md",
+                 "docs/SERVING.md",
                  "EXPERIMENTS.md", "ROADMAP.md", "CHANGES.md"]
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 

@@ -13,7 +13,8 @@ and flush as staleness-weighted merges, bitwise equal to ``run_round``
 at zero delay (``repro.engine.async_agg``). See ``repro.engine.api``
 for the full contract.
 """
-from repro.engine.api import (advance_rng, evaluate, infer, init,  # noqa: F401
+from repro.engine.api import (advance_rng, evaluate, infer,  # noqa: F401
+                              infer_batch, init,
                               join, leave, run, run_round, run_rounds,
                               sample_clients, scan_blockers, scan_history,
                               scan_program)
@@ -35,7 +36,7 @@ __all__ = [
     "advance_rng", "scan_blockers", "scan_history", "scan_program",
     "run_round_async", "staleness_weights",
     "cohort_pool", "cohort_size", "draw_cohort", "pool_capacity",
-    "evaluate", "join", "leave", "infer",
+    "evaluate", "join", "leave", "infer", "infer_batch",
     "EngineConfig", "EngineContext", "ServerState",
     "AsyncConfig", "AsyncBuffer", "FlushBatch",
     "Strategy", "ClusterBank",

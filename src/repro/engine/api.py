@@ -437,3 +437,18 @@ def infer(state: ServerState, batch) -> dict:
     with which model. Returns ``{"cluster", "seed_from", "similarity",
     "model"}``; raises for strategies with no inference rule."""
     return get_strategy(state.strategy).infer(state.ctx, state, batch)
+
+
+def infer_batch(state: ServerState, batches) -> list:
+    """Batched §4.4 cluster inference: ONE Ψ-extraction + nearest pass
+    for many unseen-client batches. All batches must share one pytree
+    structure and leaf shapes — they are stacked on a new leading axis,
+    the Ψ extractor runs once under ``vmap``, and a single cluster-means
+    snapshot scores every (rep, cluster) pair. Returns one
+    ``infer``-shaped dict per batch, in submission order; strategies
+    without a vectorized rule fall back to a per-batch ``infer`` loop.
+    This is the serving router's fast path
+    (``repro.serve.Router.route_many``): routing cost amortizes to one
+    extractor call per admission wave instead of one per request."""
+    return get_strategy(state.strategy).infer_many(state.ctx, state,
+                                                   list(batches))

@@ -300,6 +300,13 @@ class Strategy:
         strategies only."""
         raise NotImplementedError(f"strategy {self.name!r} has no cluster inference")
 
+    def infer_many(self, ctx, state, batches) -> list:
+        """Batched ``infer`` — one result dict per batch, in order. The
+        base implementation loops ``infer``; strategies with a
+        vectorizable Ψ rule (StoCFL) override it with a single stacked
+        extraction + one nearest-cluster pass (``engine.infer_batch``)."""
+        return [self.infer(ctx, state, b) for b in batches]
+
     # ------------------------------------------------------------ async
     def async_dispatch(self, ctx, state, client_ids, buf, slots):
         """Async round's pre-aggregation half: run this strategy's
@@ -815,6 +822,36 @@ class StoCFLStrategy(Strategy):
         src = root if root is not None else near
         model = state.cluster_model(src) if src is not None else state.omega
         return {"cluster": root, "seed_from": src, "similarity": sim, "model": model}
+
+    def infer_many(self, ctx, state, batches):
+        """§4.4 for MANY unseen batches in one pass: stack the batches on
+        a new leading axis, run the Ψ extractor once under ``vmap``, pull
+        ONE cluster-means snapshot, and score every (rep, cluster) pair
+        as a single (J, K̃) cosine matrix. Routing decisions (nearest
+        root, τ clearance) match per-batch ``infer`` — this is the
+        serving router's amortized path (``repro.serve.Router``)."""
+        if not batches:
+            return []
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *batches)
+        reps = np.asarray(jax.vmap(ctx.extractor)(stacked), np.float32)
+        if state.clusters is None or state.clusters.n_clusters() == 0:
+            return [{"cluster": None, "seed_from": None, "similarity": 0.0,
+                     "model": state.omega} for _ in batches]
+        roots, means = state.clusters.cluster_means()
+        mn = means / (np.linalg.norm(means, axis=1, keepdims=True) + 1e-12)
+        rn = reps / (np.linalg.norm(reps, axis=1, keepdims=True) + 1e-12)
+        sims = rn @ mn.T                                   # (J, K̃)
+        tau = state.clusters.tau
+        out = []
+        for j in range(len(batches)):
+            best = int(np.argmax(sims[j]))
+            sim = float(sims[j][best])
+            root = int(roots[best])
+            out.append({"cluster": root if sim >= tau else None,
+                        "seed_from": root, "similarity": sim,
+                        "model": state.cluster_model(root)})
+        return out
 
 
 # ------------------------------------------------------------------ baselines

@@ -1,11 +1,15 @@
-"""Cluster-model serving driver — on the functional engine API.
+"""Cluster-model serving driver — a thin CLI over ``repro.serve``.
 
-StoCFL serving = hold a ``ServerState``, route each request to its
+StoCFL serving = hold a ``ServerState``, route each client to its
 cluster's personalized model (§4.4 inference: nearest cluster mean by Ψ
-cosine via ``engine.infer``), then batched prefill + greedy decode with
-the per-arch KV cache / SSM state. Cluster reference Ψ's are registered
-through ``engine.join`` — the same dynamic-membership transition a
-training server uses.
+cosine, cached per client), then serve tokens. The actual engine lives
+in ``repro.serve``: continuous batching over a fixed-slot decode state
+(``ServeEngine``, the default) or the debugged one-at-a-time loop
+(``--sequential``, ``serve.SequentialLoop``). This module only builds
+the state, fabricates a request stream, and times it — with the first
+compile SEPARATED from the timed region (a warmup wave at identical
+shapes pays every compile; ``reset()`` keeps the compiled programs and
+the routing cache, then the timed wave runs compile-free).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \\
       --requests 8 --prompt-len 32 --gen 16
@@ -20,83 +24,136 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import engine
+from repro import engine, serve
 from repro.configs import get_config
 from repro.core.extractor import llm_leaf_filter
 from repro.data import synthetic_lm_batch
 from repro.models import build
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI. ``--smoke`` and ``--full`` are a proper
+    mutually-exclusive pair (smoke is the default): the old parser
+    defaulted ``smoke=True`` on a bare ``store_true`` flag, so passing
+    ``--smoke`` was a no-op and nothing could assert it was set."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--smoke", dest="smoke", action="store_true",
+                      help="smoke-sized config (default)")
+    size.add_argument("--full", dest="smoke", action="store_false",
+                      help="full-sized config")
+    ap.set_defaults(smoke=True)
     ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--sequential", action="store_true",
+                    help="serve one request at a time (debugged legacy "
+                         "loop) instead of continuous batching")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--clusters", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode lanes per cluster group")
     ap.add_argument("--tau", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    model = build(cfg)
-    key = jax.random.PRNGKey(args.seed)
 
-    # --- a serving ServerState: K cluster models (stand-ins for a trained
-    # checkpoint — a real deployment would `load_server_state` here), with
-    # each cluster's reference Ψ registered via the join transition.
+def build_server_state(cfg, model, clusters: int, tau: float, seed: int):
+    """A serving ``ServerState``: K cluster models (stand-ins for a
+    trained checkpoint — a real deployment would ``load_server_state``
+    here), each cluster's reference Ψ registered via the ``join``
+    transition so routing has real cluster means to cosine against."""
+    key = jax.random.PRNGKey(seed)
     params0 = model.init(key)
     st = engine.init("stocfl", model.loss_fn, params0, [],
-                     engine.EngineConfig(tau=args.tau, seed=args.seed,
+                     engine.EngineConfig(tau=tau, seed=seed,
                                          project_dim=8192),
                      leaf_filter=llm_leaf_filter)
     cluster_models = {}
-    for k in range(args.clusters):
-        # cluster reference Ψ from a healthy token sample of the domain
-        ref = jax.tree.map(jnp.asarray,
-                           synthetic_lm_batch(cfg, 256, 8, seed=100 + k, domain=k))
+    for k in range(clusters):
+        ref = jax.tree.map(
+            jnp.asarray,
+            synthetic_lm_batch(cfg, 256, 8, seed=100 + k, domain=k))
         st, cid = engine.join(st, ref)
-        cluster_models[st.client_root(cid)] = model.init(jax.random.fold_in(key, k))
-    st = st.replace(models=cluster_models)
+        cluster_models[st.client_root(cid)] = model.init(
+            jax.random.fold_in(key, k))
+    return st.replace(models=cluster_models)
 
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode)
 
-    # --- requests: route by Ψ similarity, then batched prefill+decode
-    t0 = time.time()
-    n_tokens = 0
-    for r in range(args.requests):
-        dom = r % args.clusters
-        batch = jax.tree.map(jnp.asarray,
-                             synthetic_lm_batch(cfg, args.prompt_len, 1, seed=r, domain=dom))
-        # route on a domain-sized history sample (a real system would keep a
-        # running Ψ per client); the prompt alone is too thin at 24 tokens
-        hist = jax.tree.map(jnp.asarray,
-                            synthetic_lm_batch(cfg, 256, 8, seed=1000 + r, domain=dom))
-        inf = engine.infer(st, hist)
-        root = inf["cluster"] if inf["cluster"] is not None else inf["seed_from"]
-        params = inf["model"]
+def make_requests(cfg, n: int, prompt_len: int, gen: int, clusters: int,
+                  seed_base: int = 0):
+    """A synthetic request stream: request r comes from domain
+    ``r % clusters`` with a domain-matched Ψ-routing history (the
+    prompt alone is too thin to route on)."""
+    reqs = []
+    for r in range(n):
+        dom = r % clusters
+        prompt = np.asarray(
+            synthetic_lm_batch(cfg, prompt_len, 1, seed=seed_base + r,
+                               domain=dom)["tokens"][0], np.int32)
+        hist = jax.tree.map(
+            jnp.asarray,
+            synthetic_lm_batch(cfg, 256, 8, seed=1000 + seed_base + r,
+                               domain=dom))
+        reqs.append(serve.Request(rid=seed_base + r,
+                                  client_id=f"client-{seed_base + r}",
+                                  prompt=prompt, gen=gen, history=hist))
+    return reqs
 
-        logits, cache = prefill(params, batch)
-        # right-size the cache for generation
-        full_cache = model.make_cache(1, args.prompt_len + args.gen)
-        full_cache = jax.tree.map(
-            lambda full, got: full.at[tuple(slice(0, s) for s in got.shape)].set(got)
-            if full.shape != got.shape else got, full_cache, cache)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        toks = [int(tok[0])]
-        for i in range(args.gen - 1):
-            logits, full_cache = decode(params, tok, full_cache, jnp.int32(args.prompt_len + i))
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            toks.append(int(tok[0]))
-        n_tokens += len(toks)
-        print(f"req {r}: domain={dom} -> cluster={root} "
-              f"(cos={inf['similarity']:.3f}) tokens={toks[:8]}...")
-    dt = time.time() - t0
-    print(json.dumps({"requests": args.requests, "tokens": n_tokens,
-                      "wall_s": round(dt, 2), "tok_per_s": round(n_tokens / dt, 2)}))
+
+def main():
+    args = build_parser().parse_args()
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build(cfg)
+    st = build_server_state(cfg, model, args.clusters, args.tau, args.seed)
+    max_len = args.prompt_len + args.gen
+
+    if args.sequential:
+        loop = serve.SequentialLoop(model, st, max_len=max_len,
+                                    max_gen=args.gen)
+        warm = make_requests(cfg, 1, args.prompt_len, args.gen,
+                             args.clusters, seed_base=10_000)
+        t0 = time.time()
+        loop.serve(warm[0])                       # pays every compile
+        first_compile_s = time.time() - t0
+        reqs = make_requests(cfg, args.requests, args.prompt_len, args.gen,
+                             args.clusters)
+        t0 = time.time()
+        results = [loop.serve(r) for r in reqs]
+        wall = time.time() - t0
+        mode, stats = "sequential", {"router_hits": loop.router.hits,
+                                     "router_misses": loop.router.misses}
+    else:
+        eng = serve.ServeEngine(
+            model, st, serve.ServeConfig(slots=args.slots, max_len=max_len,
+                                         max_gen=args.gen))
+        warm = make_requests(cfg, min(args.requests, args.slots),
+                             args.prompt_len, args.gen, args.clusters,
+                             seed_base=10_000)
+        t0 = time.time()
+        eng.submit_many(warm)
+        eng.run()                                 # pays every compile
+        first_compile_s = time.time() - t0
+        eng.reset()                               # keeps compiled programs
+        reqs = make_requests(cfg, args.requests, args.prompt_len, args.gen,
+                             args.clusters)
+        t0 = time.time()
+        eng.submit_many(reqs)
+        results = list(eng.run().values())
+        wall = time.time() - t0
+        mode, stats = "continuous", eng.stats()
+
+    for res in sorted(results, key=lambda r: r.rid):
+        print(f"req {res.rid}: cluster={res.cluster} "
+              f"(cos={res.similarity:.3f}) "
+              f"tokens={[int(t) for t in res.tokens[:8]]}...")
+    n_tokens = sum(len(r.tokens) for r in results)
+    print(json.dumps({"mode": mode, "requests": len(results),
+                      "tokens": n_tokens,
+                      "first_compile_s": round(first_compile_s, 2),
+                      "wall_s": round(wall, 4),
+                      "tok_per_s": round(n_tokens / max(wall, 1e-9), 2),
+                      **stats}))
 
 
 if __name__ == "__main__":

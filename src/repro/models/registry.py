@@ -147,3 +147,17 @@ def decode_specs(model: Model, shape: InputShape):
         "cache": cache,
         "pos": jax.ShapeDtypeStruct((), jnp.int32),
     }
+
+
+def serve_cache_specs(model: Model, clusters: int, slots: int, max_len: int):
+    """Decode-state cache spec for the serving engine (``repro.serve``):
+    the per-arch ``make_cache(slots, max_len)`` pytree with a leading
+    routed-cluster-group axis — every leaf is ``(clusters,) + leaf.shape``,
+    so cluster k's slot s lives at ``leaf[k, :, s]`` (the slot axis is the
+    cache's own batch axis, uniformly axis 1 across all six families).
+    ``jax.eval_shape`` only — no allocation; ``serve.slots.alloc_slots``
+    materializes the zeros."""
+    base = jax.eval_shape(lambda: model.make_cache(slots, max_len))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((clusters,) + tuple(s.shape), s.dtype),
+        base)

@@ -1,0 +1,34 @@
+"""repro.serve — continuous-batching cluster-routed serving engine.
+
+StoCFL's §4.4 inference surface, productionized: route each client to
+its cluster's personalized model ONCE (Ψ-cosine, per-client cache —
+``router``), admit requests into a fixed ``clusters × slots`` grid of
+preallocated KV/SSM cache lanes (``slots``), and advance every active
+lane of every cluster model with ONE jitted decode step per token
+(continuous batching: slots free on finish and refill from the queues
+mid-flight — ``scheduler`` + ``engine``). ``baseline`` holds the
+debugged sequential loop the benchmarks compare against; ``docs/
+SERVING.md`` has the scheduler contract and the decode-state memory
+model.
+
+    from repro import serve
+    eng = serve.ServeEngine(model, state, serve.ServeConfig(slots=8))
+    eng.submit_many([serve.Request(rid=i, client_id=c, prompt=p, gen=16,
+                                   history=h) for ...])
+    results = eng.run()      # {rid: RequestResult}
+"""
+from repro.serve.baseline import SequentialLoop
+from repro.serve.engine import RequestResult, ServeConfig, ServeEngine
+from repro.serve.router import Route, Router
+from repro.serve.scheduler import Request, SlotScheduler
+from repro.serve.slots import (DecodeSlots, alloc_slots, harvest,
+                               make_decode_step, make_insert, make_prefill)
+
+__all__ = [
+    "ServeEngine", "ServeConfig", "RequestResult",
+    "Request", "SlotScheduler",
+    "Router", "Route",
+    "DecodeSlots", "alloc_slots", "make_decode_step", "make_insert",
+    "make_prefill", "harvest",
+    "SequentialLoop",
+]

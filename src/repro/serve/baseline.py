@@ -1,0 +1,105 @@
+"""Sequential serving baseline — the FIXED version of the legacy
+``launch/serve.py`` request loop.
+
+One request at a time, but with the serve.py bug backlog repaired so
+the continuous-batching speedup measured against it is real batching
+win, not bug tax:
+
+- **no per-request cache allocation** — ONE decode cache template is
+  allocated at construction and recycled through every request (the
+  prefill prefix is embedded by a jitted donated ``dynamic_update_slice``
+  — stale suffix from the previous request is dead: attention reads are
+  masked to the live prefix and decode writes each position before
+  attending to it, SSM/conv state is fully overwritten);
+- **no per-token host sync** — tokens accumulate in an on-device output
+  buffer inside the jitted step (the old loop's ``int(tok[0])`` forced a
+  device→host round trip per token); each request does exactly ONE
+  device→host transfer, at the end;
+- routing goes through the same cached ``Router`` as the batched engine.
+
+``benchmarks/serve_bench.py`` times this loop against ``ServeEngine`` —
+same model, same routes, same token budget — so the BENCH_serve numbers
+isolate continuous batching itself.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import RequestResult
+from repro.serve.router import Router
+from repro.serve.scheduler import Request
+from repro.serve.slots import make_prefill
+
+__all__ = ["SequentialLoop"]
+
+
+class SequentialLoop:
+    """One-request-at-a-time greedy serving over a ``ServerState``,
+    with the cache template, the output buffer, and all three jitted
+    programs (prefill, embed, step) hoisted out of the request loop.
+    ``serve(req)`` routes, prefills, decodes ``req.gen`` tokens, and
+    returns a ``RequestResult`` after a single device→host transfer."""
+
+    def __init__(self, model, state, max_len: int, max_gen: int):
+        self.model = model
+        self.state = state
+        self.max_len = max_len
+        self.max_gen = max_gen
+        self.router = Router(state)
+        self._prefill = make_prefill(model)
+        # the ONE decode cache (batch 1) + output buffer, recycled
+        # (donated) through every request
+        self._template = model.make_cache(1, max_len)
+        self._out = jnp.zeros((max_gen,), jnp.int32)
+
+        def seq_embed_impl(template, got):
+            return jax.tree.map(
+                lambda f, g: jax.lax.dynamic_update_slice(
+                    f, g.astype(f.dtype), (0,) * f.ndim),
+                template, got)
+
+        def seq_step_impl(params, tok, cache, pos, out, i):
+            logits, cache = model.decode(params, tok, cache, pos)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return nxt, cache, out.at[i].set(nxt[0])
+
+        self._embed = jax.jit(seq_embed_impl, donate_argnums=(0,))
+        self._step = jax.jit(seq_step_impl, donate_argnums=(2, 4))
+        self.n_requests = 0
+        self.n_tokens = 0
+
+    def serve(self, req: Request) -> RequestResult:
+        """Serve one request to completion (greedy, ``req.gen`` tokens
+        including the prefill's first token)."""
+        P = len(req.prompt)
+        if req.gen < 1 or req.gen > self.max_gen:
+            raise ValueError(f"gen={req.gen} outside [1, {self.max_gen}]")
+        if P + req.gen - 1 > self.max_len:
+            raise ValueError(f"prompt {P} + gen {req.gen} - 1 exceeds "
+                             f"max_len={self.max_len}")
+        rt = self.router.route(req.client_id, req.history)
+        if rt.root is None:
+            raise ValueError("no cluster to serve from")
+        params = self.state.cluster_model(rt.root)
+
+        batch = {"tokens": jnp.asarray(
+            np.asarray(req.prompt, np.int32)[None])}
+        tok, got = self._prefill(params, batch)
+        cache = self._embed(self._template, got)
+        out = self._out.at[0].set(tok[0])
+        for i in range(1, req.gen):
+            tok, cache, out = self._step(params, tok, cache,
+                                         jnp.int32(P + i - 1), out,
+                                         jnp.int32(i))
+        # recycle the live buffers for the next request
+        self._template, self._out = cache, out
+        row = np.asarray(jax.device_get(out))[:req.gen]
+        self.n_requests += 1
+        self.n_tokens += req.gen
+        return RequestResult(rid=req.rid, cluster=rt.root,
+                             similarity=rt.similarity, accepted=rt.accepted,
+                             tokens=row)

@@ -1,0 +1,191 @@
+"""Fixed-slot decode state: the serving engine's preallocated data plane.
+
+One ``DecodeSlots`` pytree holds EVERYTHING the decode loop touches — a
+(clusters × slots_per_cluster) grid of KV/SSM cache lanes allocated once
+at engine construction (``alloc_slots``, shaped by
+``models.registry.serve_cache_specs``), plus per-slot bookkeeping
+(last token, context length, active mask, emit budget) and a device
+output buffer tokens land in as they are generated. Three jitted
+transitions move requests through it:
+
+- ``make_prefill``   — grouped prefill: one forward over a cluster's
+  admission batch, returning first tokens + the prefill cache.
+- ``make_insert``    — admit: copy request ``j`` of a prefill group into
+  lane ``(k, s)`` (``dynamic_update_slice`` into the slot cache's
+  ``[0, prompt_len)`` prefix — attention caches overwrite their prefix,
+  SSM/conv states overwrite entirely) and arm the slot's counters.
+  ``j``/``k``/``s``/lengths are traced operands, so ONE compiled insert
+  serves every slot at a given group shape.
+- ``make_decode_step`` — the single decode transition: every active slot
+  across every cluster group advances one token in one XLA program.
+  Heterogeneous cluster models batch as a cluster-axis ``vmap`` over the
+  stacked params; heterogeneous per-slot positions batch as a slot-axis
+  ``vmap`` over each model's scalar-``pos`` ``decode`` (the
+  ``dynamic_update_slice`` at a traced position lowers to a batched
+  scatter). Generated tokens are written into the on-device ``out``
+  buffer — NO per-token host sync; ``harvest`` transfers a finished
+  slot's row to the host exactly once per request.
+
+Inactive lanes still execute (fixed shapes are the point) but their
+bookkeeping is masked and their cache writes land at their frozen final
+position, which a reused slot's insert+decode never reads: attention
+reads are masked to ``[0, pos]`` and every decode writes position ``pos``
+before attending to it, so a recycled lane's stale suffix is dead by
+construction.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import serve_cache_specs
+
+__all__ = ["DecodeSlots", "alloc_slots", "make_decode_step", "make_insert",
+           "make_prefill", "harvest"]
+
+
+class DecodeSlots(NamedTuple):
+    """The serving engine's device-resident decode state (a pytree).
+
+    ``caches`` leaves are ``(K, ...) = (clusters,) + make_cache(slots,
+    max_len).shape`` — cluster k's slot s is the cache's own batch lane
+    ``[k, :, s]``. The bookkeeping grids are ``(K, slots)``: ``token``
+    (last emitted token, the next decode input), ``pos`` (tokens already
+    cached — the absolute position the next decode writes), ``active``
+    (slot is mid-generation), ``remaining`` (tokens still to emit),
+    ``emitted`` (tokens emitted so far, = the next ``out`` column).
+    ``out`` is the ``(K, slots, max_gen)`` device output buffer."""
+    caches: Any
+    token: jnp.ndarray
+    pos: jnp.ndarray
+    active: jnp.ndarray
+    remaining: jnp.ndarray
+    emitted: jnp.ndarray
+    out: jnp.ndarray
+
+
+def alloc_slots(model, clusters: int, slots: int, max_len: int,
+                max_gen: int) -> DecodeSlots:
+    """Allocate the fixed-slot decode state ONCE: zeroed cache lanes for
+    ``clusters × slots`` concurrent requests of context budget
+    ``max_len`` and emit budget ``max_gen`` (shapes from
+    ``registry.serve_cache_specs``). Everything after this is
+    insert-on-admit / free-on-finish — no per-request allocation."""
+    specs = serve_cache_specs(model, clusters, slots, max_len)
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+    # distinct buffers per field — donation forbids aliased operands
+    def z():
+        return jnp.zeros((clusters, slots), jnp.int32)
+
+    return DecodeSlots(caches=caches, token=z(), pos=z(),
+                       active=jnp.zeros((clusters, slots), bool),
+                       remaining=z(), emitted=z(),
+                       out=jnp.zeros((clusters, slots, max_gen), jnp.int32))
+
+
+def make_prefill(model):
+    """Jitted grouped prefill: ``(params, batch) -> (first tokens (B,),
+    prefill cache)``. The greedy first token is taken on device so the
+    admission path never syncs; XLA's jit cache keys on the (bucketed)
+    group shape, so steady-state admissions compile nothing."""
+    def serve_prefill_impl(params, batch):
+        logits, cache = model.prefill(params, batch)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return jax.jit(serve_prefill_impl)
+
+
+def make_insert(model):
+    """Build the jitted admit transition: copy request ``j`` of a
+    prefill group into lane ``(k, s)`` and arm the slot.
+
+    ``j``, ``k``, ``s``, ``prompt_len`` and ``gen`` are traced int32
+    operands — one compiled program per prefill-group shape covers every
+    slot. The slot's caches take the prefill prefix via
+    ``dynamic_update_slice`` at the lane origin (attention leaves
+    overwrite ``[0, prompt_len)`` of the seq axis; SSM state/conv leaves
+    overwrite their full extent), ``out[k, s, 0]`` takes the prefill's
+    greedy token, and the counters start at ``pos = prompt_len``,
+    ``emitted = 1``, ``remaining = gen - 1``. The previous slots value is
+    donated — admission recycles the lane buffers in place."""
+    def serve_insert_impl(sl: DecodeSlots, gcache, gtok, j, k, s,
+                          prompt_len, gen):
+        cache_j = jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, j, axis=1,
+                                                   keepdims=False), gcache)
+        tok_j = jax.lax.dynamic_index_in_dim(gtok, j, axis=0, keepdims=False)
+
+        def put(full, got):
+            src = jnp.expand_dims(jnp.expand_dims(got, 0), 2)
+            start = (k, 0, s) + (0,) * (full.ndim - 3)
+            return jax.lax.dynamic_update_slice(full, src.astype(full.dtype),
+                                                start)
+
+        return DecodeSlots(
+            caches=jax.tree.map(put, sl.caches, cache_j),
+            token=sl.token.at[k, s].set(tok_j),
+            pos=sl.pos.at[k, s].set(prompt_len),
+            active=sl.active.at[k, s].set(gen > 1),
+            remaining=sl.remaining.at[k, s].set(gen - 1),
+            emitted=sl.emitted.at[k, s].set(1),
+            out=sl.out.at[k, s, 0].set(tok_j),
+        )
+
+    return jax.jit(serve_insert_impl, donate_argnums=(0,))
+
+
+def make_decode_step(model, donate: bool = True):
+    """Build the jitted one-token transition ``(stacked_params, slots)
+    -> slots'`` — the serving engine's whole decode data plane as ONE
+    XLA program.
+
+    Cluster heterogeneity is a leading-axis ``vmap`` over the stacked
+    cluster params (every personalized model advances its own slot
+    block); per-slot position heterogeneity is an inner ``vmap`` over
+    the model's scalar-``pos`` ``decode`` step, which turns the cache
+    update into a batched scatter and the causal mask into a per-lane
+    ``valid_len``. Active lanes append their greedy token to ``out`` and
+    advance their counters; inactive lanes are masked (their compute is
+    discarded — fixed shapes buy zero recompiles). With ``donate`` the
+    previous slots value is donated, so the steady-state loop mutates
+    the preallocated lanes in place instead of reallocating."""
+    def one_slot(params, tok, cache, p):
+        cache = jax.tree.map(lambda x: jnp.expand_dims(x, 1), cache)
+        logits, nc = model.decode(params, tok[None], cache, p)
+        return logits[0], jax.tree.map(lambda x: jnp.squeeze(x, 1), nc)
+
+    slot_lanes = jax.vmap(one_slot, in_axes=(None, 0, 1, 0), out_axes=(0, 1))
+    group_lanes = jax.vmap(slot_lanes, in_axes=(0, 0, 0, 0), out_axes=(0, 0))
+
+    def serve_step_impl(stacked_params, sl: DecodeSlots):
+        logits, caches = group_lanes(stacked_params, sl.token, sl.caches,
+                                     sl.pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        act = sl.active
+        k = jnp.arange(act.shape[0])[:, None]
+        s = jnp.arange(act.shape[1])[None, :]
+        col = jnp.where(act, sl.emitted, 0)
+        keep = sl.out[k, s, col]
+        adv = act.astype(jnp.int32)
+        return DecodeSlots(
+            caches=caches,
+            token=jnp.where(act, nxt, sl.token),
+            pos=sl.pos + adv,
+            active=act & (sl.remaining > 1),
+            remaining=sl.remaining - adv,
+            emitted=sl.emitted + adv,
+            out=sl.out.at[k, s, col].set(jnp.where(act, nxt, keep)),
+        )
+
+    return jax.jit(serve_step_impl, donate_argnums=(1,) if donate else ())
+
+
+def harvest(sl: DecodeSlots, k: int, s: int) -> np.ndarray:
+    """Pull lane ``(k, s)``'s output row to the host — the request's ONE
+    device→host transfer (the caller slices to its known emit count).
+    Everything before this point stayed on device."""
+    return np.asarray(jax.device_get(sl.out[k, s]))

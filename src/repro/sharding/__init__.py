@@ -25,6 +25,7 @@ from repro.sharding.specs import (  # noqa: F401
     param_shardings,
     place_buffer_rows,
     place_cohort,
+    place_decode_state,
     place_replicated,
     psum_segments,
     replicated,
@@ -45,6 +46,7 @@ __all__ = [
     "param_shardings",
     "place_buffer_rows",
     "place_cohort",
+    "place_decode_state",
     "place_replicated",
     "psum_segments",
     "replicated",

@@ -262,6 +262,19 @@ def place_buffer_rows(tree, mesh: Mesh):
     return place_cohort(tree, mesh)
 
 
+def place_decode_state(tree, mesh: Mesh):
+    """Pin the serving engine's fixed-slot decode state
+    (``repro.serve.DecodeSlots``) to the mesh: every leaf's LEADING axis
+    is the routed-cluster-group axis, so cluster groups — each a
+    personalized model's slot block — spread across the mesh's
+    client/data axes while the per-group decode math stays local.
+    Divisibility-safe like ``place_cohort`` (a group count that does not
+    divide the client-axis device count stays replicated); alias of
+    ``place_cohort``, named for the serving surface
+    (``serve.ServeEngine(mesh=...)``)."""
+    return place_cohort(tree, mesh)
+
+
 def constrain_cohort(tree, mesh: Optional[Mesh]):
     """Trace-time twin of ``place_cohort``: ``with_sharding_constraint``
     every stacked leaf's LEADING (client) axis onto the mesh's client

@@ -35,7 +35,8 @@ def _public_members(cls):
 
 @pytest.mark.parametrize("modname", ["repro.engine", "repro.sim",
                                      "repro.core", "repro.kernels",
-                                     "repro.analysis", "repro.sharding"])
+                                     "repro.analysis", "repro.sharding",
+                                     "repro.serve"])
 def test_public_api_docstring_coverage(modname):
     mod = __import__(modname, fromlist=["__all__"])
     assert mod.__doc__, f"{modname} needs a module docstring"

@@ -1,0 +1,263 @@
+"""Serving engine battery: continuous batching must be invisible.
+
+The contract under test — a request served through the fixed-slot
+continuous-batching engine gets EXACTLY the tokens the debugged
+sequential loop would give it (same route, same greedy decode), for
+every token arch family, through slot reuse, staggered finishes and
+eviction; routing is computed once per client and cached; and the
+decode inner loop never touches the host (``sanitize.no_transfer``).
+Run in float32 — greedy argmax ties flip under bfloat16.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine, serve
+from repro.analysis import sanitize
+from repro.configs import get_config
+from repro.data import synthetic_lm_batch
+from repro.launch.serve import build_parser, build_server_state
+from repro.models import build
+from repro.models.registry import serve_cache_specs
+
+P, G, HIST_S, HIST_B = 8, 5, 128, 4
+FAMILIES = ["qwen2_1_5b", "falcon_mamba_7b", "zamba2_1_2b"]
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch, clusters=2):
+    cfg = get_config(arch, smoke=True).with_(dtype="float32")
+    model = build(cfg)
+    key = jax.random.PRNGKey(0)
+    st = engine.init("stocfl", model.loss_fn, model.init(key), [],
+                     engine.EngineConfig(tau=0.3, seed=0, project_dim=4096))
+    cm = {}
+    for k in range(clusters):
+        ref = jax.tree.map(jnp.asarray, synthetic_lm_batch(
+            cfg, HIST_S, HIST_B, seed=100 + k, domain=k))
+        st, cid = engine.join(st, ref)
+        cm[st.client_root(cid)] = model.init(jax.random.fold_in(key, k))
+    return cfg, model, st.replace(models=cm)
+
+
+def _hist(cfg, i):
+    return jax.tree.map(jnp.asarray, synthetic_lm_batch(
+        cfg, HIST_S, HIST_B, seed=1000 + i, domain=i % 2))
+
+
+def _req(cfg, i, gen=G, plen=P):
+    prompt = np.asarray(synthetic_lm_batch(
+        cfg, plen, 1, seed=i, domain=i % 2)["tokens"][0], np.int32)
+    return serve.Request(rid=i, client_id=f"c{i}", prompt=prompt,
+                         gen=gen, history=_hist(cfg, i))
+
+
+# ===================================================== routing
+def test_route_matches_engine_infer():
+    cfg, model, st = _setup("qwen2_1_5b")
+    router = serve.Router(st)
+    for i in range(3):
+        h = _hist(cfg, i)
+        inf = engine.infer(st, h)
+        rt = router.route(f"c{i}", h)
+        want = inf["cluster"] if inf["cluster"] is not None else inf["seed_from"]
+        assert rt.root == want
+        assert rt.accepted == (inf["cluster"] is not None)
+        assert rt.similarity == pytest.approx(inf["similarity"], abs=1e-5)
+
+
+def test_infer_batch_matches_infer():
+    cfg, model, st = _setup("qwen2_1_5b")
+    hists = [_hist(cfg, i) for i in range(4)]
+    batched = engine.infer_batch(st, hists)
+    for h, b in zip(hists, batched):
+        one = engine.infer(st, h)
+        assert b["cluster"] == one["cluster"]
+        assert b["seed_from"] == one["seed_from"]
+        assert b["similarity"] == pytest.approx(one["similarity"], abs=1e-4)
+
+
+def test_router_cache_hits():
+    cfg, model, st = _setup("qwen2_1_5b")
+    router = serve.Router(st)
+    first = router.route("c0", _hist(cfg, 0))
+    assert (router.hits, router.misses) == (0, 1)
+    again = router.route("c0")                    # reconnect: no history
+    assert (router.hits, router.misses) == (1, 1)
+    assert again == first
+    with pytest.raises(ValueError, match="no cached route"):
+        router.route("never-seen")
+
+
+# ===================================================== token parity
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_batched_matches_sequential(arch):
+    """More requests than lanes → admission waves + slot reuse, and
+    every request's tokens must equal the sequential loop's."""
+    cfg, model, st = _setup(arch)
+    eng = serve.ServeEngine(model, st, serve.ServeConfig(
+        slots=2, max_len=P + G, max_gen=G))
+    reqs = [_req(cfg, i) for i in range(6)]       # 6 reqs, 4 lanes total
+    eng.submit_many(reqs)
+    res = eng.run()
+    assert sorted(res) == [r.rid for r in reqs]
+
+    loop = serve.SequentialLoop(model, st, max_len=P + G, max_gen=G)
+    for r in reqs:
+        sr = loop.serve(r)
+        er = res[r.rid]
+        assert er.cluster == sr.cluster
+        assert list(er.tokens) == list(sr.tokens), f"rid={r.rid}"
+    assert eng.stats()["harvested"] == 6
+
+
+def test_staggered_gens_and_slot_reuse():
+    """Heterogeneous gen budgets finish at different steps; freed lanes
+    are re-admitted mid-flight and the late arrivals still match the
+    sequential reference."""
+    cfg, model, st = _setup("qwen2_1_5b")
+    gens = [2, 5, 3, 4, 5, 1]
+    eng = serve.ServeEngine(model, st, serve.ServeConfig(
+        slots=1, max_len=P + G, max_gen=G))       # 2 lanes total → reuse
+    reqs = [serve.Request(rid=i, client_id=f"c{i}",
+                          prompt=_req(cfg, i).prompt, gen=g,
+                          history=_hist(cfg, i))
+            for i, g in enumerate(gens)]
+    eng.submit_many(reqs)
+    res = eng.run()
+    loop = serve.SequentialLoop(model, st, max_len=P + G, max_gen=G)
+    for r in reqs:
+        sr = loop.serve(r)
+        assert len(res[r.rid].tokens) == r.gen
+        assert list(res[r.rid].tokens) == list(sr.tokens), f"rid={r.rid}"
+
+
+# ===================================================== eviction
+def test_eviction_partial_output_and_lane_reuse():
+    cfg, model, st = _setup("qwen2_1_5b")
+    eng = serve.ServeEngine(model, st, serve.ServeConfig(
+        slots=1, max_len=P + G, max_gen=G))
+    reqs = [_req(cfg, i) for i in range(3)]
+    eng.submit_many(reqs)
+    eng._admit_all()                               # 2 lanes busy, 1 queued
+    eng._decode_burst(2)
+    eng.sched.tick(2)
+    ev = eng.evict(reqs[0].rid)
+    assert ev.evicted and len(ev.tokens) == 3      # prefill tok + 2 steps
+    loop = serve.SequentialLoop(model, st, max_len=P + G, max_gen=G)
+    ref = loop.serve(reqs[0])
+    assert list(ev.tokens) == list(ref.tokens[:3])  # partial = true prefix
+    rest = eng.run()                               # freed lane serves rid 2
+    assert list(rest[reqs[2].rid].tokens) == list(
+        loop.serve(reqs[2]).tokens)
+
+    # evicting a queued request drops it with zero tokens
+    eng.reset()
+    eng.submit_many([_req(cfg, 10), _req(cfg, 11), _req(cfg, 12)])
+    gone = eng.evict(12)
+    assert gone.evicted and len(gone.tokens) == 0
+    assert sorted(eng.run()) == [10, 11]
+    assert eng.evict("unknown") is None
+
+
+# ===================================================== data plane hygiene
+def test_decode_burst_is_transfer_free():
+    """The serve inner loop under ``transfer_guard('disallow')`` — no
+    implicit host syncs anywhere in the decode data plane."""
+    cfg, model, st = _setup("qwen2_1_5b")
+    eng = serve.ServeEngine(model, st, serve.ServeConfig(
+        slots=2, max_len=P + G, max_gen=G))
+    eng.submit_many([_req(cfg, i) for i in range(4)])
+    eng._admit_all()
+    eng._decode_burst(1)                           # compile outside guard
+    with sanitize.no_transfer():
+        eng._decode_burst(3)
+    assert eng.stats()["decode_steps"] == 4
+
+
+def test_reset_keeps_compiled_programs():
+    cfg, model, st = _setup("qwen2_1_5b")
+    eng = serve.ServeEngine(model, st, serve.ServeConfig(
+        slots=2, max_len=P + G, max_gen=G))
+    warm = [_req(cfg, i) for i in range(4)]
+    eng.submit_many(warm)
+    eng.run()                                      # pays every compile
+    eng.reset()
+    again = [serve.Request(rid=100 + r.rid, client_id=r.client_id,
+                           prompt=r.prompt, gen=r.gen) for r in warm]
+    with sanitize.compile_budget(0):               # identical shapes: none
+        eng.submit_many(again)                     # routes from cache
+        res = eng.run()
+    assert sorted(res) == [100, 101, 102, 103]
+
+
+def test_gen_one_finishes_at_admission():
+    cfg, model, st = _setup("qwen2_1_5b")
+    eng = serve.ServeEngine(model, st, serve.ServeConfig(
+        slots=2, max_len=P + G, max_gen=G))
+    eng.submit_many([_req(cfg, 0, gen=1), _req(cfg, 1, gen=1)])
+    res = eng.run()
+    assert all(len(r.tokens) == 1 for r in res.values())
+    assert eng.stats()["decode_steps"] == 0
+
+
+# ===================================================== guards & specs
+def test_submit_validation():
+    cfg, model, st = _setup("qwen2_1_5b")
+    eng = serve.ServeEngine(model, st, serve.ServeConfig(
+        slots=1, max_len=P + G, max_gen=G))
+    with pytest.raises(ValueError, match="gen"):
+        eng.submit(_req(cfg, 0, gen=G + 1))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(_req(cfg, 0, plen=P + G))
+
+
+def test_sliding_window_guard():
+    cfg, model, st = _setup("zamba2_1_2b")
+    with pytest.raises(ValueError, match="sliding"):
+        serve.ServeEngine(model, st, serve.ServeConfig(
+            slots=1, max_len=cfg.sliding_window + 1, max_gen=G))
+
+
+def test_non_token_arch_rejected():
+    cfg = get_config("whisper_medium", smoke=True)
+    model = build(cfg)
+    _, _, st = _setup("qwen2_1_5b")                # any state will do
+    with pytest.raises(ValueError, match="token-LM"):
+        serve.ServeEngine(model, st)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_serve_cache_specs_shapes(arch):
+    """Every leaf gains a leading cluster axis over make_cache(slots,
+    max_len); the slot axis stays the cache's own batch axis (axis 1)."""
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    K, Bs, S = 3, 4, 16
+    specs = serve_cache_specs(model, K, Bs, S)
+    base = jax.eval_shape(lambda: model.make_cache(Bs, S))
+    for spec, b in zip(jax.tree.leaves(specs), jax.tree.leaves(base)):
+        assert spec.shape == (K,) + tuple(b.shape)
+        assert b.shape[1] == Bs
+
+
+# ===================================================== driver CLI
+def test_smoke_flag_is_a_real_pair():
+    """--smoke/--full are mutually exclusive with smoke as default —
+    the old parser made --smoke a no-op (store_true over default=True
+    with no way to detect it was passed)."""
+    ap = build_parser()
+    assert ap.parse_args([]).smoke is True
+    assert ap.parse_args(["--smoke"]).smoke is True
+    assert ap.parse_args(["--full"]).smoke is False
+    with pytest.raises(SystemExit):
+        ap.parse_args(["--smoke", "--full"])
+
+
+def test_build_server_state_round_trips():
+    cfg, model, _ = _setup("qwen2_1_5b")
+    st = build_server_state(cfg, model, clusters=2, tau=0.3, seed=0)
+    assert len(st.models) == 2
